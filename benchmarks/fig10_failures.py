@@ -1,0 +1,25 @@
+"""Fig 10: utilization of working boards vs number of random board failures."""
+
+import statistics
+
+from repro.core import allocation as A
+
+
+def run(trials: int = 20) -> list[str]:
+    rows = []
+    for mesh_name, (x, y) in [("Hx2Mesh-16x16", (16, 16)), ("Hx4Mesh-8x8", (8, 8))]:
+        for nf in (0, 8, 16, 24, 40):
+            if nf >= x * y // 2:
+                continue
+            us = [
+                A.utilization_experiment(
+                    x, y, n_failures=nf, transpose=True, sort_jobs=True,
+                    aspect=True, seed=s,
+                )
+                for s in range(trials)
+            ]
+            rows.append(
+                f"fig10,{mesh_name},failures={nf},median={statistics.median(us):.3f},"
+                f"mean={statistics.mean(us):.3f}"
+            )
+    return rows

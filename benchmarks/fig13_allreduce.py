@@ -1,0 +1,57 @@
+"""Fig 13/17: allreduce algorithms — α-β model curves + measured HLO traffic
+of our shard_map implementations on a 16-device mesh."""
+
+import os
+import subprocess
+import sys
+
+from repro.core import commodel as C
+
+
+def run() -> list[str]:
+    rows = []
+    # model curves (the paper's algorithm comparison)
+    for p in (64, 1024, 16384):
+        for size in (1e4, 1e6, 1e8, 1e9):
+            name, t = C.best_algorithm(p, size)
+            per = {n: f(p, size) for n, f in C.ALGORITHMS.items()}
+            bw = {n: size / t_ / C.INJECTION_BW for n, t_ in per.items()}
+            rows.append(
+                f"fig13_model,p={p},S={size:.0e},best={name}," +
+                ",".join(f"{n}={bw[n]:.3f}" for n in C.ALGORITHMS)
+            )
+    # measured wire bytes of the JAX implementations (subprocess: fake devices)
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax, jax.numpy as jnp, re
+from jax.sharding import PartitionSpec as P
+import sys
+sys.path.insert(0, "src")
+from repro.core import collectives as coll
+mesh = jax.make_mesh((4, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+x = jax.ShapeDtypeStruct((1 << 20,), jnp.float32)  # 4 MiB
+for algo in ("psum", "ring", "bidir", "torus", "hamiltonian"):
+    lo = jax.jit(
+        jax.shard_map(
+            lambda v, a=algo: coll.allreduce(v, a, ("data", "model"), (4, 4)),
+            mesh=mesh, check_vma=False, in_specs=P(), out_specs=P(),
+        )
+    ).lower(x)
+    txt = lo.compile().as_text()
+    n_perm = txt.count("collective-permute")
+    n_ar = len(re.findall(r"all-reduce(?!-)", txt))
+    print(f"MEASURE,{algo},permutes={n_perm},allreduces={n_ar}")
+"""
+    env = dict(os.environ)
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    for line in proc.stdout.splitlines():
+        if line.startswith("MEASURE"):
+            rows.append("fig13_hlo," + line[len("MEASURE,"):])
+    if proc.returncode != 0:
+        rows.append(f"fig13_hlo,ERROR,{proc.stderr[-200:]}")
+    return rows

@@ -1,0 +1,21 @@
+"""§V-B / Fig 15: DNN workload iteration times + relative cost savings."""
+
+from repro.core import commodel as C
+
+
+def run() -> list[str]:
+    rows = []
+    for wname, fn in C.WORKLOADS.items():
+        for tname, topo in C.TOPOLOGIES.items():
+            r = fn(topo)
+            paper = C.PAPER_ITERATION_MS.get((wname, tname))
+            ptxt = f",paper={paper}" if paper else ""
+            rows.append(
+                f"fig15_iter,{wname},{tname},iter_ms={r.iteration_ms:.2f},"
+                f"comm_ms={r.comm_exposed_ms:.3f}{ptxt}"
+            )
+    for wname in C.WORKLOADS:
+        for tname in ("Hx2Mesh", "Hx4Mesh", "2D torus"):
+            s = C.cost_savings(wname, tname)
+            rows.append(f"fig15_savings,{wname},{tname},vs_nonblocking_ft={s:.2f}x")
+    return rows

@@ -1,0 +1,25 @@
+"""Fig 8: system utilization of the greedy allocator + heuristics."""
+
+import statistics
+
+from repro.core import allocation as A
+
+SETTINGS = [
+    ("baseline", dict(transpose=False, sort_jobs=False)),
+    ("+transpose", dict(transpose=True, sort_jobs=False)),
+    ("+sorted", dict(transpose=True, sort_jobs=True)),
+    ("+aspect", dict(transpose=True, sort_jobs=True, aspect=True)),
+    ("+locality", dict(transpose=True, sort_jobs=True, aspect=True, locality=True)),
+]
+
+
+def run(trials: int = 25) -> list[str]:
+    rows = []
+    for mesh_name, (x, y) in [("Hx2Mesh-16x16", (16, 16)), ("Hx4Mesh-8x8", (8, 8))]:
+        for label, kw in SETTINGS:
+            us = [A.utilization_experiment(x, y, seed=s, **kw) for s in range(trials)]
+            rows.append(
+                f"fig8,{mesh_name},{label},mean={statistics.mean(us):.3f},"
+                f"median={statistics.median(us):.3f},p1={min(us):.3f}"
+            )
+    return rows

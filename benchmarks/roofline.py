@@ -1,0 +1,85 @@
+"""Roofline analysis from the dry-run JSON (assignment §g).
+
+Hardware constants (TPU v5e-class target):
+  peak_flops = 197 TFLOP/s bf16 / chip
+  hbm_bw     = 819 GB/s / chip
+  link_bw    = 50 GB/s / ICI link
+
+Per (arch × shape × mesh) cell:
+  compute term    = HLO_FLOPs / (chips × peak)
+  memory term     = HLO_bytes / (chips × hbm)
+  collective term = collective_wire_bytes_per_device / link_bw
+  MODEL_FLOPS     = 6·N·D (dense) or 6·N_active·D per train step
+                    (2·N·D for inference steps)
+  usefulness      = MODEL_FLOPS / HLO_FLOPs
+"""
+
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyse(rec: dict) -> dict:
+    chips = rec["chips"]
+    # prefer the scan-unrolled extrapolated costs (XLA counts a while body
+    # once; dryrun calibrates by lowering 1- and 2-unit depths unrolled).
+    # All cost_analysis numbers are per-device (the partitioned module).
+    flops = rec.get("flops_extrap", rec["flops"])
+    nbytes = rec.get("bytes_accessed_extrap", rec["bytes_accessed"])
+    wire = rec.get("collective_wire_bytes_extrap",
+                   rec.get("collective_wire_bytes", 0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = nbytes / HBM_BW
+    t_coll = wire / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    useful = mf / flops if flops else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful work per chip / peak, at the modeled step time
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_fraction": useful,
+        "roofline_fraction": frac,
+    }
+
+
+def run(path: str = "results/dryrun.json") -> list[str]:
+    if not os.path.exists(path):
+        return [f"roofline,SKIP,no {path} (run repro.launch.dryrun first)"]
+    rows = []
+    for rec in json.load(open(path)):
+        if not rec.get("ok"):
+            rows.append(f"roofline,{rec['arch']},{rec['shape']},{rec['mesh']},FAILED")
+            continue
+        a = analyse(rec)
+        rows.append(
+            f"roofline,{rec['arch']},{rec['shape']},{rec['mesh']},sync={rec.get('sync','auto')},"
+            f"compute_s={a['t_compute']:.4f},memory_s={a['t_memory']:.4f},"
+            f"collective_s={a['t_collective']:.4f},dominant={a['dominant']},"
+            f"useful={a['useful_fraction']:.2f},roofline={a['roofline_fraction']:.3f},"
+            f"peakGB={rec['peak_bytes_per_device'] / 1e9:.1f}"
+        )
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,...`` CSV rows.  ``--full`` runs the paper-size (1k-endpoint)
+flow simulations (~5 min, cached afterwards).
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-size flowsim validation (slow, cached)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig8_utilization, fig10_failures, fig13_allreduce,
+                            fig15_workloads, roofline, table2_bandwidth,
+                            table2_cost)
+
+    suites = {
+        "table2_cost": lambda: table2_cost.run(),
+        "table2_bandwidth": lambda: table2_bandwidth.run(full=args.full),
+        "fig8_utilization": lambda: fig8_utilization.run(),
+        "fig10_failures": lambda: fig10_failures.run(),
+        "fig13_allreduce": lambda: fig13_allreduce.run(),
+        "fig15_workloads": lambda: fig15_workloads.run(),
+        "roofline": lambda: roofline.run(),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            continue
+        for row in rows:
+            print(row, flush=True)
+        print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s",
+              file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Table II (bandwidth columns) via the flow-level simulator.
+
+Full-size (1,024-endpoint) alltoall sims take ~1 min each; pass
+``--full`` to benchmarks.run for the paper-size validation (results cached in
+results/flowsim_cache.json); the default uses 256-endpoint versions that
+preserve the structural ratios.
+"""
+
+import json
+import os
+
+from repro.core import flowsim as F
+from repro.core.hamiltonian import dual_cycles
+
+CACHE = "results/flowsim_cache.json"
+
+# paper Table II small-cluster values for reference
+PAPER = {
+    "Hx2Mesh": {"alltoall": 0.254, "allreduce": 0.983},
+    "Hx4Mesh": {"alltoall": 0.113, "allreduce": 0.984},
+    "nonbl. FT": {"alltoall": 0.999, "allreduce": 0.989},
+    "50% tap. FT": {"alltoall": 0.512, "allreduce": 0.989},
+    "2D torus": {"alltoall": 0.020, "allreduce": 0.981},
+}
+
+
+def _gid(r, c, a, b, x, y):
+    by, i = divmod(r, b)
+    bx, j = divmod(c, a)
+    return ((by * x + bx) * b + i) * a + j
+
+
+def _cases(full: bool):
+    if full:
+        return {
+            "Hx2Mesh": (F.build_hxmesh(2, 2, 16, 16), (2, 2, 16, 16), 4),
+            "Hx4Mesh": (F.build_hxmesh(4, 4, 8, 8), (4, 4, 8, 8), 4),
+            "nonbl. FT": (F.build_fat_tree(1024, 0.0), None, 1),
+            "50% tap. FT": (F.build_fat_tree(1050, 0.5), None, 1),
+            "2D torus": (F.build_torus(32, 32), "torus32", 4),
+        }
+    return {
+        "Hx2Mesh": (F.build_hxmesh(2, 2, 8, 8), (2, 2, 8, 8), 4),
+        "Hx4Mesh": (F.build_hxmesh(4, 4, 4, 4), (4, 4, 4, 4), 4),
+        "nonbl. FT": (F.build_fat_tree(256, 0.0), None, 1),
+        "50% tap. FT": (F.build_fat_tree(256, 0.5), None, 1),
+        "2D torus": (F.build_torus(16, 16), "torus16", 4),
+    }
+
+
+def run(full: bool = False) -> list[str]:
+    cache = {}
+    if os.path.exists(CACHE):
+        cache = json.load(open(CACHE))
+    key_sfx = "full" if full else "reduced"
+    rows = []
+    for name, (net, geom, links) in _cases(full).items():
+        key = f"{name}|{key_sfx}"
+        if key in cache:
+            a2a, ared = cache[key]
+        else:
+            a2a = F.alltoall_fraction(net, links)
+            n = net.n_endpoints
+            if geom is None:
+                ring = F.ring_traffic(list(range(n)), 0.5)
+            elif isinstance(geom, str):
+                side = int(geom.removeprefix("torus"))
+                red, green = dual_cycles(side, side)
+                ring = F.ring_traffic([r * side + c for r, c in red], 0.25) + \
+                       F.ring_traffic([r * side + c for r, c in green], 0.25)
+            else:
+                a, b, x, y = geom
+                red, green = dual_cycles(b * y, a * x)
+                ring = F.ring_traffic([_gid(r, c, a, b, x, y) for r, c in red], 0.25) + \
+                       F.ring_traffic([_gid(r, c, a, b, x, y) for r, c in green], 0.25)
+            ared = F.achievable_fraction(net, ring, links)
+            cache[key] = (a2a, ared)
+            os.makedirs(os.path.dirname(CACHE), exist_ok=True)
+            json.dump(cache, open(CACHE, "w"))
+        paper = PAPER.get(name, {})
+        rows.append(
+            f"table2_bw,{key_sfx},{name},alltoall={a2a:.3f}"
+            f"(paper {paper.get('alltoall', '-')}),allreduce={ared:.3f}"
+            f"(paper {paper.get('allreduce', '-')})"
+        )
+    return rows

@@ -1,0 +1,19 @@
+"""Table II (cost & structure columns): all 8 topologies, both clusters."""
+
+from repro.core import topology as T
+
+
+def run() -> list[str]:
+    rows = []
+    for label, build, paper in [
+        ("small", T.small_cluster(), T.PAPER_COSTS_SMALL),
+        ("large", T.large_cluster(), T.PAPER_COSTS_LARGE),
+    ]:
+        for name, tc in build.items():
+            err = (tc.cost_musd - paper[name]) / paper[name]
+            rows.append(
+                f"table2_cost,{label},{name},{tc.cost_musd:.2f},"
+                f"paper={paper[name]},err={err:+.1%},switches={tc.num_switches},"
+                f"dac={tc.num_dac},aoc={tc.num_aoc},diam={tc.diameter}"
+            )
+    return rows

@@ -1,0 +1,17 @@
+"""The paper's fault-tolerance loop: train -> board failure -> allocator remap
+-> checkpoint restore -> continue (paper §III-E / §IV-A).
+
+  PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+
+import sys
+import tempfile
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    with tempfile.TemporaryDirectory() as d:
+        sys.argv = [sys.argv[0], "--arch", "llama3.2-3b-smoke", "--steps", "40",
+                    "--checkpoint-dir", d, "--checkpoint-every", "10",
+                    "--simulate-failure", "25"]
+        train.main()

@@ -1,0 +1,54 @@
+"""Quickstart: the paper's pieces in 60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+# 1. HammingMesh topology analytics (paper §III, Table II) ------------------
+from repro.core.topology import HxMesh, FatTree
+
+hx = HxMesh(a=2, b=2, x=16, y=16)          # 1,024-accelerator Hx2Mesh
+ft = FatTree(1024, taper=0.0)
+print(f"Hx2Mesh: {hx.num_accelerators} accels, cost ${hx.structure().cost_musd:.1f}M, "
+      f"bisection {hx.bisection_fraction:.2f}, diameter {hx.diameter}")
+print(f"nonblocking fat tree costs ${ft.structure().cost_musd:.1f}M "
+      f"({ft.structure().cost / hx.structure().cost:.1f}x more)")
+
+# 2. Job allocation with failures (paper §IV) --------------------------------
+from repro.core.allocation import HxMeshAllocator, Job
+
+alloc = HxMeshAllocator(16, 16)
+alloc.fail_board(3, 5)
+pl = alloc.allocate(Job(0, 4, 4), transpose=True)
+print(f"4x4 job -> virtual sub-HxMesh rows={pl.rows[:4]} cols={pl.cols[:4]}")
+
+# 3. The paper's collective algorithms as shard_map programs -----------------
+from repro.core.commodel import best_algorithm
+
+for size in (1e5, 1e9):
+    name, t = best_algorithm(p=64, size=size)
+    print(f"allreduce of {size:.0e} B on 64 devices -> {name} ({t*1e6:.0f} us)")
+
+# 4. Train a tiny model through the full stack -------------------------------
+from repro.configs import get_config
+from repro.data.pipeline import make_batch
+from repro.parallel.sharding import Policy
+from repro.train import optimizer as opt, steps
+
+cfg = get_config("llama3.2-3b-smoke")
+from repro.models import get_model
+
+model = get_model(cfg)
+params = model.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=20)
+step = jax.jit(steps.make_train_step(cfg, ocfg, steps.TrainOptions(remat=False),
+                                     Policy()))
+ostate = opt.init(params)
+for s in range(20):
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, 32, 4, step=s).items()}
+    params, ostate, m = step(params, ostate, batch)
+    if s % 5 == 4:
+        print(f"step {s+1:2d}  loss {float(m['loss']):.3f}")
+print("quickstart OK")

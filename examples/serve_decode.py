@@ -1,0 +1,13 @@
+"""Batched-decoding example over the SSM arch (constant-memory state).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "mamba2-130m-smoke",
+                "--batch", "4", "--prompt-len", "16", "--decode", "32"]
+    serve.main()

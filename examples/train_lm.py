@@ -1,0 +1,18 @@
+"""End-to-end LM training example (~100M-class smoke model, few hundred steps).
+
+  PYTHONPATH=src python examples/train_lm.py            # quick (50 steps)
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "minicpm-2b-smoke"] + argv
+    if not any(a.startswith("--steps") for a in argv):
+        argv += ["--steps", "50"]
+    sys.argv = [sys.argv[0]] + argv
+    train.main()

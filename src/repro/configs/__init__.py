@@ -1,0 +1,88 @@
+"""Config registry: ``--arch <id>`` lookup + input_specs for the dry-run.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (no device allocation) — the dry-run lowers against these.
+Modality frontends are STUBS per the assignment: audio provides precomputed
+frame embeddings, VLM provides token ids + M-RoPE position ids.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+
+_MODULES = {
+    "whisper-tiny": "whisper_tiny",
+    "mamba2-130m": "mamba2_130m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "minicpm-2b": "minicpm_2b",
+    "internlm2-20b": "internlm2_20b",
+    "llama3.2-3b": "llama3_2_3b",
+    "granite-8b": "granite_8b",
+    "dbrx-132b": "dbrx_132b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b",
+    "gpt3-paper": "gpt3_paper",
+}
+
+ASSIGNED_ARCHS = [a for a in _MODULES if a != "gpt3-paper"]
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name.endswith("-smoke"):
+        name, smoke = name[: -len("-smoke")], True
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ASSIGNED_ARCHS)
+
+
+def valid_cells(arch: str) -> list[str]:
+    """Shape names that apply to this arch (long_500k only sub-quadratic)."""
+    cfg = get_config(arch)
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if not cfg.quadratic_attention:
+        cells.append("long_500k")
+    return cells
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig | str) -> dict:
+    """ShapeDtypeStruct stand-ins for a train/prefill step's batch."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.rope_type == "mrope":
+        specs["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    if cfg.enc_layers:
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    from repro.models import get_model
+
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda k: model.init_params(cfg, k, dtype=dtype), jax.random.PRNGKey(0)
+    )
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    from repro.models import get_model
+
+    model = get_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(cfg, batch, max_len, dtype=dtype))

@@ -1,0 +1,251 @@
+"""Job allocation on HammingMesh (paper §III-E, §IV-A/B, Figs 5, 8, 10).
+
+An ``x × y`` HxMesh allocates *boards*.  A job requesting ``u × v`` boards can
+be placed on any set of ``u`` rows that share ``v`` common free column
+indexes — a *virtual sub-HxMesh* (rows need not be consecutive, columns need
+not be consecutive, but all selected rows must use the same column set).
+
+This module implements the paper's greedy allocator (<50 lines), the four
+optimization heuristics (transpose, aspect ratio, sorting, locality), the
+board-failure model and the utilization experiments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from collections.abc import Iterable
+
+
+@dataclasses.dataclass
+class Job:
+    jid: int
+    u: int  # rows of boards
+    v: int  # columns of boards
+
+    @property
+    def size(self) -> int:
+        return self.u * self.v
+
+
+@dataclasses.dataclass
+class Placement:
+    jid: int
+    rows: list[int]
+    cols: list[int]
+
+    @property
+    def boards(self) -> list[tuple[int, int]]:
+        return [(r, c) for r in self.rows for c in self.cols]
+
+
+class HxMeshAllocator:
+    """Tracks free/failed boards of an x × y HxMesh and places jobs."""
+
+    def __init__(self, x: int, y: int):
+        self.x = x  # columns
+        self.y = y  # rows
+        self.free: list[set[int]] = [set(range(x)) for _ in range(y)]
+        self.failed: set[tuple[int, int]] = set()
+        self.placements: dict[int, Placement] = {}
+
+    # -- capacity ------------------------------------------------------------
+
+    @property
+    def num_working(self) -> int:
+        return self.x * self.y - len(self.failed)
+
+    @property
+    def num_free(self) -> int:
+        return sum(len(s) for s in self.free)
+
+    def fail_board(self, row: int, col: int) -> int | None:
+        """Mark a board failed. Returns the jid of an evicted job, if any."""
+        self.failed.add((row, col))
+        evicted = None
+        for jid, pl in list(self.placements.items()):
+            if row in pl.rows and col in pl.cols:
+                evicted = jid
+                self.release(jid)
+                break
+        self.free[row].discard(col)
+        return evicted
+
+    def release(self, jid: int) -> None:
+        pl = self.placements.pop(jid)
+        for r, c in pl.boards:
+            if (r, c) not in self.failed:
+                self.free[r].add(c)
+
+    # -- the paper's greedy allocation (§IV-A) --------------------------------
+
+    def _find_block(self, u: int, v: int, locality: bool = False) -> Placement | None:
+        """Greedy: pick rows whose free-column intersection stays >= v."""
+        if u > self.y:
+            return None
+        order = range(self.y)
+        for first in order:
+            if len(self.free[first]) < v:
+                continue
+            rows = [first]
+            inter = set(self.free[first])
+            for nxt in range(first + 1, self.y):
+                if len(rows) == u:
+                    break
+                cand = inter & self.free[nxt]
+                if len(cand) >= v:
+                    rows.append(nxt)
+                    inter = cand
+            if len(rows) == u:
+                cols = sorted(inter)
+                if locality:
+                    # §IV-A Locality: choose the v columns with minimal spread
+                    # so inter-board traffic stays low in the per-row trees.
+                    best = min(
+                        range(len(cols) - v + 1),
+                        key=lambda i: cols[i + v - 1] - cols[i],
+                    )
+                    cols = cols[best : best + v]
+                else:
+                    cols = cols[:v]
+                return Placement(jid=-1, rows=rows, cols=cols)
+        return None
+
+    def allocate(
+        self,
+        job: Job,
+        transpose: bool = False,
+        aspect: bool = False,
+        locality: bool = False,
+        max_aspect: int = 8,
+    ) -> Placement | None:
+        shapes: list[tuple[int, int]] = [(job.u, job.v)]
+        if transpose and job.v != job.u:
+            shapes.append((job.v, job.u))
+        if aspect:
+            size = job.size
+            for u in _divisors(size):
+                v = size // u
+                if max(u, v) / max(1, min(u, v)) <= max_aspect and (u, v) not in shapes:
+                    shapes.append((u, v))
+            # prefer squarest first, as the paper does by default
+            shapes.sort(key=lambda s: (max(s) / min(s), s))
+        for u, v in shapes:
+            pl = self._find_block(u, v, locality=locality)
+            if pl is not None:
+                pl.jid = job.jid
+                for r in pl.rows:
+                    self.free[r] -= set(pl.cols)
+                self.placements[job.jid] = pl
+                return pl
+        return None
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+# ---------------------------------------------------------------------------
+# Virtual sub-HxMesh validity (paper §III-E)
+# ---------------------------------------------------------------------------
+
+
+def is_virtual_subhxmesh(boards: Iterable[tuple[int, int]]) -> bool:
+    """True iff all boards in the same row share the same column sequence."""
+    by_row: dict[int, set[int]] = {}
+    for r, c in boards:
+        by_row.setdefault(r, set()).add(c)
+    cols = None
+    for s in by_row.values():
+        if cols is None:
+            cols = s
+        elif s != cols:
+            return False
+    return cols is not None
+
+
+# ---------------------------------------------------------------------------
+# Workload model (paper §IV-B, Alibaba MLaaS trace distribution)
+# ---------------------------------------------------------------------------
+
+# Approximation of the Alibaba MLaaS job-size distribution (Fig 7): the trace
+# itself is not redistributable; the paper reports that jobs are dominated by
+# small allocations with a long tail to 128+ boards.  Sizes are in *boards*.
+JOB_SIZE_DISTRIBUTION: list[tuple[int, float]] = [
+    (1, 0.52),
+    (2, 0.16),
+    (4, 0.12),
+    (8, 0.08),
+    (16, 0.055),
+    (32, 0.035),
+    (64, 0.02),
+    (128, 0.01),
+]
+
+
+def sample_job_trace(
+    target_boards: int, rng: random.Random, carry: list[int] | None = None
+) -> list[Job]:
+    """Draw jobs until they exactly fill ``target_boards`` (paper §IV-B)."""
+    sizes = [s for s, _ in JOB_SIZE_DISTRIBUTION]
+    weights = [w for _, w in JOB_SIZE_DISTRIBUTION]
+    jobs: list[Job] = []
+    total = 0
+    pending = list(carry or [])
+    jid = 0
+    while total < target_boards:
+        size = pending.pop(0) if pending else rng.choices(sizes, weights)[0]
+        if total + size > target_boards:
+            if carry is not None:
+                carry.append(size)
+            if size == 1:
+                break
+            continue
+        u, v = _squarest(size)
+        jobs.append(Job(jid=jid, u=u, v=v))
+        jid += 1
+        total += size
+    return jobs
+
+
+def _squarest(size: int) -> tuple[int, int]:
+    best = (1, size)
+    for d in _divisors(size):
+        u, v = d, size // d
+        if max(u, v) / min(u, v) < max(best) / min(best):
+            best = (u, v)
+    return best
+
+
+def utilization_experiment(
+    x: int,
+    y: int,
+    n_failures: int = 0,
+    transpose: bool = True,
+    aspect: bool = False,
+    sort_jobs: bool = True,
+    locality: bool = False,
+    seed: int = 0,
+) -> float:
+    """One allocation trial; returns fraction of working boards allocated."""
+    rng = random.Random(seed)
+    alloc = HxMeshAllocator(x, y)
+    coords = [(r, c) for r in range(y) for c in range(x)]
+    for r, c in rng.sample(coords, n_failures):
+        alloc.fail_board(r, c)
+    jobs = sample_job_trace(alloc.num_working, rng)
+    if sort_jobs:
+        jobs = sorted(jobs, key=lambda j: -j.size)
+    placed = 0
+    for job in jobs:
+        pl = alloc.allocate(job, transpose=transpose, aspect=aspect, locality=locality)
+        if pl is not None:
+            placed += job.size
+    return placed / max(1, alloc.num_working)
+
+
+def remap_after_failure(
+    alloc: HxMeshAllocator, job: Job, **heuristics
+) -> Placement | None:
+    """Paper Fig 5: find a fresh virtual sub-HxMesh for an evicted job."""
+    return alloc.allocate(job, **heuristics)

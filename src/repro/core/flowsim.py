@@ -1,0 +1,291 @@
+"""Flow-level bandwidth simulator (replaces the paper's SST packet sims).
+
+The paper evaluates topologies with packet-level SST simulations (§V-A).  On
+CPU we instead bound achievable bandwidth with a *flow-level* model: build the
+link graph, route traffic over shortest paths with ideal ECMP (path-count
+proportional splitting — the fluid limit of per-packet adaptive routing), and
+report ``1 / max_link_load`` as the achievable fraction of injection
+bandwidth.  This reproduces the steady-state large-message results of
+Table II / Figs 11-13 to first order; packet-level effects (adaptive-routing
+overhead, buffer occupancy) are documented as out of scope in DESIGN.md.
+
+Graphs model ONE plane (as the paper simulates): every accelerator has 4
+links (E/W/N/S) in an HxMesh plane, or 1 uplink in a fat-tree plane.  All
+link bandwidths are normalized to 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Network:
+    """Undirected multigraph with unit-bandwidth links."""
+
+    n_endpoints: int  # endpoints are node ids [0, n_endpoints)
+    adj: dict[int, list[int]]  # node -> neighbor list (parallel links allowed)
+
+    @property
+    def n_nodes(self) -> int:
+        return max(self.adj) + 1
+
+    def edge_array(self) -> np.ndarray:
+        edges = []
+        for u, nbrs in self.adj.items():
+            for v in nbrs:
+                edges.append((u, v))
+        return np.array(edges, dtype=np.int64)
+
+
+def _bfs_dist_paths(net: Network, src: int) -> tuple[np.ndarray, np.ndarray]:
+    """BFS distances and shortest-path counts from ``src`` (parallel links
+    count as multiple paths)."""
+    n = net.n_nodes
+    dist = np.full(n, -1, dtype=np.int64)
+    paths = np.zeros(n, dtype=np.float64)
+    dist[src] = 0
+    paths[src] = 1.0
+    frontier = [src]
+    d = 0
+    while frontier:
+        nxt: dict[int, float] = defaultdict(float)
+        for u in frontier:
+            pu = paths[u]
+            for v in net.adj[u]:
+                if dist[v] == -1 or dist[v] == d + 1:
+                    nxt[v] += pu
+        frontier = []
+        for v, c in nxt.items():
+            if dist[v] == -1:
+                dist[v] = d + 1
+                frontier.append(v)
+            paths[v] += c if dist[v] == d + 1 else 0.0
+        d += 1
+    return dist, paths
+
+
+def all_pairs(net: Network, sources: list[int] | None = None):
+    srcs = sources if sources is not None else list(range(net.n_endpoints))
+    D = np.zeros((len(srcs), net.n_nodes), dtype=np.int64)
+    Np = np.zeros((len(srcs), net.n_nodes), dtype=np.float64)
+    for i, s in enumerate(srcs):
+        D[i], Np[i] = _bfs_dist_paths(net, s)
+    return D, Np
+
+
+def link_loads(
+    net: Network,
+    traffic: list[tuple[int, int, float]],
+    D: np.ndarray,
+    Np: np.ndarray,
+    src_index: dict[int, int],
+) -> dict[tuple[int, int], float]:
+    """Edge loads under path-count-proportional ECMP splitting.
+
+    share(s→t over edge (u,v)) = N(s,u)·N(v,t)/N(s,t) if the edge lies on a
+    shortest path.  Requires D/Np rows for every src and dst in ``traffic``
+    (undirected graph → N(v,t)=N(t,v), D(v,t)=D(t,v)).
+    """
+    loads: dict[tuple[int, int], float] = defaultdict(float)
+    for s, t, vol in traffic:
+        si, ti = src_index[s], src_index[t]
+        dst = D[si, t]
+        if dst <= 0:
+            continue
+        nst = Np[si, t]
+        # walk the DAG: for each directed edge (u,v) with D[s,u]+1+D[t,v]==dst.
+        # Parallel links each carry the same per-link share (path counts Np
+        # already include the multiplicity), so iterate unique neighbors.
+        for u in np.where(D[si] < dst)[0]:
+            du = D[si, u]
+            for v in set(net.adj[u]):
+                if D[ti, v] == dst - du - 1 and D[si, v] == du + 1:
+                    loads[(int(u), v)] += vol * Np[si, u] * Np[ti, v] / nst
+    return loads
+
+
+def achievable_fraction(
+    net: Network,
+    traffic: list[tuple[int, int, float]],
+    links_per_endpoint: int = 1,
+) -> float:
+    """Achievable fraction of *injection bandwidth*.
+
+    Traffic volumes are normalized so each source's total demand is 1.  With
+    ``L`` unit-bandwidth links per endpoint, injection bandwidth is L, the
+    sustainable per-source rate is 1/max_load, and the reported fraction is
+    ``1 / (max_load * L)`` (capped at 1).
+    """
+    nodes = sorted({s for s, _, _ in traffic} | {t for _, t, _ in traffic})
+    D, Np = all_pairs(net, nodes)
+    idx = {n: i for i, n in enumerate(nodes)}
+    loads = link_loads(net, traffic, D, Np, idx)
+    mx = max(loads.values()) if loads else 0.0
+    if mx <= 0:
+        return 1.0
+    return min(1.0, 1.0 / (mx * links_per_endpoint))
+
+
+def all_pairs_full(net: Network) -> tuple[np.ndarray, np.ndarray]:
+    """BFS distances/path-counts from *every* node (for exact alltoall)."""
+    return all_pairs(net, sources=list(range(net.n_nodes)))
+
+
+def alltoall_fraction(net: Network, links_per_endpoint: int = 1) -> float:
+    """Exact uniform-alltoall achievable fraction of injection bandwidth.
+
+    Vectorized over (source, destination) pairs per edge:
+    load(u→v) = Σ_{s,t} 1[D(s,u)+1+D(v,t)=D(s,t)] · Np(s,u)Np(v,t)/Np(s,t)
+    with per-source demand 1 split uniformly over n-1 destinations.
+    """
+    n = net.n_endpoints
+    D, Np = all_pairs_full(net)
+    ep = np.arange(n)
+    Dst = D[:n][:, :n].astype(np.float64)  # D[s,t]
+    Nst = Np[:n][:, :n]
+    np.fill_diagonal(Nst, 1.0)  # avoid 0/0 on the diagonal (masked anyway)
+    inv_nst = 1.0 / Nst
+    demand = 1.0 / (n - 1)
+    max_load = 0.0
+    seen = set()
+    for u, nbrs in net.adj.items():
+        for v in set(nbrs):
+            if (u, v) in seen:
+                continue
+            seen.add((u, v))
+            # mask[s,t] : edge (u,v) on a shortest s→t path
+            mask = (D[:n, u][:, None] + 1 + D[v, :n][None, :]) == Dst
+            share = Np[:n, u][:, None] * Np[v, :n][None, :] * inv_nst
+            load = float((mask * share).sum()) * demand
+            if load > max_load:
+                max_load = load
+    if max_load <= 0:
+        return 1.0
+    return min(1.0, 1.0 / (max_load * links_per_endpoint))
+
+
+# ---------------------------------------------------------------------------
+# Topology builders (one plane)
+# ---------------------------------------------------------------------------
+
+
+def build_hxmesh(a: int, b: int, x: int, y: int) -> Network:
+    """One plane of an x×y HxMesh of a×b boards.
+
+    Node ids: accelerators 0..N-1 (board-major), then row switches, then
+    column switches.  Each on-board row connects E/W to its row switch; each
+    on-board column connects N/S to its column switch (single-switch global
+    topologies; valid for 2x ≤ 64 as in the small clusters).
+    """
+    n = a * b * x * y
+    adj: dict[int, list[int]] = defaultdict(list)
+
+    def acc(bx: int, by: int, i: int, j: int) -> int:  # board (bx,by), pos (i,j)
+        return ((by * x + bx) * b + i) * a + j
+
+    # on-board 2D mesh links
+    for by in range(y):
+        for bx in range(x):
+            for i in range(b):
+                for j in range(a):
+                    u = acc(bx, by, i, j)
+                    if j + 1 < a:
+                        v = acc(bx, by, i, j + 1)
+                        adj[u].append(v)
+                        adj[v].append(u)
+                    if i + 1 < b:
+                        v = acc(bx, by, i + 1, j)
+                        adj[u].append(v)
+                        adj[v].append(u)
+    # row switches: one per (board-row by, on-board row i)
+    row_sw = {}
+    nid = n
+    for by in range(y):
+        for i in range(b):
+            row_sw[(by, i)] = nid
+            nid += 1
+    for by in range(y):
+        for bx in range(x):
+            for i in range(b):
+                sw = row_sw[(by, i)]
+                w = acc(bx, by, i, 0)
+                e = acc(bx, by, i, a - 1)
+                adj[w].append(sw), adj[sw].append(w)
+                adj[e].append(sw), adj[sw].append(e)
+    # column switches: one per (board-col bx, on-board col j)
+    col_sw = {}
+    for bx in range(x):
+        for j in range(a):
+            col_sw[(bx, j)] = nid
+            nid += 1
+    for by in range(y):
+        for bx in range(x):
+            for j in range(a):
+                sw = col_sw[(bx, j)]
+                no = acc(bx, by, 0, j)
+                so = acc(bx, by, b - 1, j)
+                adj[no].append(sw), adj[sw].append(no)
+                adj[so].append(sw), adj[sw].append(so)
+    return Network(n_endpoints=n, adj=dict(adj))
+
+
+def build_fat_tree(n: int, taper: float = 0.0, ports: int = 64) -> Network:
+    """Two-level fat tree plane (small clusters)."""
+    down = int(ports / (2 - taper)) if taper > 0 else ports // 2
+    l1 = (n + down - 1) // down
+    up = ports - down if taper > 0 else ports // 2
+    l2 = max(1, (l1 * up + ports - 1) // ports)
+    adj: dict[int, list[int]] = defaultdict(list)
+    for e in range(n):
+        sw = n + e // down
+        adj[e].append(sw), adj[sw].append(e)
+    for i in range(l1):
+        sw = n + i
+        for u in range(up):
+            core = n + l1 + (i * up + u) % l2
+            adj[sw].append(core), adj[core].append(sw)
+    return Network(n_endpoints=n, adj=dict(adj))
+
+
+def build_torus(side_x: int, side_y: int) -> Network:
+    """Plain 2D torus plane (1 link per direction per accelerator)."""
+    n = side_x * side_y
+    adj: dict[int, list[int]] = defaultdict(list)
+
+    def nid(i, j):
+        return i * side_x + j
+
+    for i in range(side_y):
+        for j in range(side_x):
+            u = nid(i, j)
+            for v in (nid(i, (j + 1) % side_x), nid((i + 1) % side_y, j)):
+                adj[u].append(v)
+                adj[v].append(u)
+    return Network(n_endpoints=n, adj=dict(adj))
+
+
+# ---------------------------------------------------------------------------
+# Traffic patterns
+# ---------------------------------------------------------------------------
+
+
+def alltoall_traffic(n: int, sample: int | None = None, seed: int = 0):
+    """Uniform alltoall; optionally a sampled subset of sources."""
+    rng = np.random.default_rng(seed)
+    srcs = range(n) if sample is None else rng.choice(n, size=sample, replace=False)
+    return [(int(s), int(t), 1.0 / (n - 1)) for s in srcs for t in range(n) if t != int(s)]
+
+
+def ring_traffic(order: list[int], volume: float = 1.0):
+    """Bidirectional ring neighbor traffic (the allreduce steady state)."""
+    n = len(order)
+    tr = []
+    for k in range(n):
+        u, v = order[k], order[(k + 1) % n]
+        tr.append((u, v, volume))
+        tr.append((v, u, volume))
+    return tr

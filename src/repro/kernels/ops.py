@@ -1,0 +1,44 @@
+"""Jit-ready wrappers around the Pallas kernels.
+
+``flash_attention`` exposes a jax.custom_vjp op: the forward runs the Pallas
+kernel (interpret=True on CPU, compiled on TPU); the backward rematerializes
+through the jnp reference (exact same math), so models can train with the
+kernel enabled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal=True, window=0):
+    return fa.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, interpret=not _on_tpu()
+    )
+
+
+def _fwd(q, k, v, causal, window):
+    out = flash_attention(q, k, v, causal, window)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.flash_attention_ref(q_, k_, v_, causal, window), q, k, v
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,62 @@
+"""Batched serving driver: prefill a prompt batch, then autoregressive decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m-smoke \
+      --batch 4 --prompt-len 32 --decode 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import make_batch
+from repro.models import get_model
+from repro.train import steps as steps_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.decode
+    cache = model.init_cache(cfg, args.batch, max_len)
+    serve_step = jax.jit(steps_lib.make_decode_step(cfg))
+
+    prompts = make_batch(cfg, args.prompt_len, args.batch)["tokens"]
+    # prefill via repeated decode steps (teacher-forced); serious serving
+    # would run a single prefill forward — decode_32k / long_500k in the
+    # dry-run measure the steady-state decode step this loop exercises.
+    t0 = time.time()
+    tok = None
+    for t in range(args.prompt_len):
+        tok, cache = serve_step(params, cache, jnp.asarray(prompts[:, t:t + 1]))
+    prefill_s = time.time() - t0
+
+    t0 = time.time()
+    out = []
+    for _ in range(args.decode):
+        tok, cache = serve_step(params, cache, tok)
+        out.append(np.asarray(tok)[:, 0])
+    decode_s = time.time() - t0
+    toks_per_s = args.batch * args.decode / decode_s
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"prefill {args.prompt_len} toks in {prefill_s:.2f}s; "
+          f"decoded {args.decode} toks/seq in {decode_s:.2f}s "
+          f"({toks_per_s:.1f} tok/s)")
+    print(f"[serve] sample continuation: {np.stack(out, 1)[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

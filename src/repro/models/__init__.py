@@ -1,0 +1,15 @@
+"""Model zoo dispatch: family -> module with init_params/forward/init_cache/decode_step."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+
+
+def get_model(cfg: ArchConfig):
+    from repro.models import mamba2, recurrentgemma, transformer
+
+    if cfg.family == "ssm":
+        return mamba2
+    if cfg.family == "hybrid":
+        return recurrentgemma
+    return transformer  # dense / moe / vlm / audio

@@ -1,0 +1,353 @@
+"""Decoder-only and encoder-decoder transformer LMs (dense / MoE / VLM / audio).
+
+Covers the assigned families:
+* dense GQA decoders (llama3.2, granite, internlm2, minicpm, qwen2-vl)
+* MoE decoders (dbrx, moonshot) via :mod:`repro.models.moe`
+* encoder-decoder with conv-frontend stub (whisper-tiny)
+
+Layer stacks are parameterized for ``lax.scan`` (params carry a leading L
+dim); remat policy is applied by the training layer.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def _attn_params(key, cfg: ArchConfig, n_layers: int, dtype):
+    d, hd = cfg.d_model, cfg.kq_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], (n_layers, d, h * hd), dtype=dtype),
+        "wk": L.dense_init(ks[1], (n_layers, d, kv * hd), dtype=dtype),
+        "wv": L.dense_init(ks[2], (n_layers, d, kv * hd), dtype=dtype),
+        "wo": L.dense_init(ks[3], (n_layers, h * hd, d), dtype=dtype),
+    }
+
+
+def _mlp_params(key, cfg: ArchConfig, n_layers: int, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": L.dense_init(ks[0], (n_layers, d, f), dtype=dtype),
+            "w_up": L.dense_init(ks[1], (n_layers, d, f), dtype=dtype),
+            "w_down": L.dense_init(ks[2], (n_layers, f, d), dtype=dtype),
+        }
+    return {
+        "w_up": L.dense_init(ks[0], (n_layers, d, f), dtype=dtype),
+        "b_up": jnp.zeros((n_layers, f), dtype),
+        "w_down": L.dense_init(ks[1], (n_layers, f, d), dtype=dtype),
+        "b_down": jnp.zeros((n_layers, d), dtype),
+    }
+
+
+def _moe_params(key, cfg: ArchConfig, n_layers: int, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.dense_init(ks[0], (n_layers, d, e), dtype=jnp.float32),
+        "w_gate": L.dense_init(ks[1], (n_layers, e, d, f), dtype=dtype),
+        "w_up": L.dense_init(ks[2], (n_layers, e, d, f), dtype=dtype),
+        "w_down": L.dense_init(ks[3], (n_layers, e, f, d), dtype=dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    layer = {
+        "attn_norm": _stack_norm(cfg, cfg.n_layers),
+        "mlp_norm": _stack_norm(cfg, cfg.n_layers),
+        **_attn_params(keys[0], cfg, cfg.n_layers, dtype),
+    }
+    if cfg.family == "moe":
+        layer["moe"] = _moe_params(keys[1], cfg, cfg.n_layers, dtype)
+    else:
+        layer.update(_mlp_params(keys[1], cfg, cfg.n_layers, dtype))
+    params = {
+        "embed": L.embed_init(keys[2], (cfg.vocab, d), dtype=dtype),
+        "layers": layer,
+        "final_norm": L.norm_params(d, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        v_out = _padded_vocab(cfg)
+        params["unembed"] = L.dense_init(keys[3], (d, v_out), dtype=dtype)
+    if cfg.rope_type == "learned":
+        params["pos_embed"] = L.embed_init(keys[4], (cfg.max_pos, d), dtype=dtype)
+    if cfg.enc_layers:
+        params["encoder"] = {
+            "layers": {
+                "attn_norm": _stack_norm(cfg, cfg.enc_layers),
+                "mlp_norm": _stack_norm(cfg, cfg.enc_layers),
+                **_attn_params(keys[5], cfg, cfg.enc_layers, dtype),
+                **_mlp_params(keys[6], cfg, cfg.enc_layers, dtype),
+            },
+            "final_norm": L.norm_params(d, cfg.norm_type),
+            "pos_embed": L.embed_init(keys[7], (cfg.enc_seq, d), dtype=dtype),
+        }
+        params["layers"]["xattn_norm"] = _stack_norm(cfg, cfg.n_layers)
+        params["layers"].update(
+            {f"x{k}": v for k, v in _attn_params(keys[4], cfg, cfg.n_layers, dtype).items()}
+        )
+    return params
+
+
+def _padded_vocab(cfg: ArchConfig) -> int:
+    if not cfg.vocab_pad_to:
+        return cfg.vocab
+    p = cfg.vocab_pad_to
+    return (cfg.vocab + p - 1) // p * p
+
+
+def _stack_norm(cfg: ArchConfig, n: int):
+    base = L.norm_params(cfg.d_model, cfg.norm_type)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), base)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _positions_default(tokens):
+    b, s = tokens.shape[:2]
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+
+def _apply_pos(cfg, q, k, positions):
+    if cfg.rope_type == "rope":
+        return (
+            L.apply_rope(q, positions, cfg.rope_theta),
+            L.apply_rope(k, positions, cfg.rope_theta),
+        )
+    if cfg.rope_type == "mrope":
+        return (
+            L.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta),
+            L.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta),
+        )
+    return q, k
+
+
+def _attn_block(cfg: ArchConfig, p, x, positions, causal, window, kv_seq=None,
+                use_kernel=False):
+    """p holds per-layer (unstacked) attention params."""
+    b, s, d = x.shape
+    hd = cfg.kq_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    src = x if kv_seq is None else kv_seq
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dq->bsq", src, p["wk"]).reshape(b, src.shape[1], kv, hd)
+    v = jnp.einsum("bsd,dq->bsq", src, p["wv"]).reshape(b, src.shape[1], kv, hd)
+    if kv_seq is None and cfg.rope_type in ("rope", "mrope"):
+        q, k = _apply_pos(cfg, q, k, positions)
+    o = L.attention(
+        q, k, v, causal=causal, window=window,
+        chunk_threshold=cfg.attn_chunk * 2, chunk=cfg.attn_chunk,
+        use_kernel=use_kernel,
+    )
+    return jnp.einsum("bsq,qd->bsd", o.reshape(b, s, h * hd), p["wo"])
+
+
+def _moe_ep(cfg: ArchConfig, mp, x, mesh):
+    """Expert-parallel MoE: experts live on the ``model`` axis, token slabs
+    move with lax.all_to_all — the paper's GPT-3-MoE traffic pattern (§V-B5).
+    Wrapped in a partial-manual shard_map (manual over ``model`` only)."""
+    from jax.sharding import PartitionSpec as P
+
+    def f(x_l, w):
+        return moe_lib.moe_apply_ep(
+            x_l, w, cfg.top_k, cfg.capacity_factor, axis="model")
+
+    w_specs = {
+        "router": P(),
+        "w_gate": P("model"), "w_up": P("model"), "w_down": P("model"),
+    }
+    return jax.shard_map(
+        f, mesh=mesh, in_specs=(P(), w_specs), out_specs=(P(), P()),
+        axis_names={"model"}, check_vma=False,
+    )(x, mp)
+
+
+def _mlp_block(cfg: ArchConfig, p, x):
+    if cfg.act == "swiglu":
+        return L.swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    return L.gelu_mlp(x, p["w_up"], p["b_up"], p["w_down"], p["b_down"])
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    tokens,
+    positions=None,
+    encoder_frames=None,
+    remat: bool = True,
+    use_kernel: bool = False,
+    act_specs=None,
+    return_hidden: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Full forward pass -> (logits, moe_aux_loss).
+
+    tokens: (B, S) int32 — or, for audio, decoder tokens with
+    ``encoder_frames`` (B, enc_seq, D) from the (stubbed) conv frontend.
+    For VLM (mrope) ``positions`` is (3, B, S).
+    """
+    if positions is None:
+        positions = (
+            _positions_default(tokens)
+            if cfg.rope_type != "mrope"
+            else jnp.broadcast_to(
+                jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                (3, tokens.shape[0], tokens.shape[1]),
+            )
+        )
+    act = (act_specs or {}).get("act")
+    x = L.constrain(params["embed"][tokens], act)
+    if cfg.rope_type == "learned":
+        x = x + params["pos_embed"][: x.shape[1]][None]
+
+    enc_out = None
+    if cfg.enc_layers:
+        assert encoder_frames is not None, "audio family needs encoder frames"
+        enc_out = _encoder_forward(cfg, params["encoder"], encoder_frames, remat)
+
+    def layer_fn(carry, lp):
+        h, aux = carry
+        a = L.apply_norm(h, lp["attn_norm"], cfg.norm_type)
+        h = h + _attn_block(cfg, lp, a, positions, causal=True, window=0,
+                            use_kernel=use_kernel)
+        if enc_out is not None:
+            xa = L.apply_norm(h, lp["xattn_norm"], cfg.norm_type)
+            xp = {k[1:]: v for k, v in lp.items() if k.startswith("x") and k != "xattn_norm"}
+            h = h + _attn_block(cfg, xp, xa, positions, causal=False, window=0,
+                                kv_seq=enc_out)
+        m = L.apply_norm(h, lp["mlp_norm"], cfg.norm_type)
+        if cfg.family == "moe":
+            if cfg.moe_mode == "ep":
+                y, a_loss = _moe_ep(cfg, lp["moe"], m, (act_specs or {}).get("mesh"))
+            elif cfg.moe_mode == "gshard":
+                y, a_loss = moe_lib.moe_apply_gshard(
+                    m, lp["moe"], cfg.top_k, cfg.capacity_factor,
+                    expert_spec=(act_specs or {}).get("experts"))
+            else:
+                y, a_loss = moe_lib.moe_apply(m, lp["moe"], cfg.top_k,
+                                              cfg.capacity_factor)
+            aux = aux + a_loss
+        else:
+            y = _mlp_block(cfg, lp, m)
+        return (L.constrain(h + y, act), aux), None
+
+    body = jax.checkpoint(layer_fn) if remat else layer_fn
+    (x, aux), _ = lax.scan(body, (x, jnp.float32(0.0)), params["layers"],
+                           unroll=L.scan_unroll(cfg.n_layers))
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    if return_hidden:
+        return x, aux / cfg.n_layers
+    unembed = params.get("unembed", params["embed"].T)
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    if logits.shape[-1] != cfg.vocab:  # TP-padded vocab: mask the tail
+        keep = jnp.arange(logits.shape[-1]) < cfg.vocab
+        logits = jnp.where(keep, logits, jnp.asarray(-1e30, logits.dtype))
+    logits = L.constrain(logits, (act_specs or {}).get("logits"))
+    return logits, aux / cfg.n_layers
+
+
+def _encoder_forward(cfg: ArchConfig, enc, frames, remat):
+    x = frames.astype(enc["pos_embed"].dtype) + enc["pos_embed"][: frames.shape[1]][None]
+    pos = _positions_default(frames[..., 0].astype(jnp.int32))
+
+    def layer_fn(h, lp):
+        a = L.apply_norm(h, lp["attn_norm"], cfg.norm_type)
+        h = h + _attn_block(cfg, lp, a, pos, causal=False, window=0)
+        m = L.apply_norm(h, lp["mlp_norm"], cfg.norm_type)
+        return h + _mlp_block(cfg, lp, m), None
+
+    body = jax.checkpoint(layer_fn) if remat else layer_fn
+    x, _ = lax.scan(body, x, enc["layers"], unroll=L.scan_unroll(cfg.enc_layers))
+    return L.apply_norm(x, enc["final_norm"], cfg.norm_type)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving path
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.kq_head_dim
+    cache = {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if cfg.enc_layers:
+        cache["xk"] = jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, hd), dtype)
+        cache["xv"] = jnp.zeros_like(cache["xk"])
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, positions=None):
+    """One-token decode: tokens (B, 1) -> (logits (B,1,V), new_cache)."""
+    b = tokens.shape[0]
+    hd = cfg.kq_head_dim
+    h_, kv = cfg.n_heads, cfg.n_kv_heads
+    pos_scalar = cache["len"]
+    if positions is None:
+        if cfg.rope_type == "mrope":
+            positions = jnp.broadcast_to(pos_scalar.astype(jnp.int32), (3, b, 1))
+        else:
+            positions = jnp.broadcast_to(pos_scalar.astype(jnp.int32), (b, 1))
+    x = params["embed"][tokens]
+    if cfg.rope_type == "learned":
+        x = x + lax.dynamic_slice_in_dim(params["pos_embed"], pos_scalar, 1)[None]
+
+    def layer_fn(carry, lp_and_cache):
+        h, li = carry
+        lp, kc, vc, xk, xv = lp_and_cache
+        a = L.apply_norm(h, lp["attn_norm"], cfg.norm_type)
+        q = jnp.einsum("bsd,dq->bsq", a, lp["wq"]).reshape(b, 1, h_, hd)
+        k = jnp.einsum("bsd,dq->bsq", a, lp["wk"]).reshape(b, 1, kv, hd)
+        v = jnp.einsum("bsd,dq->bsq", a, lp["wv"]).reshape(b, 1, kv, hd)
+        if cfg.rope_type in ("rope", "mrope"):
+            q, k = _apply_pos(cfg, q, k, positions)
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos_scalar, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos_scalar, axis=1)
+        o = L.attention_decode(q, kc, vc, pos_scalar + 1,
+                               window=cfg.local_window if cfg.family == "vlm" else 0)
+        h = h + jnp.einsum("bsq,qd->bsd", o.reshape(b, 1, h_ * hd), lp["wo"])
+        if cfg.enc_layers:
+            xa = L.apply_norm(h, lp["xattn_norm"], cfg.norm_type)
+            qx = jnp.einsum("bsd,dq->bsq", xa, lp["xwq"]).reshape(b, 1, h_, hd)
+            o = L.attention_decode(qx, xk, xv, xk.shape[1])
+            h = h + jnp.einsum("bsq,qd->bsd", o.reshape(b, 1, h_ * hd), lp["xwo"])
+        m = L.apply_norm(h, lp["mlp_norm"], cfg.norm_type)
+        if cfg.family == "moe":
+            y, _ = moe_lib.moe_apply(m, lp["moe"], cfg.top_k, cfg.capacity_factor)
+        else:
+            y = _mlp_block(cfg, lp, m)
+        return (h + y, li + 1), (kc, vc)
+
+    lp = params["layers"]
+    xk = cache.get("xk", jnp.zeros((cfg.n_layers, b, 1, kv, hd), jnp.bfloat16))
+    xv = cache.get("xv", xk)
+    (x, _), (new_k, new_v) = lax.scan(
+        layer_fn, (x, 0), (lp, cache["k"], cache["v"], xk, xv)
+    )
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    unembed = params.get("unembed", params["embed"].T)
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    new_cache = dict(cache, k=new_k, v=new_v, len=pos_scalar + 1)
+    return logits, new_cache

@@ -1,0 +1,210 @@
+"""Sharding rules: map param/batch/cache pytrees to PartitionSpecs.
+
+The production mesh is 2D ``("data", "model")`` per pod, with a leading
+``"pod"`` axis in multi-pod runs (launch/mesh.py).  This module encodes the
+DP / FSDP / TP / EP mapping described in DESIGN.md §5:
+
+* batch            → data axes (+pod)
+* attention / mlp weights → Megatron column/row split on the flat feature dim
+  over ``model`` + optional FSDP (ZeRO-3-style) over ``data``
+* MoE expert weights → tensor split on d_ff over ``model`` (+FSDP); the
+  EP-alltoall variant shards the expert dim instead (moe_apply_ep)
+* small archs (whisper-tiny, mamba2-130m) disable TP: params are replicated
+  over ``model`` and FSDP keeps memory bounded — the paper's "small models
+  use 1D data rings" case.
+
+All flat feature dims of the assigned archs are multiples of 16, so specs
+divide evenly on the 16-wide model axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    data_axes: tuple[str, ...] = ("data",)  # ("pod","data") in multi-pod
+    model_axis: str = "model"
+    fsdp: bool = True
+    tp: bool = True
+
+    @property
+    def dp(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    @property
+    def fsdp_axis(self):
+        return "data" if self.fsdp else None
+
+    @property
+    def mp(self):
+        return self.model_axis if self.tp else None
+
+
+def default_policy(cfg: ArchConfig, multi_pod: bool = False,
+                   layout: str = "2d") -> Policy:
+    """layout: '2d' = DP(+FSDP) x TP (the paper's D x O decomposition);
+    'fsdp' = pure data parallelism over the whole mesh (1D rings)."""
+    small = cfg.d_model < 1024  # whisper-tiny, mamba2-130m: DP-only
+    if layout == "fsdp":
+        return Policy(
+            data_axes=(("pod", "data", "model") if multi_pod
+                       else ("data", "model")),
+            fsdp=True,
+            tp=False,
+        )
+    return Policy(
+        data_axes=("pod", "data") if multi_pod else ("data",),
+        fsdp=True,
+        tp=not small,
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (rule table keyed on leaf path names)
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ArchConfig, params_shape, policy: Policy):
+    """PartitionSpec pytree matching ``params_shape`` (from eval_shape)."""
+    mp, fs = policy.mp, policy.fsdp_axis
+
+    def rule(path, leaf):
+        name = getattr(path[-1], "key", getattr(path[-1], "name", ""))
+        nd = len(leaf.shape)
+
+        if name == "embed":
+            return P(mp, fs)
+        if name == "unembed":
+            return P(fs, mp)
+        if name == "pos_embed":
+            return P(None, fs)
+        if name in ("scale", "bias", "lambda_p", "A_log", "D", "dt_bias",
+                    "b_up", "b_down"):
+            return P(*([None] * nd))
+        if name == "router":  # (L, D, E)
+            return P(None, fs, None)
+        if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_gate_in", "w_x_in",
+                    "w_in", "w_a", "w_i"):
+            if nd == 4:  # moe experts (L, E, D, F)
+                if cfg.moe_mode in ("ep", "gshard"):  # experts over model
+                    return P(None, mp, fs, None)
+                return P(None, None, fs, mp)
+            return P(None, fs, mp)  # (L, D, F)
+        if name in ("wo", "w_down", "w_out"):
+            if nd == 4:  # (L, E, F, D)
+                if cfg.moe_mode in ("ep", "gshard"):
+                    return P(None, mp, None, fs)
+                return P(None, None, mp, fs)
+            return P(None, mp, fs)
+        if name == "conv_w":  # (L, W, C): shard channels
+            return P(None, None, mp)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_specs(cfg: ArchConfig, policy: Policy, mesh, batch: int):
+    dp_total = 1
+    for ax in policy.data_axes:
+        dp_total *= mesh.shape[ax]
+    dp = policy.dp if batch % dp_total == 0 else None
+    specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.rope_type == "mrope":
+        specs["positions"] = P(None, dp, None)
+    if cfg.enc_layers:
+        specs["encoder_frames"] = P(dp, None, None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, cache_shape, policy: Policy, mesh, batch: int):
+    """KV-cache / recurrent-state specs: batch over data; heads or head_dim
+    over model (whichever divides)."""
+    mp_size = mesh.shape[policy.model_axis]
+    mp = policy.model_axis  # shard states over model even for small archs
+    dp_total = 1
+    for ax in policy.data_axes:
+        dp_total *= mesh.shape[ax]
+    dp = policy.dp if batch % dp_total == 0 else None
+
+    def rule(path, leaf):
+        name = getattr(path[-1], "key", "")
+        nd = len(leaf.shape)
+        if name == "len":
+            return P()
+        if name in ("k", "v", "xk", "xv"):  # (L, B, S, KV, hd)
+            kv, hd = leaf.shape[3], leaf.shape[4]
+            if kv % mp_size == 0:
+                return P(None, dp, None, mp, None)
+            if hd % mp_size == 0:
+                return P(None, dp, None, None, mp)
+            return P(None, dp, None, None, None)
+        if name == "conv":  # (L, B, W, C)
+            return P(None, dp, None, mp if leaf.shape[3] % mp_size == 0 else None)
+        if name == "ssm":  # (L, B, H, P, N)
+            return P(None, dp, None, mp if leaf.shape[3] % mp_size == 0 else None, None)
+        if name == "lru":  # (L, B, Dr)
+            return P(None, dp, mp if leaf.shape[2] % mp_size == 0 else None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def sanitize_specs(shapes, specs, mesh):
+    """Drop sharding on dims the mesh axes don't divide evenly (e.g. odd
+    vocabularies like minicpm's 122753) — pjit argument shardings must tile
+    exactly."""
+
+    def fix(leaf, spec):
+        parts = []
+        for i, entry in enumerate(spec):
+            if entry is None:
+                parts.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for ax in axes:
+                n *= mesh.shape[ax]
+            parts.append(entry if leaf.shape[i] % n == 0 else None)
+        # spec may be shorter than ndim; that's fine (trailing dims unsharded)
+        return P(*parts)
+
+    return jax.tree_util.tree_map(
+        fix, shapes, specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def activation_specs(cfg: ArchConfig, policy: Policy, mesh, batch: int):
+    """NamedShardings for activation anchors (batch over dp, vocab over mp).
+
+    Vocab sharding is only applied when it divides the model axis evenly
+    (GSPMD pads uneven tilings, but even splits keep the HLO clean)."""
+    dp_total = 1
+    for ax in policy.data_axes:
+        dp_total *= mesh.shape[ax]
+    dp = policy.dp if batch % dp_total == 0 else None
+    mp = policy.mp
+    if mp and cfg.vocab % mesh.shape[policy.model_axis] != 0:
+        mp = None
+    specs = {
+        "act": NamedSharding(mesh, P(dp, None, None)),
+        "logits": NamedSharding(mesh, P(dp, None, mp)),
+    }
+    if cfg.family == "moe" and cfg.moe_mode == "gshard" and policy.mp:
+        # (G, E, C, D) capacity buffers: groups over data, experts over model
+        specs["experts"] = NamedSharding(mesh, P(dp, policy.mp, None, None))
+    return specs

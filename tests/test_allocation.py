@@ -1,0 +1,72 @@
+"""Greedy allocation + heuristics + failures (paper §IV, Figs 5/8/10)."""
+
+import statistics
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import allocation as A
+
+
+def test_virtual_subhxmesh_property():
+    alloc = A.HxMeshAllocator(8, 8)
+    alloc.fail_board(0, 3)
+    alloc.fail_board(2, 5)
+    for jid, (u, v) in enumerate([(3, 3), (2, 4), (1, 5)]):
+        pl = alloc.allocate(A.Job(jid, u, v), transpose=True)
+        assert pl is not None
+        assert A.is_virtual_subhxmesh(pl.boards)
+        assert not {(r, c) for r, c in pl.boards} & alloc.failed
+
+
+def test_fig8_utilization_bands():
+    base = [A.utilization_experiment(16, 16, transpose=False, sort_jobs=False, seed=s)
+            for s in range(10)]
+    sortd = [A.utilization_experiment(16, 16, transpose=True, sort_jobs=True, seed=s)
+             for s in range(10)]
+    assert statistics.mean(base) > 0.80   # paper: ~90% without optimizations
+    assert statistics.mean(sortd) > 0.95  # paper: >98% with sorting
+    assert statistics.mean(sortd) >= statistics.mean(base)
+
+
+def test_fig10_failures():
+    us = [A.utilization_experiment(16, 16, n_failures=40, transpose=True,
+                                   sort_jobs=True, aspect=True, seed=s)
+          for s in range(10)]
+    assert statistics.median(us) > 0.70  # paper: >70% median at 40 failures
+
+
+def test_eviction_and_remap():
+    alloc = A.HxMeshAllocator(6, 6)
+    job = A.Job(0, 2, 2)
+    pl = alloc.allocate(job)
+    r, c = pl.boards[0]
+    evicted = alloc.fail_board(r, c)
+    assert evicted == 0
+    pl2 = A.remap_after_failure(alloc, job, transpose=True)
+    assert pl2 is not None
+    assert (r, c) not in set(pl2.boards)
+
+
+@given(st.integers(2, 8), st.integers(2, 8), st.integers(0, 6))
+@settings(max_examples=30, deadline=None)
+def test_property_no_double_allocation(x, y, nf):
+    import random
+
+    rng = random.Random(0)
+    alloc = A.HxMeshAllocator(x, y)
+    coords = [(r, c) for r in range(y) for c in range(x)]
+    for r, c in rng.sample(coords, min(nf, len(coords))):
+        alloc.fail_board(r, c)
+    used: set = set()
+    for jid in range(10):
+        u = rng.randint(1, y)
+        v = rng.randint(1, x)
+        pl = alloc.allocate(A.Job(jid, u, v), transpose=True, aspect=True)
+        if pl is None:
+            continue
+        boards = set(pl.boards)
+        assert not boards & used, "boards double-allocated"
+        assert not boards & alloc.failed
+        assert A.is_virtual_subhxmesh(pl.boards)
+        used |= boards

@@ -1,0 +1,22 @@
+"""Multi-device collective / pipeline / EP checks (subprocess with 16 fake
+devices so the main pytest process keeps a single CPU device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_multidevice_suite():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env["PYTHONPATH"] = "src:" + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "tests.multidevice_checks"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, text=True, timeout=880,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "ALL-OK" in proc.stdout

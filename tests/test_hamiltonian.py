@@ -1,0 +1,43 @@
+"""Edge-disjoint Hamiltonian cycles (paper §V-A2b, App. D)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hamiltonian as H
+
+
+@pytest.mark.parametrize("r,c", [(4, 4), (8, 4), (9, 3), (16, 8), (16, 16), (256, 16)])
+def test_paper_examples_disjoint(r, c):
+    red, green = H.red_cycle(r, c), H.green_cycle(r, c)
+    assert H.is_hamiltonian_torus_cycle(red, r, c)
+    assert H.is_hamiltonian_torus_cycle(green, r, c)
+    er, eg = H.cycle_edges(red), H.cycle_edges(green)
+    assert not er & eg, "cycles must be edge-disjoint"
+    assert len(er | eg) == 2 * r * c, "together they must cover every torus edge"
+
+
+@given(st.integers(1, 6), st.integers(3, 8))
+@settings(max_examples=30, deadline=None)
+def test_property_any_supported_size(k, c):
+    r = k * c
+    if not H.supports_disjoint_cycles(r, c):
+        return
+    red, green = H.dual_cycles(r, c)
+    assert H.is_hamiltonian_torus_cycle(red, r, c)
+    assert H.is_hamiltonian_torus_cycle(green, r, c)
+    assert not H.cycle_edges(red) & H.cycle_edges(green)
+
+
+@given(st.integers(2, 12), st.integers(2, 12))
+@settings(max_examples=40, deadline=None)
+def test_property_single_cycle(r, c):
+    if r % 2 and c % 2:
+        return
+    order = H.single_cycle(r, c)
+    assert H.is_hamiltonian_torus_cycle(order, r, c)
+
+
+def test_transposed_fallback():
+    red, green = H.dual_cycles(4, 16)  # 4x16 fails, 16x4 works transposed
+    assert H.is_hamiltonian_torus_cycle(red, 4, 16)
+    assert H.is_hamiltonian_torus_cycle(green, 4, 16)

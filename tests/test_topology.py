@@ -1,0 +1,43 @@
+"""Table II reproduction: cost model, diameters, bisection (paper §III)."""
+
+import pytest
+
+from repro.core import topology as T
+
+
+@pytest.mark.parametrize("cluster,paper_costs,paper_diams", [
+    ("small", T.PAPER_COSTS_SMALL, T.PAPER_DIAMETERS_SMALL),
+    ("large", T.PAPER_COSTS_LARGE, T.PAPER_DIAMETERS_LARGE),
+])
+def test_table2_costs_and_diameters(cluster, paper_costs, paper_diams):
+    build = T.small_cluster() if cluster == "small" else T.large_cluster()
+    for name, tc in build.items():
+        paper = paper_costs[name]
+        assert abs(tc.cost_musd - paper) / paper < 0.03, (
+            f"{cluster}/{name}: {tc.cost_musd:.1f} vs paper {paper}"
+        )
+        assert tc.diameter == paper_diams[name], f"{cluster}/{name} diameter"
+
+
+def test_bisection_fraction():
+    # paper §III-A: relative bisection bandwidth of an HxaMesh is 1/(2a)
+    assert T.HxMesh(2, 2, 16, 16).bisection_fraction == pytest.approx(0.25)
+    assert T.HxMesh(4, 4, 8, 8).bisection_fraction == pytest.approx(0.125)
+    assert T.hyperx(32, 32).bisection_fraction == pytest.approx(0.5)
+
+
+def test_accelerator_counts():
+    for tc in T.small_cluster().values():
+        assert 1000 <= tc.num_accelerators <= 1100
+    for tc in T.large_cluster().values():
+        assert 16000 <= tc.num_accelerators <= 16500
+
+
+def test_cost_orderings():
+    """Paper's qualitative claims: Hx4 < Hx2 < HyperX < FT; torus cheapest-ish."""
+    s = T.small_cluster()
+    assert s["Hx4Mesh"].cost < s["Hx2Mesh"].cost < s["2D HyperX"].cost < s["nonbl. FT"].cost
+    l = T.large_cluster()
+    assert l["Hx4Mesh"].cost < l["Hx2Mesh"].cost < l["nonbl. FT"].cost
+    # >8x cheaper allreduce bandwidth headline (cost ratio alone)
+    assert l["nonbl. FT"].cost / l["Hx4Mesh"].cost > 8
