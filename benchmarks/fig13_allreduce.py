@@ -1,11 +1,15 @@
 """Fig 13/17: allreduce algorithms — α-β model curves + measured HLO traffic
-of our shard_map implementations on a 16-device mesh."""
+of our shard_map implementations on a 16-device mesh + flow-level achievable
+bandwidth of the ring-allreduce traffic pattern per topology (vectorized
+engine), tying the model curves to the fabric simulation."""
 
 import os
 import subprocess
 import sys
 
 from repro.core import commodel as C
+from repro.core import flowsim as F
+from repro.core import topology as T
 
 
 def run() -> list[str]:
@@ -20,6 +24,16 @@ def run() -> list[str]:
                 f"fig13_model,p={p},S={size:.0e},best={name}," +
                 ",".join(f"{n}={bw[n]:.3f}" for n in C.ALGORITHMS)
             )
+    # flow-level steady state: ring-allreduce traffic achievable fraction
+    for name, spec, links in [
+        ("Hx2Mesh-8x8", T.HxMesh(2, 2, 8, 8), 4),
+        ("torus-16", T.Torus2D(8, 8), 4),
+        ("FT-256", T.FatTree(256, 0.0), 1),
+    ]:
+        net = F.build_network(spec)
+        frac = F.achievable_fraction(
+            net, F.traffic_matrix(net, "ring-allreduce"), links)
+        rows.append(f"fig13_flow,{name},ring_allreduce={frac:.3f}")
     # measured wire bytes of the JAX implementations (subprocess: fake devices)
     script = r"""
 import os
@@ -29,12 +43,12 @@ from jax.sharding import PartitionSpec as P
 import sys
 sys.path.insert(0, "src")
 from repro.core import collectives as coll
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch import compat
+mesh = compat.make_mesh((4, 4), ("data", "model"))
 x = jax.ShapeDtypeStruct((1 << 20,), jnp.float32)  # 4 MiB
 for algo in ("psum", "ring", "bidir", "torus", "hamiltonian"):
     lo = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             lambda v, a=algo: coll.allreduce(v, a, ("data", "model"), (4, 4)),
             mesh=mesh, check_vma=False, in_specs=P(), out_specs=P(),
         )

@@ -1,0 +1,49 @@
+"""Flowsim wall-clock micro-benchmark: scalar oracle vs vectorized engine.
+
+Runs the Table II bandwidth suite (alltoall + ring-allreduce per topology)
+on both engines and reports per-topology and total wall clock plus the
+speedup ratio.  ``full=True`` uses the paper-size (1,024-endpoint)
+topologies — the acceptance measurement for the vectorized rewrite
+(target: >= 10x) — the default uses the 256-endpoint versions.
+"""
+
+import time
+
+from benchmarks import table2_bandwidth as T2
+from repro.core import flowsim as F
+from repro.core import flowsim_oracle as O
+
+
+def _oracle_fractions(net, links):
+    a2a = O.alltoall_fraction(net, links)
+    triples = O.matrix_to_triples(F.traffic_matrix(net, "ring-allreduce"))
+    ared = O.achievable_fraction(net, triples, links)
+    return a2a, ared
+
+
+def run(full: bool = False) -> list[str]:
+    size = "full" if full else "reduced"
+    rows = []
+    t_new_total = t_old_total = 0.0
+    for name, (spec, links) in T2._cases(full).items():
+        net = F.build_network(spec)
+        t0 = time.time()
+        a2a_new, ared_new = T2.bandwidth_fractions(spec, links)
+        t_new = time.time() - t0
+        t0 = time.time()
+        a2a_old, ared_old = _oracle_fractions(net, links)
+        t_old = time.time() - t0
+        t_new_total += t_new
+        t_old_total += t_old
+        match = abs(a2a_new - a2a_old) < 1e-9 and abs(ared_new - ared_old) < 1e-9
+        rows.append(
+            f"flowsim_micro,{size},{name},endpoints={net.n_endpoints},"
+            f"old_s={t_old:.3f},new_s={t_new:.3f},"
+            f"speedup={t_old / max(t_new, 1e-9):.1f}x,match={match}"
+        )
+    rows.append(
+        f"flowsim_micro,{size},TOTAL,old_s={t_old_total:.3f},"
+        f"new_s={t_new_total:.3f},"
+        f"speedup={t_old_total / max(t_new_total, 1e-9):.1f}x"
+    )
+    return rows

@@ -1,10 +1,18 @@
 """Benchmark harness: one module per paper table/figure + roofline.
 
-Prints ``name,...`` CSV rows.  ``--full`` runs the paper-size (1k-endpoint)
-flow simulations (~5 min, cached afterwards).
+Prints ``name,...`` CSV rows by default.  ``--json [PATH]`` additionally
+emits one machine-readable JSON document (rows + wall-clock per suite — the
+seed of the ``BENCH_*.json`` perf trajectory) to PATH, or to stdout as the
+only output when PATH is omitted.
+
+``--full`` runs the paper-size (1k-endpoint) flow simulations — seconds on
+the vectorized engine (cached afterwards; the ``flowsim_micro`` suite also
+times the retained scalar oracle, which is what used to take ~5 min).
+``--scale N`` sweeps HxMesh alltoall/allreduce past 1k endpoints.
 """
 
 import argparse
+import json
 import sys
 import time
 
@@ -12,14 +20,20 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
-                    help="paper-size flowsim validation (slow, cached)")
+                    help="paper-size (1k-endpoint) flowsim validation")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="emit machine-readable results (to PATH, or stdout)")
+    ap.add_argument("--scale", type=int, default=0, metavar="N",
+                    help="flowsim endpoint-scale sweep up to N endpoints "
+                         "(adds the 'scale' suite; try 4096)")
     args = ap.parse_args()
 
     from benchmarks import (fig8_utilization, fig10_failures, fig13_allreduce,
-                            fig15_workloads, roofline, table2_bandwidth,
-                            table2_cost)
+                            fig15_workloads, flowsim_micro, roofline,
+                            table2_bandwidth, table2_cost)
 
     suites = {
         "table2_cost": lambda: table2_cost.run(),
@@ -29,21 +43,41 @@ def main() -> None:
         "fig13_allreduce": lambda: fig13_allreduce.run(),
         "fig15_workloads": lambda: fig15_workloads.run(),
         "roofline": lambda: roofline.run(),
+        "flowsim_micro": lambda: flowsim_micro.run(full=args.full),
     }
+    if args.scale:
+        suites["scale"] = lambda: table2_bandwidth.run_scale(args.scale)
     only = set(args.only.split(",")) if args.only else None
+    report = {"args": {"full": args.full, "scale": args.scale}, "suites": {}}
+    quiet = args.json == "-"
     for name, fn in suites.items():
         if only and name not in only:
             continue
         t0 = time.time()
         try:
             rows = fn()
+            err = None
         except Exception as e:  # noqa: BLE001
-            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            rows, err = [], f"{type(e).__name__}: {e}"
+            if not quiet:
+                print(f"{name},ERROR,{err}", flush=True)
+        dt = time.time() - t0
+        report["suites"][name] = {"rows": rows, "seconds": round(dt, 3)}
+        if err:
+            report["suites"][name]["error"] = err
             continue
-        for row in rows:
-            print(row, flush=True)
-        print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s",
+        if not quiet:
+            for row in rows:
+                print(row, flush=True)
+        print(f"# {name}: {len(rows)} rows in {dt:.1f}s",
               file=sys.stderr, flush=True)
+    if args.json == "-":
+        json.dump(report, sys.stdout, indent=2)
+        print()
+    elif args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"# json report -> {args.json}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -1,18 +1,23 @@
-"""Table II (bandwidth columns) via the flow-level simulator.
+"""Table II (bandwidth columns) via the vectorized flow-level simulator.
 
-Full-size (1,024-endpoint) alltoall sims take ~1 min each; pass
-``--full`` to benchmarks.run for the paper-size validation (results cached in
-results/flowsim_cache.json); the default uses 256-endpoint versions that
-preserve the structural ratios.
+All rows run on the vectorized engine (repro.core.flowsim): alltoall and
+ring-allreduce achievable fractions per topology.  ``--full`` runs the
+paper-size (1,024-endpoint) validation — seconds on the vectorized engine
+(the retained scalar oracle needs ~1 min *per topology*; see the
+``flowsim_micro`` suite for the measured old-vs-new ratio).  ``--scale N``
+sweeps HxMeshes well past 1k endpoints.  Results are cached in
+``results/flowsim_cache.json``.
 """
 
 import json
 import os
+import time
 
 from repro.core import flowsim as F
-from repro.core.hamiltonian import dual_cycles
+from repro.core import topology as T
 
 CACHE = "results/flowsim_cache.json"
+CACHE_VERSION = "v2"  # vectorized engine
 
 # paper Table II small-cluster values for reference
 PAPER = {
@@ -24,63 +29,83 @@ PAPER = {
 }
 
 
-def _gid(r, c, a, b, x, y):
-    by, i = divmod(r, b)
-    bx, j = divmod(c, a)
-    return ((by * x + bx) * b + i) * a + j
-
-
 def _cases(full: bool):
+    """Topology specs for build_network: (spec, links_per_endpoint)."""
     if full:
         return {
-            "Hx2Mesh": (F.build_hxmesh(2, 2, 16, 16), (2, 2, 16, 16), 4),
-            "Hx4Mesh": (F.build_hxmesh(4, 4, 8, 8), (4, 4, 8, 8), 4),
-            "nonbl. FT": (F.build_fat_tree(1024, 0.0), None, 1),
-            "50% tap. FT": (F.build_fat_tree(1050, 0.5), None, 1),
-            "2D torus": (F.build_torus(32, 32), "torus32", 4),
+            "Hx2Mesh": (T.HxMesh(2, 2, 16, 16), 4),
+            "Hx4Mesh": (T.HxMesh(4, 4, 8, 8), 4),
+            "nonbl. FT": (T.FatTree(1024, 0.0), 1),
+            "50% tap. FT": (T.FatTree(1050, 0.5), 1),
+            "2D torus": (T.Torus2D(16, 16), 4),
         }
     return {
-        "Hx2Mesh": (F.build_hxmesh(2, 2, 8, 8), (2, 2, 8, 8), 4),
-        "Hx4Mesh": (F.build_hxmesh(4, 4, 4, 4), (4, 4, 4, 4), 4),
-        "nonbl. FT": (F.build_fat_tree(256, 0.0), None, 1),
-        "50% tap. FT": (F.build_fat_tree(256, 0.5), None, 1),
-        "2D torus": (F.build_torus(16, 16), "torus16", 4),
+        "Hx2Mesh": (T.HxMesh(2, 2, 8, 8), 4),
+        "Hx4Mesh": (T.HxMesh(4, 4, 4, 4), 4),
+        "nonbl. FT": (T.FatTree(256, 0.0), 1),
+        "50% tap. FT": (T.FatTree(256, 0.5), 1),
+        "2D torus": (T.Torus2D(8, 8), 4),
     }
 
 
-def run(full: bool = False) -> list[str]:
-    cache = {}
+def _load_cache() -> dict:
     if os.path.exists(CACHE):
-        cache = json.load(open(CACHE))
+        return json.load(open(CACHE))
+    return {}
+
+
+def _store_cache(cache: dict) -> None:
+    os.makedirs(os.path.dirname(CACHE), exist_ok=True)
+    json.dump(cache, open(CACHE, "w"))
+
+
+def bandwidth_fractions(spec, links: int) -> tuple[float, float]:
+    """(alltoall, ring-allreduce) achievable fractions for one topology."""
+    net = F.build_network(spec)
+    a2a = F.achievable_fraction(net, F.traffic_matrix(net, "alltoall"), links)
+    ared = F.achievable_fraction(
+        net, F.traffic_matrix(net, "ring-allreduce"), links)
+    return a2a, ared
+
+
+def run(full: bool = False) -> list[str]:
+    cache = _load_cache()
     key_sfx = "full" if full else "reduced"
     rows = []
-    for name, (net, geom, links) in _cases(full).items():
-        key = f"{name}|{key_sfx}"
+    for name, (spec, links) in _cases(full).items():
+        key = f"{name}|{key_sfx}|{CACHE_VERSION}"
         if key in cache:
             a2a, ared = cache[key]
         else:
-            a2a = F.alltoall_fraction(net, links)
-            n = net.n_endpoints
-            if geom is None:
-                ring = F.ring_traffic(list(range(n)), 0.5)
-            elif isinstance(geom, str):
-                side = int(geom.removeprefix("torus"))
-                red, green = dual_cycles(side, side)
-                ring = F.ring_traffic([r * side + c for r, c in red], 0.25) + \
-                       F.ring_traffic([r * side + c for r, c in green], 0.25)
-            else:
-                a, b, x, y = geom
-                red, green = dual_cycles(b * y, a * x)
-                ring = F.ring_traffic([_gid(r, c, a, b, x, y) for r, c in red], 0.25) + \
-                       F.ring_traffic([_gid(r, c, a, b, x, y) for r, c in green], 0.25)
-            ared = F.achievable_fraction(net, ring, links)
+            a2a, ared = bandwidth_fractions(spec, links)
             cache[key] = (a2a, ared)
-            os.makedirs(os.path.dirname(CACHE), exist_ok=True)
-            json.dump(cache, open(CACHE, "w"))
+            _store_cache(cache)
         paper = PAPER.get(name, {})
         rows.append(
             f"table2_bw,{key_sfx},{name},alltoall={a2a:.3f}"
             f"(paper {paper.get('alltoall', '-')}),allreduce={ared:.3f}"
             f"(paper {paper.get('allreduce', '-')})"
         )
+    return rows
+
+
+def run_scale(max_endpoints: int = 4096) -> list[str]:
+    """Endpoint-count sweep past the paper's 1k cluster (the ``--scale``
+    mode): alltoall + ring-allreduce wall clock of the vectorized engine on
+    growing Hx4Meshes.  Infeasible on the scalar oracle (hours at 4k)."""
+    rows = []
+    x = 4
+    while True:
+        spec = T.HxMesh(4, 4, x, x)
+        n = spec.num_accelerators
+        if n > max_endpoints:
+            break
+        t0 = time.time()
+        a2a, ared = bandwidth_fractions(spec, 4)
+        dt = time.time() - t0
+        rows.append(
+            f"scale,{spec.name},endpoints={n},alltoall={a2a:.4f},"
+            f"allreduce={ared:.4f},seconds={dt:.2f}"
+        )
+        x *= 2
     return rows

@@ -34,6 +34,8 @@ from jax import lax
 from repro.core import commodel
 from repro.core import hamiltonian as ham
 
+from repro.launch import compat
+
 AxisName = str | tuple[str, ...]
 
 
@@ -103,7 +105,7 @@ def _dyn_set(out: jax.Array, i: jax.Array, val: jax.Array) -> jax.Array:
 def _ring_allreduce_1d(
     x: jax.Array, axis: str, reverse: bool = False
 ) -> jax.Array:
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     rank = lax.axis_index(axis)
     if reverse:
         rank = p - 1 - rank
@@ -128,7 +130,7 @@ def ring_allreduce(x: jax.Array, axis: str) -> jax.Array:
 
 def ring_reduce_scatter(x: jax.Array, axis: str) -> jax.Array:
     """Reduce-scatter returning this device's chunk (index = axis_index)."""
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     rank = lax.axis_index(axis)
     perm = _ring_perm(p)
     chunks, _ = _chunked(x, p)
@@ -139,7 +141,7 @@ def ring_reduce_scatter(x: jax.Array, axis: str) -> jax.Array:
 
 def ring_all_gather(x: jax.Array, axis: str) -> jax.Array:
     """All-gather of per-device chunks (chunk index = axis_index)."""
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     rank = lax.axis_index(axis)
     perm = _ring_perm(p)
     return _ring_all_gather(x, jnp.mod(rank - 1, p), p, perm, axis)
@@ -231,7 +233,7 @@ def torus_allreduce(
     """
 
     def one(inp: jax.Array, ax0: str, ax1: str) -> jax.Array:
-        p0 = lax.axis_size(ax0)
+        p0 = compat.axis_size(ax0)
         rank0 = lax.axis_index(ax0)
         perm0 = _ring_perm(p0)
         chunks, pad0 = _chunked(inp, p0)
@@ -319,7 +321,7 @@ def allreduce_tree(
     if mean:
         n = 1
         for ax in axes:
-            n *= lax.axis_size(ax)
+            n *= compat.axis_size(ax)
         total = total / n
     out = []
     off = 0

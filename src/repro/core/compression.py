@@ -16,6 +16,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.launch import compat
+
 
 class CompressionState(NamedTuple):
     """Error-feedback residual, one entry per parameter leaf."""
@@ -60,7 +62,7 @@ def sparse_allreduce(
     n = grad.size
     dense = jnp.zeros((n,), grad.dtype)
     dense = dense.at[all_idx.reshape(-1)].add(all_vals.reshape(-1))
-    d = jax.lax.axis_size(axis_name)
+    d = compat.axis_size(axis_name)
     return (dense / d).reshape(grad.shape), new_state
 
 

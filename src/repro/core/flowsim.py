@@ -1,13 +1,45 @@
-"""Flow-level bandwidth simulator (replaces the paper's SST packet sims).
+"""Vectorized flow-level bandwidth simulator (replaces the paper's SST sims).
 
 The paper evaluates topologies with packet-level SST simulations (§V-A).  On
-CPU we instead bound achievable bandwidth with a *flow-level* model: build the
-link graph, route traffic over shortest paths with ideal ECMP (path-count
-proportional splitting — the fluid limit of per-packet adaptive routing), and
-report ``1 / max_link_load`` as the achievable fraction of injection
-bandwidth.  This reproduces the steady-state large-message results of
-Table II / Figs 11-13 to first order; packet-level effects (adaptive-routing
-overhead, buffer occupancy) are documented as out of scope in DESIGN.md.
+CPU we instead bound achievable bandwidth with a *flow-level* model: route
+traffic over shortest paths with ideal ECMP (path-count-proportional
+splitting — the fluid limit of per-packet adaptive routing) and report
+``1 / max_link_load`` as the achievable fraction of injection bandwidth.
+This reproduces the steady-state large-message results of Table II /
+Figs 11-13 to first order; packet-level effects are out of scope.
+
+Engine
+------
+The engine is fully vectorized over sources and links (no per-source Python
+BFS — that implementation survives as :mod:`repro.core.flowsim_oracle` and is
+used by the equivalence tests):
+
+1. **Batched all-sources shortest paths** — level-synchronous BFS over a CSR
+   adjacency matrix: one sparse ``frontier @ A`` per distance level computes
+   distances *and* shortest-path counts for a whole chunk of sources at once
+   (parallel links count as multiple paths via integer edge multiplicities).
+2. **Batched ECMP link loads** — a Brandes-style backward sweep.  For source
+   ``s`` define the downstream demand potential
+   ``φ_s(v) = Σ_t vol(s,t)·Np(v,t)/Np(s,t)·1[v on an s→t shortest path]``;
+   it satisfies ``φ_s(v) = vol(s,v)/Np(s,v) + Σ_w m(v,w)·φ_s(w)`` over
+   *downhill* neighbors ``w`` (``D[s,w] = D[s,v]+1``), and the per-link ECMP
+   load of a directed edge ``(u,v)`` is ``Np(s,u)·φ_s(v)``.  Both the sweep
+   and the final per-edge reduction are single batched scatter/gather passes
+   over the edge arrays — no nested Python loops.
+
+Sources are processed in chunks (``source_chunk``) so paper-scale (1k+) and
+``--scale`` sweeps (4k+ endpoints) stay within memory.  ``backend="jax"``
+runs the same algorithm with dense ``jnp`` matmuls for device execution.
+
+Topologies & traffic
+--------------------
+``build_network(topo, failures=...)`` is the uniform entry point: it accepts
+an already-built :class:`Network` or a :mod:`repro.core.topology` spec
+(``HxMesh``, ``FatTree``, ``Torus2D``, ``Dragonfly``) and applies failure
+descriptors (node ids, ``("board", bx, by)``, ``("link", u, v)``).  Traffic
+matrices come from :func:`traffic_matrix` with pluggable patterns —
+``uniform``/``alltoall``, ``bit-complement``, ``ring-allreduce`` (dual
+edge-disjoint Hamiltonian rings where the geometry supports them).
 
 Graphs model ONE plane (as the paper simulates): every accelerator has 4
 links (E/W/N/S) in an HxMesh plane, or 1 uplink in a fat-tree plane.  All
@@ -21,13 +53,24 @@ from collections import defaultdict
 
 import numpy as np
 
+try:
+    import scipy.sparse as _sp
+except ImportError:  # pragma: no cover - scipy ships with the toolchain
+    _sp = None
+
 
 @dataclasses.dataclass
 class Network:
-    """Undirected multigraph with unit-bandwidth links."""
+    """Undirected multigraph with unit-bandwidth links.
+
+    ``adj`` maps node -> neighbor list; parallel links are repeated entries.
+    ``meta`` records builder geometry (used by geometry-aware traffic
+    patterns and board-level failure injection).
+    """
 
     n_endpoints: int  # endpoints are node ids [0, n_endpoints)
     adj: dict[int, list[int]]  # node -> neighbor list (parallel links allowed)
+    meta: dict = dataclasses.field(default_factory=dict)
 
     @property
     def n_nodes(self) -> int:
@@ -40,132 +83,280 @@ class Network:
                 edges.append((u, v))
         return np.array(edges, dtype=np.int64)
 
+    def directed_edges(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Unique *directed* edges as arrays ``(U, V, M)`` with multiplicity
+        ``M`` (each undirected link appears once per direction)."""
+        if getattr(self, "_edge_cache", None) is None:
+            counts: dict[tuple[int, int], int] = defaultdict(int)
+            for u, nbrs in self.adj.items():
+                for v in nbrs:
+                    counts[(u, v)] += 1
+            if counts:
+                uv = np.array(sorted(counts), dtype=np.int64)
+                m = np.array([counts[(int(a), int(b))] for a, b in uv],
+                             dtype=np.float64)
+                self._edge_cache = (uv[:, 0], uv[:, 1], m)
+            else:
+                z = np.zeros(0, dtype=np.int64)
+                self._edge_cache = (z, z, np.zeros(0))
+        return self._edge_cache
 
-def _bfs_dist_paths(net: Network, src: int) -> tuple[np.ndarray, np.ndarray]:
-    """BFS distances and shortest-path counts from ``src`` (parallel links
-    count as multiple paths)."""
+    def csr_adjacency(self):
+        """Multiplicity-weighted adjacency as a scipy CSR matrix (or ``None``
+        when scipy is unavailable — the engine falls back to scatter-adds)."""
+        if _sp is None:
+            return None
+        if getattr(self, "_csr_cache", None) is None:
+            u, v, m = self.directed_edges()
+            n = self.n_nodes
+            self._csr_cache = _sp.csr_matrix((m, (u, v)), shape=(n, n))
+        return self._csr_cache
+
+    def active_endpoints(self) -> np.ndarray:
+        """Endpoints that still have at least one link (failures isolate
+        nodes rather than renumbering them)."""
+        return np.array(
+            [e for e in range(self.n_endpoints) if self.adj.get(e)],
+            dtype=np.int64,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized engine
+# ---------------------------------------------------------------------------
+
+
+def shortest_paths(
+    net: Network, sources=None, backend: str = "numpy"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched BFS distances and shortest-path counts.
+
+    Returns ``(D, Np)`` of shape ``(len(sources), n_nodes)`` — ``D`` is -1
+    where unreachable.  One sparse ``frontier @ A`` per distance level
+    replaces the per-source Python BFS of the oracle.
+    """
+    srcs = np.asarray(
+        sources if sources is not None else np.arange(net.n_endpoints),
+        dtype=np.int64,
+    )
+    if backend == "jax":
+        return _shortest_paths_jax(net, srcs)
     n = net.n_nodes
-    dist = np.full(n, -1, dtype=np.int64)
-    paths = np.zeros(n, dtype=np.float64)
-    dist[src] = 0
-    paths[src] = 1.0
-    frontier = [src]
+    s = len(srcs)
+    A = net.csr_adjacency()
+    U, V, M = net.directed_edges()
+    D = np.full((s, n), -1, dtype=np.int32)
+    Np = np.zeros((s, n), dtype=np.float64)
+    rows = np.arange(s)
+    D[rows, srcs] = 0
+    Np[rows, srcs] = 1.0
+    frontier = np.zeros((s, n), dtype=np.float64)
+    frontier[rows, srcs] = 1.0
     d = 0
-    while frontier:
-        nxt: dict[int, float] = defaultdict(float)
-        for u in frontier:
-            pu = paths[u]
-            for v in net.adj[u]:
-                if dist[v] == -1 or dist[v] == d + 1:
-                    nxt[v] += pu
-        frontier = []
-        for v, c in nxt.items():
-            if dist[v] == -1:
-                dist[v] = d + 1
-                frontier.append(v)
-            paths[v] += c if dist[v] == d + 1 else 0.0
+    while True:
+        if A is not None:
+            nxt = np.asarray(frontier @ A)
+        else:  # scatter-add fallback (no scipy)
+            nxt = np.zeros_like(frontier)
+            np.add.at(nxt.T, V, (frontier[:, U] * M).T)
+        new = (D == -1) & (nxt > 0)
+        if not new.any():
+            break
         d += 1
-    return dist, paths
-
-
-def all_pairs(net: Network, sources: list[int] | None = None):
-    srcs = sources if sources is not None else list(range(net.n_endpoints))
-    D = np.zeros((len(srcs), net.n_nodes), dtype=np.int64)
-    Np = np.zeros((len(srcs), net.n_nodes), dtype=np.float64)
-    for i, s in enumerate(srcs):
-        D[i], Np[i] = _bfs_dist_paths(net, s)
+        D[new] = d
+        Np[new] = nxt[new]
+        frontier = np.where(new, nxt, 0.0)
     return D, Np
 
 
-def link_loads(
+def edge_loads(
     net: Network,
-    traffic: list[tuple[int, int, float]],
-    D: np.ndarray,
-    Np: np.ndarray,
-    src_index: dict[int, int],
-) -> dict[tuple[int, int], float]:
-    """Edge loads under path-count-proportional ECMP splitting.
+    traffic: np.ndarray,
+    sources=None,
+    source_chunk: int = 512,
+    backend: str = "numpy",
+) -> np.ndarray:
+    """Per-link ECMP loads for a dense traffic matrix, batched over sources.
 
-    share(s→t over edge (u,v)) = N(s,u)·N(v,t)/N(s,t) if the edge lies on a
-    shortest path.  Requires D/Np rows for every src and dst in ``traffic``
-    (undirected graph → N(v,t)=N(t,v), D(v,t)=D(t,v)).
+    ``traffic`` is ``(S, n_endpoints)`` demand volumes for the given
+    ``sources`` (default: all endpoints, i.e. a full ``(n_e, n_e)`` matrix).
+    Returns loads aligned with ``net.directed_edges()`` — the load carried by
+    *one* link of each parallel bundle (parallel links split evenly, so the
+    bundle max equals the per-link value).
     """
-    loads: dict[tuple[int, int], float] = defaultdict(float)
-    for s, t, vol in traffic:
-        si, ti = src_index[s], src_index[t]
-        dst = D[si, t]
-        if dst <= 0:
-            continue
-        nst = Np[si, t]
-        # walk the DAG: for each directed edge (u,v) with D[s,u]+1+D[t,v]==dst.
-        # Parallel links each carry the same per-link share (path counts Np
-        # already include the multiplicity), so iterate unique neighbors.
-        for u in np.where(D[si] < dst)[0]:
-            du = D[si, u]
-            for v in set(net.adj[u]):
-                if D[ti, v] == dst - du - 1 and D[si, v] == du + 1:
-                    loads[(int(u), v)] += vol * Np[si, u] * Np[ti, v] / nst
+    srcs = np.asarray(
+        sources if sources is not None else np.arange(net.n_endpoints),
+        dtype=np.int64,
+    )
+    traffic = np.asarray(traffic, dtype=np.float64)
+    assert traffic.shape == (len(srcs), net.n_endpoints), traffic.shape
+    U, V, M = net.directed_edges()
+    loads = np.zeros(len(U), dtype=np.float64)
+    source_chunk = max(1, source_chunk)
+    for lo in range(0, len(srcs), source_chunk):
+        hi = min(lo + source_chunk, len(srcs))
+        loads += _edge_loads_chunk(
+            net, srcs[lo:hi], traffic[lo:hi], U, V, M, backend
+        )
     return loads
+
+
+def _edge_loads_chunk(net, srcs, T, U, V, M, backend):
+    if backend == "jax":
+        return _edge_loads_chunk_jax(net, srcs, T, U, V, M)
+    n = net.n_nodes
+    s = len(srcs)
+    D, Np = shortest_paths(net, srcs)
+    # φ init: per-destination demand / total path count (0 where unreachable
+    # or self-traffic; endpoints only — switches have no demand).
+    vol = np.zeros((s, n), dtype=np.float64)
+    vol[:, : net.n_endpoints] = T
+    vol[np.arange(s), srcs] = 0.0
+    reach = (D >= 0) & (Np > 0)
+    phi = np.where(reach, vol / np.where(Np == 0.0, 1.0, Np), 0.0)
+    # Backward sweep over distance levels (deepest first).  Group the
+    # (source, downhill-edge) pairs by the source-side level once, then each
+    # level is one scatter-add — no per-level full-mask rescans.
+    DU = D[:, U]
+    downhill = (D[:, V] == DU + 1) & (DU >= 0)
+    si, ei = np.nonzero(downhill)
+    if len(si):
+        lev = DU[si, ei]
+        order = np.argsort(lev, kind="stable")
+        si, ei, lev = si[order], ei[order], lev[order]
+        bounds = np.searchsorted(lev, np.arange(int(lev[-1]) + 2))
+        for d in range(int(lev[-1]), -1, -1):
+            a, b = bounds[d], bounds[d + 1]
+            if a == b:
+                continue
+            np.add.at(
+                phi,
+                (si[a:b], U[ei[a:b]]),
+                M[ei[a:b]] * phi[si[a:b], V[ei[a:b]]],
+            )
+    # Per-link load of edge (u,v): Σ_s Np[s,u]·φ_s(v) over downhill pairs.
+    return np.einsum("se,se->e", Np[:, U] * downhill, phi[:, V])
+
+
+def max_link_load(
+    net: Network,
+    traffic,
+    sources=None,
+    source_chunk: int = 512,
+    backend: str = "numpy",
+) -> float:
+    """Max per-link load for a traffic matrix or ``(s, t, vol)`` triple list
+    — the engine's headline quantity (one batched pass, no Python loops over
+    sources or links)."""
+    traffic, sources = _coerce_traffic(net, traffic, sources)
+    loads = edge_loads(net, traffic, sources, source_chunk, backend)
+    return float(loads.max()) if len(loads) else 0.0
 
 
 def achievable_fraction(
     net: Network,
-    traffic: list[tuple[int, int, float]],
+    traffic,
     links_per_endpoint: int = 1,
+    source_chunk: int = 512,
+    backend: str = "numpy",
 ) -> float:
     """Achievable fraction of *injection bandwidth*.
 
     Traffic volumes are normalized so each source's total demand is 1.  With
     ``L`` unit-bandwidth links per endpoint, injection bandwidth is L, the
     sustainable per-source rate is 1/max_load, and the reported fraction is
-    ``1 / (max_load * L)`` (capped at 1).
+    ``1 / (max_load * L)`` (capped at 1).  ``traffic`` may be a dense matrix
+    or the legacy ``[(src, dst, vol), ...]`` triple list.
     """
-    nodes = sorted({s for s, _, _ in traffic} | {t for _, t, _ in traffic})
-    D, Np = all_pairs(net, nodes)
-    idx = {n: i for i, n in enumerate(nodes)}
-    loads = link_loads(net, traffic, D, Np, idx)
-    mx = max(loads.values()) if loads else 0.0
+    mx = max_link_load(net, traffic, None, source_chunk, backend)
     if mx <= 0:
         return 1.0
     return min(1.0, 1.0 / (mx * links_per_endpoint))
 
 
-def all_pairs_full(net: Network) -> tuple[np.ndarray, np.ndarray]:
-    """BFS distances/path-counts from *every* node (for exact alltoall)."""
-    return all_pairs(net, sources=list(range(net.n_nodes)))
+def alltoall_fraction(
+    net: Network,
+    links_per_endpoint: int = 1,
+    source_chunk: int = 512,
+    backend: str = "numpy",
+) -> float:
+    """Exact uniform-alltoall achievable fraction of injection bandwidth."""
+    return achievable_fraction(
+        net, traffic_matrix(net, "alltoall"), links_per_endpoint,
+        source_chunk, backend,
+    )
 
 
-def alltoall_fraction(net: Network, links_per_endpoint: int = 1) -> float:
-    """Exact uniform-alltoall achievable fraction of injection bandwidth.
+def _coerce_traffic(net, traffic, sources):
+    """Accept a dense (S, n_e) matrix (with explicit ``sources``), a full
+    (n_e, n_e) matrix, or a legacy triple list."""
+    if isinstance(traffic, np.ndarray):
+        if sources is None:
+            assert traffic.shape[0] == net.n_endpoints
+        return traffic, sources
+    T = np.zeros((net.n_endpoints, net.n_endpoints), dtype=np.float64)
+    for s, t, vol in traffic:
+        if s != t:
+            T[s, t] += vol
+    used = np.nonzero(T.any(axis=1))[0]
+    return T[used], used
 
-    Vectorized over (source, destination) pairs per edge:
-    load(u→v) = Σ_{s,t} 1[D(s,u)+1+D(v,t)=D(s,t)] · Np(s,u)Np(v,t)/Np(s,t)
-    with per-source demand 1 split uniformly over n-1 destinations.
-    """
-    n = net.n_endpoints
-    D, Np = all_pairs_full(net)
-    ep = np.arange(n)
-    Dst = D[:n][:, :n].astype(np.float64)  # D[s,t]
-    Nst = Np[:n][:, :n]
-    np.fill_diagonal(Nst, 1.0)  # avoid 0/0 on the diagonal (masked anyway)
-    inv_nst = 1.0 / Nst
-    demand = 1.0 / (n - 1)
-    max_load = 0.0
-    seen = set()
-    for u, nbrs in net.adj.items():
-        for v in set(nbrs):
-            if (u, v) in seen:
-                continue
-            seen.add((u, v))
-            # mask[s,t] : edge (u,v) on a shortest s→t path
-            mask = (D[:n, u][:, None] + 1 + D[v, :n][None, :]) == Dst
-            share = Np[:n, u][:, None] * Np[v, :n][None, :] * inv_nst
-            load = float((mask * share).sum()) * demand
-            if load > max_load:
-                max_load = load
-    if max_load <= 0:
-        return 1.0
-    return min(1.0, 1.0 / (max_load * links_per_endpoint))
+
+# ---------------------------------------------------------------------------
+# Optional JAX backend (device execution of the same algorithm)
+# ---------------------------------------------------------------------------
+
+
+def _dense_adjacency(net: Network) -> np.ndarray:
+    u, v, m = net.directed_edges()
+    a = np.zeros((net.n_nodes, net.n_nodes), dtype=np.float32)
+    a[u, v] = m
+    return a
+
+
+def _shortest_paths_jax(net: Network, srcs: np.ndarray):
+    import jax.numpy as jnp
+
+    n = net.n_nodes
+    s = len(srcs)
+    A = jnp.asarray(_dense_adjacency(net))
+    D = jnp.full((s, n), -1, dtype=jnp.int32).at[jnp.arange(s), srcs].set(0)
+    Np = jnp.zeros((s, n), dtype=jnp.float32).at[jnp.arange(s), srcs].set(1.0)
+    frontier = jnp.zeros((s, n), dtype=jnp.float32).at[
+        jnp.arange(s), srcs].set(1.0)
+    d = 0
+    while True:
+        nxt = frontier @ A
+        new = (D == -1) & (nxt > 0)
+        if not bool(new.any()):
+            break
+        d += 1
+        D = jnp.where(new, d, D)
+        Np = jnp.where(new, nxt, Np)
+        frontier = jnp.where(new, nxt, 0.0)
+    return np.asarray(D), np.asarray(Np, dtype=np.float64)
+
+
+def _edge_loads_chunk_jax(net, srcs, T, U, V, M):
+    import jax.numpy as jnp
+
+    n = net.n_nodes
+    s = len(srcs)
+    D, Np = _shortest_paths_jax(net, srcs)
+    D, Np = jnp.asarray(D), jnp.asarray(Np)
+    vol = jnp.zeros((s, n)).at[:, : net.n_endpoints].set(jnp.asarray(T))
+    vol = vol.at[jnp.arange(s), jnp.asarray(srcs)].set(0.0)
+    reach = (D >= 0) & (Np > 0)
+    phi = jnp.where(reach, vol / jnp.where(Np == 0.0, 1.0, Np), 0.0)
+    Uj, Vj, Mj = jnp.asarray(U), jnp.asarray(V), jnp.asarray(M)
+    DU = D[:, Uj]
+    downhill = (D[:, Vj] == DU + 1) & (DU >= 0)
+    dmax = int(D.max())
+    for d in range(dmax - 1, -1, -1):
+        upd = jnp.where(downhill & (DU == d), Mj[None, :] * phi[:, Vj], 0.0)
+        phi = phi.at[:, Uj].add(upd)
+    loads = ((Np[:, Uj] * downhill) * phi[:, Vj]).sum(axis=0)
+    return np.asarray(loads, dtype=np.float64)
 
 
 # ---------------------------------------------------------------------------
@@ -230,7 +421,11 @@ def build_hxmesh(a: int, b: int, x: int, y: int) -> Network:
                 so = acc(bx, by, b - 1, j)
                 adj[no].append(sw), adj[sw].append(no)
                 adj[so].append(sw), adj[sw].append(so)
-    return Network(n_endpoints=n, adj=dict(adj))
+    return Network(
+        n_endpoints=n, adj=dict(adj),
+        meta={"kind": "hxmesh", "a": a, "b": b, "x": x, "y": y,
+              "links_per_endpoint": 4},
+    )
 
 
 def build_fat_tree(n: int, taper: float = 0.0, ports: int = 64) -> Network:
@@ -248,7 +443,10 @@ def build_fat_tree(n: int, taper: float = 0.0, ports: int = 64) -> Network:
         for u in range(up):
             core = n + l1 + (i * up + u) % l2
             adj[sw].append(core), adj[core].append(sw)
-    return Network(n_endpoints=n, adj=dict(adj))
+    return Network(
+        n_endpoints=n, adj=dict(adj),
+        meta={"kind": "fat_tree", "taper": taper, "links_per_endpoint": 1},
+    )
 
 
 def build_torus(side_x: int, side_y: int) -> Network:
@@ -265,11 +463,233 @@ def build_torus(side_x: int, side_y: int) -> Network:
             for v in (nid(i, (j + 1) % side_x), nid((i + 1) % side_y, j)):
                 adj[u].append(v)
                 adj[v].append(u)
-    return Network(n_endpoints=n, adj=dict(adj))
+    return Network(
+        n_endpoints=n, adj=dict(adj),
+        meta={"kind": "torus", "side_x": side_x, "side_y": side_y,
+              "links_per_endpoint": 4},
+    )
+
+
+def build_dragonfly(a: int, p: int, h: int, groups: int) -> Network:
+    """Canonical Dragonfly plane (Kim et al.): ``groups`` groups of ``a``
+    routers, ``p`` terminals and ``h`` global links per router, complete
+    intra-group graph, one-level global wiring.
+
+    Global links per group (``a*h``) must be a multiple of ``groups - 1``;
+    the j-th link of pair (g, g') lands on router ``(peer_index*k + j) // h``
+    of each side, keeping every router's global degree exactly ``h``.
+    """
+    if groups > 1:
+        assert (a * h) % (groups - 1) == 0, "a*h must divide into group pairs"
+    k = (a * h) // (groups - 1) if groups > 1 else 0
+    n = a * p * groups
+    adj: dict[int, list[int]] = defaultdict(list)
+
+    def router(g: int, r: int) -> int:
+        return n + g * a + r
+
+    for g in range(groups):
+        for r in range(a):
+            sw = router(g, r)
+            for t in range(p):  # terminals
+                e = (g * a + r) * p + t
+                adj[e].append(sw), adj[sw].append(e)
+            for r2 in range(r + 1, a):  # intra-group complete graph
+                adj[sw].append(router(g, r2))
+                adj[router(g, r2)].append(sw)
+    for g in range(groups):  # global links, counted once per pair
+        for g2 in range(g + 1, groups):
+            for j in range(k):
+                r1 = ((g2 - 1) * k + j) // h
+                r2 = (g * k + j) // h
+                adj[router(g, r1)].append(router(g2, r2))
+                adj[router(g2, r2)].append(router(g, r1))
+    return Network(
+        n_endpoints=n, adj=dict(adj),
+        meta={"kind": "dragonfly", "a": a, "p": p, "h": h, "groups": groups,
+              "links_per_endpoint": 1},
+    )
 
 
 # ---------------------------------------------------------------------------
-# Traffic patterns
+# Uniform entry point: topology spec + failures -> Network
+# ---------------------------------------------------------------------------
+
+
+def build_network(topo, failures=()) -> Network:
+    """Build the one-plane link graph for a topology spec and apply failures.
+
+    ``topo`` is a :class:`Network` (used as-is) or a
+    :mod:`repro.core.topology` spec: ``HxMesh``, ``FatTree``, ``Torus2D`` or
+    ``Dragonfly``.  ``failures`` is an iterable of descriptors:
+
+    * ``int`` — node id (endpoint or switch) whose links are all removed,
+    * ``("board", bx, by)`` — every accelerator of that board (HxMesh /
+      Torus2D geometry from ``net.meta``),
+    * ``("link", u, v)`` — one parallel link between ``u`` and ``v``.
+
+    Failed endpoints stay in the id space but become isolated; traffic
+    generators consult :meth:`Network.active_endpoints`.
+    """
+    from repro.core import topology as T
+
+    if isinstance(topo, Network):
+        base = topo
+    elif isinstance(topo, T.HxMesh):
+        base = build_hxmesh(topo.a, topo.b, topo.x, topo.y)
+    elif isinstance(topo, T.FatTree):
+        base = build_fat_tree(topo.num_accelerators, topo.taper)
+    elif isinstance(topo, T.Torus2D):
+        base = build_torus(topo.boards_x * topo.board, topo.boards_y * topo.board)
+        base.meta["board"] = topo.board
+    elif isinstance(topo, T.Dragonfly):
+        base = build_dragonfly(topo.a, topo.p, topo.h, topo.groups)
+    else:
+        raise TypeError(f"unsupported topology spec: {type(topo).__name__}")
+    if not failures:
+        return base
+
+    adj = {u: list(nbrs) for u, nbrs in base.adj.items()}
+    dead: set[int] = set()
+    for f in failures:
+        if isinstance(f, (int, np.integer)):
+            dead.add(int(f))
+        elif f[0] == "node":
+            dead.add(int(f[1]))
+        elif f[0] == "board":
+            dead.update(board_nodes(base, int(f[1]), int(f[2])))
+        elif f[0] == "link":
+            u, v = int(f[1]), int(f[2])
+            if v in adj.get(u, ()):
+                adj[u].remove(v)
+                adj[v].remove(u)
+        else:
+            raise ValueError(f"unknown failure descriptor: {f!r}")
+    for u in dead:
+        for v in adj.get(u, ()):
+            adj[v] = [w for w in adj[v] if w != u]
+        adj[u] = []
+    return Network(n_endpoints=base.n_endpoints, adj=adj, meta=dict(base.meta))
+
+
+def board_nodes(net: Network, bx: int, by: int) -> list[int]:
+    """Accelerator node ids of board ``(bx, by)`` (HxMesh board-major ids;
+    for a plain torus, the 2x2-board tiling of the paper's comparison)."""
+    meta = net.meta
+    if meta.get("kind") == "hxmesh":
+        a, b, x = meta["a"], meta["b"], meta["x"]
+        base = (by * x + bx) * a * b
+        return list(range(base, base + a * b))
+    if meta.get("kind") == "torus":
+        side_x = meta["side_x"]
+        bd = meta.get("board", 2)
+        return [
+            (by * bd + i) * side_x + (bx * bd + j)
+            for i in range(bd) for j in range(bd)
+        ]
+    raise ValueError("board failures need hxmesh/torus geometry in net.meta")
+
+
+# ---------------------------------------------------------------------------
+# Traffic patterns (pluggable generators -> dense matrices)
+# ---------------------------------------------------------------------------
+
+
+def _uniform_matrix(net: Network, **_kw) -> np.ndarray:
+    n = net.n_endpoints
+    act = net.active_endpoints()
+    T = np.zeros((n, n))
+    if len(act) > 1:
+        T[np.ix_(act, act)] = 1.0 / (len(act) - 1)
+        T[act, act] = 0.0
+    return T
+
+
+def _bit_complement_matrix(net: Network, volume: float = 1.0, **_kw):
+    """Endpoint ``s`` sends to its reversal partner ``n-1-s`` — for
+    power-of-two ``n`` this is exactly the classic bit-complement pattern
+    (``n-1-s == s XOR (n-1)``, the worst case for dimension-ordered meshes);
+    for other sizes it degrades to plain endpoint reversal."""
+    n = net.n_endpoints
+    act = set(net.active_endpoints().tolist())
+    T = np.zeros((n, n))
+    for s in act:
+        t = n - 1 - s
+        if t != s and t in act:
+            T[s, t] = volume
+    return T
+
+
+def _ring_allreduce_matrix(net: Network, volume: float | None = None, **_kw):
+    """Steady-state neighbor traffic of ring allreduce.
+
+    Uses the two edge-disjoint Hamiltonian cycles of the virtual torus when
+    the geometry supports them (HxMesh / torus metadata, no failures) —
+    volume 0.25 per direction per ring so total injection is 1 — else a
+    single bidirectional ring over the active endpoints at volume 0.5.
+    """
+    from repro.core import hamiltonian as ham
+
+    meta = net.meta
+    n = net.n_endpoints
+    act = net.active_endpoints()
+    rings: list[tuple[list[int], float]] = []
+    if len(act) == n and meta.get("kind") in ("hxmesh", "torus"):
+        if meta["kind"] == "hxmesh":
+            r, c = meta["b"] * meta["y"], meta["a"] * meta["x"]
+
+            def gid(rr, cc):
+                by, i = divmod(rr, meta["b"])
+                bx, j = divmod(cc, meta["a"])
+                return ((by * meta["x"] + bx) * meta["b"] + i) * meta["a"] + j
+        else:
+            r, c = meta["side_y"], meta["side_x"]
+
+            def gid(rr, cc):
+                return rr * meta["side_x"] + cc
+
+        try:
+            red, green = ham.dual_cycles(r, c)
+            v = 0.25 if volume is None else volume
+            rings = [([gid(rr, cc) for rr, cc in red], v),
+                     ([gid(rr, cc) for rr, cc in green], v)]
+        except ValueError:
+            pass
+    if not rings:
+        order = act.tolist()
+        rings = [(order, 0.5 if volume is None else volume)]
+    T = np.zeros((n, n))
+    for order, v in rings:
+        for k in range(len(order)):
+            u, w = order[k], order[(k + 1) % len(order)]
+            T[u, w] += v
+            T[w, u] += v
+    return T
+
+
+TRAFFIC_PATTERNS = {
+    "uniform": _uniform_matrix,
+    "alltoall": _uniform_matrix,
+    "bit-complement": _bit_complement_matrix,
+    "ring-allreduce": _ring_allreduce_matrix,
+}
+
+
+def traffic_matrix(net: Network, pattern: str, **kw) -> np.ndarray:
+    """Dense ``(n_endpoints, n_endpoints)`` demand matrix for a named
+    pattern (see :data:`TRAFFIC_PATTERNS`)."""
+    try:
+        gen = TRAFFIC_PATTERNS[pattern]
+    except KeyError:
+        raise ValueError(
+            f"unknown traffic pattern {pattern!r}; "
+            f"have {sorted(TRAFFIC_PATTERNS)}"
+        ) from None
+    return gen(net, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Legacy triple-list generators (oracle interface / back-compat)
 # ---------------------------------------------------------------------------
 
 

@@ -1,0 +1,161 @@
+"""Reference scalar flow-level simulator (the pre-vectorization engine).
+
+This is the original per-source Python-BFS implementation, retained verbatim
+as a correctness *oracle* for :mod:`repro.core.flowsim` (the vectorized
+engine).  Equivalence tests (tests/test_flowsim_vec.py) assert that both
+engines produce identical max-link-loads / achievable fractions on every
+reference topology; the ``flowsim_micro`` benchmark times one against the
+other.  Do not optimize this module — its value is being simple and slow.
+
+Semantics (shared with the vectorized engine):
+
+* unit-bandwidth undirected links, parallel links allowed,
+* shortest-path routing with ideal ECMP (path-count-proportional splitting),
+* achievable fraction of injection bandwidth = ``1 / (max_link_load * L)``
+  for ``L`` links per endpoint, capped at 1.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core.flowsim import Network
+
+
+def _bfs_dist_paths(net: Network, src: int) -> tuple[np.ndarray, np.ndarray]:
+    """BFS distances and shortest-path counts from ``src`` (parallel links
+    count as multiple paths)."""
+    n = net.n_nodes
+    dist = np.full(n, -1, dtype=np.int64)
+    paths = np.zeros(n, dtype=np.float64)
+    dist[src] = 0
+    paths[src] = 1.0
+    frontier = [src]
+    d = 0
+    while frontier:
+        nxt: dict[int, float] = defaultdict(float)
+        for u in frontier:
+            pu = paths[u]
+            for v in net.adj.get(u, ()):
+                if dist[v] == -1 or dist[v] == d + 1:
+                    nxt[v] += pu
+        frontier = []
+        for v, c in nxt.items():
+            if dist[v] == -1:
+                dist[v] = d + 1
+                frontier.append(v)
+            paths[v] += c if dist[v] == d + 1 else 0.0
+        d += 1
+    return dist, paths
+
+
+def all_pairs(net: Network, sources: list[int] | None = None):
+    srcs = sources if sources is not None else list(range(net.n_endpoints))
+    D = np.zeros((len(srcs), net.n_nodes), dtype=np.int64)
+    Np = np.zeros((len(srcs), net.n_nodes), dtype=np.float64)
+    for i, s in enumerate(srcs):
+        D[i], Np[i] = _bfs_dist_paths(net, s)
+    return D, Np
+
+
+def link_loads(
+    net: Network,
+    traffic: list[tuple[int, int, float]],
+    D: np.ndarray,
+    Np: np.ndarray,
+    src_index: dict[int, int],
+) -> dict[tuple[int, int], float]:
+    """Edge loads under path-count-proportional ECMP splitting.
+
+    share(s→t over edge (u,v)) = N(s,u)·N(v,t)/N(s,t) if the edge lies on a
+    shortest path.  Requires D/Np rows for every src and dst in ``traffic``
+    (undirected graph → N(v,t)=N(t,v), D(v,t)=D(t,v)).
+    """
+    loads: dict[tuple[int, int], float] = defaultdict(float)
+    for s, t, vol in traffic:
+        si, ti = src_index[s], src_index[t]
+        dst = D[si, t]
+        if dst <= 0:
+            continue
+        nst = Np[si, t]
+        # walk the DAG: for each directed edge (u,v) with D[s,u]+1+D[t,v]==dst.
+        # Parallel links each carry the same per-link share (path counts Np
+        # already include the multiplicity), so iterate unique neighbors.
+        for u in np.where(D[si] < dst)[0]:
+            du = D[si, u]
+            if du < 0:
+                continue
+            for v in set(net.adj.get(int(u), ())):
+                if D[ti, v] == dst - du - 1 and D[si, v] == du + 1:
+                    loads[(int(u), v)] += vol * Np[si, u] * Np[ti, v] / nst
+    return loads
+
+
+def matrix_to_triples(traffic) -> list[tuple[int, int, float]]:
+    """Dense (S, n) demand matrix -> the oracle's ``(src, dst, vol)`` list."""
+    return [
+        (s, int(t), float(row[t]))
+        for s, row in enumerate(np.asarray(traffic))
+        for t in np.nonzero(row)[0]
+    ]
+
+
+def max_link_load(net: Network, traffic: list[tuple[int, int, float]]) -> float:
+    """Scalar reference for the vectorized engine's headline quantity."""
+    nodes = sorted({s for s, _, _ in traffic} | {t for _, t, _ in traffic})
+    D, Np = all_pairs(net, nodes)
+    idx = {n: i for i, n in enumerate(nodes)}
+    loads = link_loads(net, traffic, D, Np, idx)
+    return max(loads.values()) if loads else 0.0
+
+
+def achievable_fraction(
+    net: Network,
+    traffic: list[tuple[int, int, float]],
+    links_per_endpoint: int = 1,
+) -> float:
+    """Achievable fraction of *injection bandwidth* (see flowsim docstring)."""
+    mx = max_link_load(net, traffic)
+    if mx <= 0:
+        return 1.0
+    return min(1.0, 1.0 / (mx * links_per_endpoint))
+
+
+def all_pairs_full(net: Network) -> tuple[np.ndarray, np.ndarray]:
+    """BFS distances/path-counts from *every* node (for exact alltoall)."""
+    return all_pairs(net, sources=list(range(net.n_nodes)))
+
+
+def alltoall_fraction(net: Network, links_per_endpoint: int = 1) -> float:
+    """Exact uniform-alltoall achievable fraction of injection bandwidth.
+
+    Per-edge (source, destination)-pair sum:
+    load(u→v) = Σ_{s,t} 1[D(s,u)+1+D(v,t)=D(s,t)] · Np(s,u)Np(v,t)/Np(s,t)
+    with per-source demand 1 split uniformly over n-1 destinations.
+    """
+    n = net.n_endpoints
+    D, Np = all_pairs_full(net)
+    Dst = D[:n][:, :n].astype(np.float64)  # D[s,t]
+    Nst = Np[:n][:, :n].copy()
+    np.fill_diagonal(Nst, 1.0)  # avoid 0/0 on the diagonal (masked anyway)
+    inv_nst = 1.0 / np.where(Nst == 0.0, 1.0, Nst)
+    demand = 1.0 / (n - 1)
+    max_load = 0.0
+    seen = set()
+    for u, nbrs in net.adj.items():
+        for v in set(nbrs):
+            if (u, v) in seen:
+                continue
+            seen.add((u, v))
+            # mask[s,t] : edge (u,v) on a shortest s→t path
+            mask = (D[:n, u][:, None] + 1 + D[v, :n][None, :]) == Dst
+            mask &= (D[:n, u][:, None] >= 0) & (D[v, :n][None, :] >= 0)
+            share = Np[:n, u][:, None] * Np[v, :n][None, :] * inv_nst
+            load = float((mask * share).sum()) * demand
+            if load > max_load:
+                max_load = load
+    if max_load <= 0:
+        return 1.0
+    return min(1.0, 1.0 / (max_load * links_per_endpoint))

@@ -1,0 +1,104 @@
+"""JAX version-drift shims (compat policy: support 0.4.x LTS and current).
+
+The repo targets the newest stable JAX API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``) but must run on the
+pinned JAX 0.4.37 toolchain in CI, which predates all three.  Every
+version-sensitive call goes through this module so the drift is handled in
+exactly one place:
+
+* :func:`make_mesh` — ``jax.make_mesh`` with ``axis_types`` when the installed
+  JAX supports it (>= 0.5); plain ``jax.make_mesh`` otherwise (0.4.x meshes
+  have no axis types — all axes behave as ``Auto``).
+* :func:`shard_map` — ``jax.shard_map`` when present; otherwise
+  ``jax.experimental.shard_map.shard_map`` with the keyword renames
+  ``check_vma`` → ``check_rep`` and ``axis_names`` → the complementary
+  ``auto`` frozenset (partial-manual regions).
+* :func:`use_mesh` — ``jax.set_mesh`` context when present; otherwise the
+  ``jax.sharding.Mesh`` context manager (identical scoping semantics for our
+  usage: resolves named shardings inside ``jit``).
+
+Keep this module import-light: importing it must not initialize jax devices.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+
+def has_new_shard_map() -> bool:
+    import jax
+
+    return hasattr(jax, "shard_map")
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types: Any | None = "auto"):
+    """Build a device mesh across JAX versions.
+
+    ``axis_types="auto"`` (default) requests explicit ``AxisType.Auto`` axes
+    on JAX >= 0.5 and silently degrades on 0.4.x, where every mesh axis is
+    implicitly auto.
+    """
+    import jax
+
+    axis_type_cls = getattr(jax.sharding, "AxisType", None)
+    if axis_type_cls is None:
+        return jax.make_mesh(axis_shapes, axis_names)
+    if axis_types == "auto":
+        axis_types = (axis_type_cls.Auto,) * len(axis_names)
+    if axis_types is None:
+        return jax.make_mesh(axis_shapes, axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=False):
+    """``jax.shard_map`` with a 0.4.x fallback.
+
+    ``axis_names`` names the *manual* axes (``None`` = all mesh axes manual);
+    on 0.4.x it is translated to the legacy ``auto`` complement set.
+    """
+    import jax
+
+    if has_new_shard_map():
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _legacy_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=bool(check_vma), auto=auto,
+    )
+
+
+def axis_size(axis):
+    """Static mesh-axis size inside a manual region.
+
+    ``jax.lax.axis_size`` when present (JAX >= 0.6); else ``lax.psum(1, axis)``,
+    which folds to a Python int for the static operand 1 on 0.4.x.
+    """
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Scoped default mesh: ``jax.set_mesh`` when available, else the
+    ``jax.sharding.Mesh`` context manager."""
+    import jax
+
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh

@@ -32,9 +32,7 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_test_mesh(shape=(4, 4), axes=("data", "model")):
-    """Small mesh for multi-fake-device tests."""
-    import jax
+    """Small mesh for multi-fake-device tests (JAX-version-portable)."""
+    from repro.launch import compat
 
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)

@@ -1,0 +1,57 @@
+"""Shared pytest config.
+
+* Registers the ``timeout`` mark so the suite runs warning-free whether or
+  not ``pytest-timeout`` is installed.
+* When ``pytest-timeout`` is absent, enforces a *soft* fallback via
+  ``signal.alarm`` (main-thread, POSIX only): a test exceeding its
+  ``@pytest.mark.timeout(N)`` budget fails with a clear message instead of
+  hanging the suite forever.  With the plugin installed, the plugin wins.
+"""
+
+from __future__ import annotations
+
+import signal
+
+import pytest
+
+try:
+    import pytest_timeout  # noqa: F401
+
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test time budget (soft-enforced via SIGALRM "
+        "when pytest-timeout is not installed)",
+    )
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    seconds = 0
+    if marker is not None and not _HAVE_PYTEST_TIMEOUT and marker.args:
+        try:
+            seconds = int(marker.args[0])
+        except (TypeError, ValueError):
+            seconds = 0
+    if seconds <= 0 or not hasattr(signal, "SIGALRM"):
+        return (yield)
+
+    def _on_alarm(signum, frame):
+        raise pytest.fail.Exception(
+            f"soft timeout: test exceeded {seconds}s "
+            "(pytest-timeout not installed; enforced via SIGALRM)"
+        )
+
+    previous = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(seconds)
+    try:
+        return (yield)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, previous)

@@ -1,7 +1,18 @@
-"""Edge-disjoint Hamiltonian cycles (paper §V-A2b, App. D)."""
+"""Edge-disjoint Hamiltonian cycles (paper §V-A2b, App. D).
+
+Property tests use ``hypothesis`` when installed; without it they are
+skipped (``pytest.importorskip`` inside the test body) and the deterministic
+smoke variants below exercise the same invariants on a fixed grid.
+"""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import hamiltonian as H
 
@@ -16,9 +27,7 @@ def test_paper_examples_disjoint(r, c):
     assert len(er | eg) == 2 * r * c, "together they must cover every torus edge"
 
 
-@given(st.integers(1, 6), st.integers(3, 8))
-@settings(max_examples=30, deadline=None)
-def test_property_any_supported_size(k, c):
+def _check_any_supported_size(k, c):
     r = k * c
     if not H.supports_disjoint_cycles(r, c):
         return
@@ -28,13 +37,45 @@ def test_property_any_supported_size(k, c):
     assert not H.cycle_edges(red) & H.cycle_edges(green)
 
 
-@given(st.integers(2, 12), st.integers(2, 12))
-@settings(max_examples=40, deadline=None)
-def test_property_single_cycle(r, c):
+def _check_single_cycle(r, c):
     if r % 2 and c % 2:
         return
     order = H.single_cycle(r, c)
     assert H.is_hamiltonian_torus_cycle(order, r, c)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(1, 6), st.integers(3, 8))
+    @settings(max_examples=30, deadline=None)
+    def test_property_any_supported_size(k, c):
+        _check_any_supported_size(k, c)
+
+    @given(st.integers(2, 12), st.integers(2, 12))
+    @settings(max_examples=40, deadline=None)
+    def test_property_single_cycle(r, c):
+        _check_single_cycle(r, c)
+
+else:
+
+    def test_property_any_supported_size():
+        pytest.importorskip("hypothesis")
+
+    def test_property_single_cycle():
+        pytest.importorskip("hypothesis")
+
+
+def test_smoke_any_supported_size():
+    """Deterministic sweep of the hypothesis strategy domain."""
+    for k in range(1, 7):
+        for c in range(3, 9):
+            _check_any_supported_size(k, c)
+
+
+def test_smoke_single_cycle():
+    for r in range(2, 13):
+        for c in range(2, 13):
+            _check_single_cycle(r, c)
 
 
 def test_transposed_fallback():
