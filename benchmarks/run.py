@@ -9,6 +9,8 @@ only output when PATH is omitted.
 the vectorized engine (cached afterwards; the ``flowsim_micro`` suite also
 times the retained scalar oracle, which is what used to take ~5 min).
 ``--scale N`` sweeps HxMesh alltoall/allreduce past 1k endpoints.
+``--quick`` is the CI smoke mode: reduced trials/jobs everywhere and the
+scalar-oracle timing suite skipped.
 """
 
 import argparse
@@ -29,26 +31,40 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=0, metavar="N",
                     help="flowsim endpoint-scale sweep up to N endpoints "
                          "(adds the 'scale' suite; try 4096)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: reduced trials, no oracle timing")
     args = ap.parse_args()
 
-    from benchmarks import (fig8_utilization, fig10_failures, fig13_allreduce,
-                            fig15_workloads, flowsim_micro, roofline,
-                            table2_bandwidth, table2_cost)
+    from benchmarks import (cluster_sched, fig8_utilization, fig10_failures,
+                            fig13_allreduce, fig15_workloads, flowsim_micro,
+                            roofline, table2_bandwidth, table2_cost)
 
+    trials = 5 if args.quick else 25
     suites = {
         "table2_cost": lambda: table2_cost.run(),
         "table2_bandwidth": lambda: table2_bandwidth.run(full=args.full),
-        "fig8_utilization": lambda: fig8_utilization.run(),
-        "fig10_failures": lambda: fig10_failures.run(),
+        "fig8_utilization": lambda: fig8_utilization.run(trials=trials),
+        "fig10_failures": lambda: fig10_failures.run(
+            trials=5 if args.quick else 20),
         "fig13_allreduce": lambda: fig13_allreduce.run(),
         "fig15_workloads": lambda: fig15_workloads.run(),
         "roofline": lambda: roofline.run(),
         "flowsim_micro": lambda: flowsim_micro.run(full=args.full),
+        "cluster_sched": lambda: cluster_sched.run(
+            full=args.full, quick=args.quick),
     }
+    if args.quick:
+        del suites["flowsim_micro"]  # times the slow scalar oracle
     if args.scale:
         suites["scale"] = lambda: table2_bandwidth.run_scale(args.scale)
     only = set(args.only.split(",")) if args.only else None
-    report = {"args": {"full": args.full, "scale": args.scale}, "suites": {}}
+    if only:
+        unknown = only - set(suites)
+        if unknown:  # e.g. a typo, or flowsim_micro under --quick
+            ap.error(f"unknown or unavailable suites: {sorted(unknown)} "
+                     f"(available: {sorted(suites)})")
+    report = {"args": {"full": args.full, "scale": args.scale,
+                       "quick": args.quick}, "suites": {}}
     quiet = args.json == "-"
     for name, fn in suites.items():
         if only and name not in only:
@@ -78,6 +94,8 @@ def main() -> None:
         with open(args.json, "w") as fh:
             json.dump(report, fh, indent=2)
         print(f"# json report -> {args.json}", file=sys.stderr, flush=True)
+    if any("error" in s for s in report["suites"].values()):
+        sys.exit(1)  # a suite crashed; make CI smoke runs actually fail
 
 
 if __name__ == "__main__":

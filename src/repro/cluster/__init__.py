@@ -1,0 +1,31 @@
+# Discrete-event cluster scheduling on HammingMesh (paper §IV, Figs 8-10
+# as a fleet over time): job traces, pluggable allocation policies, board
+# fail/repair churn, and flow-level achieved-vs-allocated bandwidth.
+from repro.cluster.metrics import (  # noqa: F401
+    allocated_bandwidth,
+    concurrent_bandwidth,
+    fragmentation,
+    job_stats,
+    time_weighted_utilization,
+)
+from repro.cluster.policies import (  # noqa: F401
+    FIG8_LADDER,
+    POLICIES,
+    BestFitPolicy,
+    GreedyPolicy,
+    Policy,
+)
+from repro.cluster.simulator import (  # noqa: F401
+    ClusterSimulator,
+    JobRecord,
+    SimConfig,
+    SimResult,
+    simulate,
+)
+from repro.cluster.traces import (  # noqa: F401
+    TraceJob,
+    load_trace,
+    philly_trace,
+    poisson_trace,
+    save_trace,
+)

@@ -1,0 +1,167 @@
+"""Metrics for cluster scheduling runs (paper §IV, Figs 8–10 system view).
+
+Pure functions over the simulator's outputs:
+
+* :func:`time_weighted_utilization` — ∫ busy/working dt over the sampled
+  step function (the dynamic analogue of Fig 8's packed fraction);
+* :func:`job_stats` — wait / slowdown aggregates over finished jobs;
+* :func:`fragmentation` — 1 − (largest placeable square block / free
+  boards): how much of the free capacity is stranded in shapes no job can
+  use;
+* **achieved vs allocated bandwidth** — the flow-level (``core.flowsim``)
+  view of §III-E's isolation claim: :func:`allocated_bandwidth` runs the
+  job's *own* virtual sub-HxMesh in isolation, while
+  :func:`concurrent_bandwidth` loads every running job's alltoall onto the
+  shared (possibly failure-degraded) fabric at once and reports each job's
+  bottleneck fraction.
+"""
+
+from __future__ import annotations
+
+import statistics
+from typing import TYPE_CHECKING, Iterable, Sequence
+
+import numpy as np
+
+from repro.core import flowsim as F
+from repro.core.allocation import HxMeshAllocator
+
+if TYPE_CHECKING:
+    from repro.cluster.simulator import JobRecord
+
+# A utilization sample: (time, busy boards, working boards, queue length).
+Sample = tuple[float, int, int, int]
+
+
+def time_weighted_utilization(
+    samples: Sequence[Sample], t_end: float | None = None
+) -> float:
+    """Integrate ``busy/working`` over the step function defined by
+    ``samples`` up to ``t_end`` (default: the last sample's time).
+
+    Intervals where no board works (``working == 0``) contribute utilization
+    0 over a nonzero denominator — a fully failed cluster is not "utilized".
+    """
+    if not samples:
+        return 0.0
+    if t_end is None:
+        t_end = samples[-1][0]
+    num = 0.0
+    span = t_end - samples[0][0]
+    if span <= 0:
+        return 0.0
+    for (t0, busy, working, _q), nxt in zip(samples, samples[1:]):
+        t1 = min(nxt[0], t_end)
+        if t1 > t0 and working > 0:
+            num += (t1 - t0) * busy / working
+        if nxt[0] >= t_end:
+            break
+    else:
+        t0, busy, working, _q = samples[-1]
+        if t_end > t0 and working > 0:
+            num += (t_end - t0) * busy / working
+    return num / span
+
+
+def job_stats(records: Iterable["JobRecord"]) -> dict[str, float]:
+    """Wait / slowdown aggregates over *finished* jobs.
+
+    Slowdown is (completion − arrival) / service-time, the standard queueing
+    metric; wait is time-to-first-placement.
+    """
+    waits, slowdowns = [], []
+    n_finished = n_evicted = 0
+    for rec in records:
+        if rec.start is not None:
+            waits.append(rec.start - rec.job.arrival)
+        if rec.end is None:
+            continue
+        n_finished += 1
+        n_evicted += 1 if rec.n_evictions else 0
+        slowdowns.append((rec.end - rec.job.arrival) / max(rec.job.duration, 1e-9))
+    out = {"finished": float(n_finished), "evicted_jobs": float(n_evicted)}
+    if waits:
+        out["mean_wait_s"] = statistics.mean(waits)
+        out["p95_wait_s"] = float(np.percentile(waits, 95))
+    if slowdowns:
+        out["mean_slowdown"] = statistics.mean(slowdowns)
+        out["p95_slowdown"] = float(np.percentile(slowdowns, 95))
+    return out
+
+
+def fragmentation(alloc: HxMeshAllocator) -> float:
+    """1 − (largest placeable square block / free boards); 0 when the free
+    space is one usable block (or there is none)."""
+    free = alloc.num_free
+    if free == 0:
+        return 0.0
+    side = 0
+    hi = min(alloc.x, alloc.y)
+    for s in range(1, hi + 1):
+        if s * s > free or next(alloc.iter_blocks(s, s), None) is None:
+            break
+        side = s
+    return 1.0 - (side * side) / free
+
+
+# ---------------------------------------------------------------------------
+# Flow-level bandwidth (core.flowsim glue)
+# ---------------------------------------------------------------------------
+
+
+def job_traffic(net: F.Network, endpoints: np.ndarray) -> np.ndarray:
+    """Uniform alltoall among a job's endpoints as a ``(k, n_endpoints)``
+    demand block (rows aligned with ``endpoints`` as the sources)."""
+    eps = np.asarray(endpoints, dtype=np.int64)
+    k = len(eps)
+    T = np.zeros((k, net.n_endpoints))
+    if k > 1:
+        T[:, eps] = 1.0 / (k - 1)
+        T[np.arange(k), eps] = 0.0
+    return T
+
+
+def allocated_bandwidth(net: F.Network, endpoints: np.ndarray) -> float:
+    """Achievable alltoall fraction of the job's *isolated* virtual
+    sub-HxMesh (every foreign endpoint's links removed) — the bandwidth the
+    allocation promises under §III-E isolation."""
+    eps = np.asarray(endpoints, dtype=np.int64)
+    if len(eps) < 2:
+        return 1.0
+    sub = F.subnetwork(net, eps)
+    loads = F.edge_loads(sub, job_traffic(sub, eps), sources=eps)
+    mx = float(loads.max()) if len(loads) else 0.0
+    lpe = net.meta.get("links_per_endpoint", 1)
+    return 1.0 if mx <= 0 else min(1.0, 1.0 / (mx * lpe))
+
+
+def concurrent_bandwidth(
+    net: F.Network, jobs_endpoints: dict[int, np.ndarray]
+) -> dict[int, float]:
+    """Per-job achieved alltoall fraction when every job loads the shared
+    fabric at once.
+
+    All jobs' ECMP loads are superposed; a job's achieved fraction is set by
+    the total load on its own bottleneck link (links it puts no traffic on
+    cannot slow it down), i.e. ``1 / (max_{e: load_j(e)>0} L(e) · L_inj)``.
+    """
+    per_job: dict[int, np.ndarray] = {}
+    for jid, eps in jobs_endpoints.items():
+        eps = np.asarray(eps, dtype=np.int64)
+        if len(eps) < 2:
+            continue
+        per_job[jid] = F.edge_loads(net, job_traffic(net, eps), sources=eps)
+    if not per_job:
+        return {jid: 1.0 for jid in jobs_endpoints}
+    total = np.sum(list(per_job.values()), axis=0)
+    lpe = net.meta.get("links_per_endpoint", 1)
+    out: dict[int, float] = {}
+    for jid in jobs_endpoints:
+        loads = per_job.get(jid)
+        if loads is None:
+            out[jid] = 1.0
+            continue
+        mine = total[loads > 1e-12]
+        mx = float(mine.max()) if len(mine) else 0.0
+        out[jid] = 1.0 if mx <= 0 else min(1.0, 1.0 / (mx * lpe))
+    return out

@@ -1,0 +1,129 @@
+"""Pluggable allocation policies for the cluster scheduler (paper §IV-A/B).
+
+A :class:`Policy` makes two decisions the event loop delegates:
+
+* **queue order** — :meth:`Policy.order_queue` ranks the waiting jobs each
+  scheduling pass (FIFO, or largest-first "sorted" per Fig 8), and
+  :attr:`Policy.backfill` controls whether jobs behind a blocked head may
+  still be tried (EASY-style backfill) or the head blocks the line;
+* **placement** — :meth:`Policy.place` picks a virtual sub-HxMesh for a job
+  via the allocator's candidate-enumeration interface
+  (:meth:`repro.core.allocation.HxMeshAllocator.iter_blocks`).
+
+:class:`GreedyPolicy` is the paper's greedy first-fit with the §IV-A
+heuristic flags (transpose / aspect / locality); the Fig-8 ladder of
+configurations is :data:`FIG8_LADDER`.  :class:`BestFitPolicy` scores every
+candidate block and keeps the one leaving the least stranded capacity in its
+rows.  Fail-in-place remapping (§IV-B) reuses :meth:`Policy.place` on the
+evicted job's shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+from repro.core.allocation import HxMeshAllocator, Job, Placement, job_shapes
+
+if TYPE_CHECKING:  # the simulator's queue entries
+    from repro.cluster.simulator import QueueEntry
+
+
+@dataclasses.dataclass
+class Policy:
+    """Base policy: FIFO queue, paper's plain greedy placement."""
+
+    name: str = "fifo-greedy"
+    transpose: bool = False
+    aspect: bool = False
+    locality: bool = False
+    sort_queue: bool = False
+    backfill: bool = False
+    max_aspect: int = 8
+
+    # -- queue discipline ----------------------------------------------------
+
+    def order_queue(self, queue: list["QueueEntry"]) -> list["QueueEntry"]:
+        """Rank waiting jobs for one scheduling pass (FIFO or largest-first —
+        the dynamic analogue of Fig 8's job sorting)."""
+        if self.sort_queue:
+            return sorted(
+                queue, key=lambda e: (-e.job.size, e.job.arrival, e.job.jid)
+            )
+        return list(queue)
+
+    # -- placement -----------------------------------------------------------
+
+    def shapes(self, job: Job) -> list[tuple[int, int]]:
+        return job_shapes(job, transpose=self.transpose, aspect=self.aspect,
+                          max_aspect=self.max_aspect)
+
+    def can_ever_fit(self, alloc: HxMeshAllocator, job: Job) -> bool:
+        """True if some allowed shape fits an *empty* working grid — jobs
+        failing this are rejected instead of queueing forever."""
+        return any(u <= alloc.y and v <= alloc.x for u, v in self.shapes(job))
+
+    def place(self, alloc: HxMeshAllocator, job: Job) -> Placement | None:
+        """Greedy first-fit over the allowed shapes (the paper's allocator)."""
+        return alloc.allocate(job, transpose=self.transpose,
+                              aspect=self.aspect, locality=self.locality,
+                              max_aspect=self.max_aspect)
+
+
+@dataclasses.dataclass
+class GreedyPolicy(Policy):
+    """Paper's greedy allocator behind the policy interface (first fit)."""
+
+    name: str = "greedy"
+
+
+@dataclasses.dataclass
+class BestFitPolicy(Policy):
+    """Best fit: enumerate candidate blocks for every allowed shape and keep
+    the one whose rows retain the fewest leftover free boards (least stranded
+    capacity), breaking ties toward tighter column spread."""
+
+    name: str = "best-fit"
+
+    def place(self, alloc: HxMeshAllocator, job: Job) -> Placement | None:
+        best: Placement | None = None
+        best_score: tuple[int, int] | None = None
+        for u, v in self.shapes(job):
+            for pl in alloc.iter_blocks(u, v, locality=self.locality):
+                leftover = sum(len(alloc.free[r]) for r in pl.rows) - u * v
+                spread = pl.cols[-1] - pl.cols[0]
+                score = (leftover, spread)
+                if best_score is None or score < best_score:
+                    best, best_score = pl, score
+        if best is None:
+            return None
+        return alloc.commit(job, best)
+
+
+# The Fig-8 heuristic ladder, as dynamic scheduling configurations.  Queue
+# sorting subsumes the static experiment's "sorted" heuristic; backfill is
+# enabled alongside it (an unsorted backfilling queue would reorder jobs
+# implicitly, muddying the comparison).
+FIG8_LADDER: list[tuple[str, Policy]] = [
+    ("baseline", GreedyPolicy(name="baseline")),
+    ("+transpose", GreedyPolicy(name="+transpose", transpose=True)),
+    ("+sorted", GreedyPolicy(name="+sorted", transpose=True,
+                             sort_queue=True, backfill=True)),
+    ("+aspect", GreedyPolicy(name="+aspect", transpose=True, sort_queue=True,
+                             backfill=True, aspect=True)),
+    ("+locality", GreedyPolicy(name="+locality", transpose=True,
+                               sort_queue=True, backfill=True, aspect=True,
+                               locality=True)),
+]
+
+
+POLICIES = {
+    "fifo": GreedyPolicy(name="fifo"),
+    "greedy": GreedyPolicy(name="greedy", transpose=True, sort_queue=True,
+                           backfill=True),
+    "greedy-full": GreedyPolicy(name="greedy-full", transpose=True,
+                                sort_queue=True, backfill=True, aspect=True,
+                                locality=True),
+    "best-fit": BestFitPolicy(name="best-fit", transpose=True,
+                              sort_queue=True, backfill=True, aspect=True),
+}

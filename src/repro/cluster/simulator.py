@@ -1,0 +1,404 @@
+"""Discrete-event cluster scheduler for a HammingMesh fleet (paper §IV).
+
+The paper's scheduling-flexibility claim (Figs 8–10) is argued over a fleet
+*in time*: jobs arrive, run, finish; boards fail and are repaired; evicted
+jobs are remapped in place (§IV-B).  This module is that event loop:
+
+* **events** — job arrivals (from a :mod:`repro.cluster.traces` trace), job
+  completions, Poisson board fail/repair churn, and optional flow-level
+  bandwidth probes;
+* **queue** — a waiting line ordered by the policy each pass, with optional
+  EASY-style backfill (jobs behind a blocked head may still start);
+* **placement** — delegated to a :class:`repro.cluster.policies.Policy`
+  over the :class:`repro.core.allocation.HxMeshAllocator` board state;
+* **failure churn** — a random working board fails at rate ``fail_rate``
+  per board-second; the evicted job is remapped to a fresh virtual
+  sub-HxMesh immediately (fail-in-place) or requeued at the front; repairs
+  return boards after an exponential delay;
+* **bandwidth probes** — every ``probe_interval`` simulated seconds *while
+  jobs are still arriving* (like failure churn, probing stops at the last
+  arrival; jobs only running during the drain phase go unobserved) the
+  shared fabric (with its current failures) is loaded with every running
+  job's alltoall at once via :mod:`repro.core.flowsim`, recording each job's
+  *achieved* bandwidth next to the *allocated* (isolated sub-HxMesh)
+  bandwidth of §III-E.
+
+Every state change is appended to an audit log so tests can replay the run
+and assert conservation invariants (no placement on failed/occupied boards;
+every arrival finished, running, queued, or explicitly rejected).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+
+from repro.cluster import metrics as M
+from repro.cluster.policies import Policy
+from repro.cluster.traces import TraceJob
+from repro.core import flowsim as F
+from repro.core.allocation import HxMeshAllocator
+
+EV_ARRIVAL, EV_FINISH, EV_FAIL, EV_REPAIR, EV_PROBE = range(5)
+
+
+@dataclasses.dataclass(eq=False)
+class QueueEntry:
+    job: TraceJob
+    remaining: float  # service time left (shrinks only via eviction)
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """Lifecycle record of one trace job."""
+
+    job: TraceJob
+    status: str = "queued"  # queued | running | finished | rejected
+    start: float | None = None  # first placement time
+    end: float | None = None
+    n_evictions: int = 0
+    n_remaps: int = 0
+    # Bandwidth probes refer to the job's *latest probed placement*: when a
+    # remap changes the placement, achieved samples restart alongside the
+    # freshly computed allocated value, so the two always compare like for
+    # like.
+    allocated_bw: float | None = None  # isolated sub-HxMesh fraction
+    allocated_token: int = -1  # placement the allocated_bw was computed for
+    achieved_bw: list[float] = dataclasses.field(default_factory=list)
+    token: int = 0  # placement version; stale FINISH events are dropped
+    finish_t: float = 0.0  # scheduled completion of the current placement
+
+
+@dataclasses.dataclass
+class AuditEvent:
+    time: float
+    kind: str  # place | release | fail | repair | reject
+    jid: int  # -1 for board events
+    boards: tuple[tuple[int, int], ...]
+
+
+@dataclasses.dataclass
+class SimConfig:
+    """Cluster geometry + churn + probe knobs (all times in seconds)."""
+
+    x: int  # board columns
+    y: int  # board rows
+    board_a: int = 2  # accelerators per board, x
+    board_b: int = 2  # accelerators per board, y
+    fail_rate: float = 0.0  # board failures per board-second
+    repair_time: float = 0.0  # mean exponential repair delay; 0 = no repair
+    probe_interval: float | None = None  # flowsim probe cadence (probes
+    # fire only up to the last arrival, like the failure churn)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    records: dict[int, JobRecord]
+    samples: list[M.Sample]  # (t, busy, working, queued)
+    fragmentation_samples: list[tuple[float, float]]
+    audit: list[AuditEvent]
+    last_arrival: float
+    t_end: float
+    n_failures: int = 0
+    n_repairs: int = 0
+    n_probes: int = 0
+
+    def utilization(self, t_end: float | None = None) -> float:
+        """Mean time-weighted utilization over the arrival window by
+        default (the backlog regime, where packing quality is the limit)."""
+        return M.time_weighted_utilization(
+            self.samples, self.last_arrival if t_end is None else t_end
+        )
+
+    def summary(self) -> dict[str, float]:
+        by_status: dict[str, int] = {}
+        for rec in self.records.values():
+            by_status[rec.status] = by_status.get(rec.status, 0) + 1
+        out = {
+            "utilization": self.utilization(),
+            "n_jobs": float(len(self.records)),
+            "n_failures": float(self.n_failures),
+            "n_repairs": float(self.n_repairs),
+            "n_probes": float(self.n_probes),
+            **{f"n_{k}": float(v) for k, v in sorted(by_status.items())},
+        }
+        out.update(M.job_stats(self.records.values()))
+        if self.fragmentation_samples:
+            out["mean_fragmentation"] = sum(
+                f for _, f in self.fragmentation_samples
+            ) / len(self.fragmentation_samples)
+        return out
+
+
+class ClusterSimulator:
+    """One policy, one cluster, one trace → one :class:`SimResult`."""
+
+    def __init__(self, config: SimConfig, policy: Policy):
+        self.cfg = config
+        self.policy = policy
+        self.alloc = HxMeshAllocator(config.x, config.y)
+        self.rng = random.Random(config.seed)
+        self.queue: list[QueueEntry] = []
+        self.records: dict[int, JobRecord] = {}
+        self.busy = 0
+        self.audit: list[AuditEvent] = []
+        self.samples: list[M.Sample] = []
+        self.frag_samples: list[tuple[float, float]] = []
+        self._heap: list = []
+        self._seq = 0
+        self._counts = {"fail": 0, "repair": 0, "probe": 0}
+        # flow-level fabric, built lazily on the first probe
+        self._base_net: F.Network | None = None
+
+    # -- event plumbing ------------------------------------------------------
+
+    def _push(self, t: float, kind: int, data) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, kind, data))
+
+    def _sample(self, t: float) -> None:
+        working = self.alloc.x * self.alloc.y - len(self.alloc.failed)
+        self.samples.append((t, self.busy, working, len(self.queue)))
+
+    # -- run -----------------------------------------------------------------
+
+    def run(self, trace: list[TraceJob]) -> SimResult:
+        assert trace, "empty trace"
+        for job in trace:
+            self._push(job.arrival, EV_ARRIVAL, job)
+        self.last_arrival = max(j.arrival for j in trace)
+        if self.cfg.fail_rate > 0:
+            self._push(self._next_fail_time(0.0), EV_FAIL, None)
+        if self.cfg.probe_interval and self.cfg.probe_interval <= self.last_arrival:
+            self._push(self.cfg.probe_interval, EV_PROBE, None)
+        self._sample(0.0)
+        t = 0.0
+        while self._heap:
+            t, _seq, kind, data = heapq.heappop(self._heap)
+            if kind == EV_ARRIVAL:
+                self._on_arrival(t, data)
+            elif kind == EV_FINISH:
+                self._on_finish(t, *data)
+            elif kind == EV_FAIL:
+                self._on_fail(t)
+            elif kind == EV_REPAIR:
+                self._on_repair(t, *data)
+            elif kind == EV_PROBE:
+                self._on_probe(t)
+        return SimResult(
+            records=self.records,
+            samples=self.samples,
+            fragmentation_samples=self.frag_samples,
+            audit=self.audit,
+            last_arrival=self.last_arrival,
+            t_end=t,
+            n_failures=self._counts["fail"],
+            n_repairs=self._counts["repair"],
+            n_probes=self._counts["probe"],
+        )
+
+    # -- event handlers ------------------------------------------------------
+
+    def _on_arrival(self, t: float, job: TraceJob) -> None:
+        rec = JobRecord(job=job)
+        self.records[job.jid] = rec
+        if self._hopeless(job):
+            rec.status = "rejected"
+            self.audit.append(AuditEvent(t, "reject", job.jid, ()))
+        else:
+            self.queue.append(QueueEntry(job=job, remaining=job.duration))
+            self._schedule_pass(t)
+        self._sample(t)
+
+    def _hopeless(self, job: TraceJob, probe: HxMeshAllocator | None = None) -> bool:
+        """True when the job can never start: it exceeds the full grid, or —
+        with repairs disabled, so failed boards are gone for good — it no
+        longer fits the surviving grid.  Queueing such a job would deadlock
+        a no-backfill FIFO line forever."""
+        if not self.policy.can_ever_fit(self.alloc, job.to_alloc_job()):
+            return True
+        return self.cfg.repair_time <= 0 and not self._fits_surviving(job, probe)
+
+    def _on_finish(self, t: float, jid: int, token: int) -> None:
+        rec = self.records[jid]
+        if rec.token != token or rec.status != "running":
+            return  # stale completion from before an eviction
+        pl = self.alloc.placements[jid]
+        boards = tuple(pl.boards)
+        self.alloc.release(jid)
+        self.busy -= rec.job.size
+        rec.status, rec.end = "finished", t
+        self.audit.append(AuditEvent(t, "release", jid, boards))
+        self._schedule_pass(t)
+        self._sample(t)
+
+    def _on_fail(self, t: float) -> None:
+        working = sorted(
+            {(r, c) for r in range(self.alloc.y) for c in range(self.alloc.x)}
+            - self.alloc.failed
+        )
+        if working:
+            r, c = self.rng.choice(working)
+            self._fail_board(t, r, c)
+            if self.cfg.repair_time > 0:
+                delay = self.rng.expovariate(1.0 / self.cfg.repair_time)
+                self._push(t + delay, EV_REPAIR, (r, c))
+        if t < self.last_arrival:  # churn only while jobs still arrive
+            self._push(self._next_fail_time(t), EV_FAIL, None)
+        # the shrunken grid may have made queued jobs hopeless (they would
+        # block a no-backfill line forever) ...
+        if self.cfg.repair_time <= 0 and self.queue:
+            probe = self._surviving_probe()  # one grid replay for the sweep
+            keep: list[QueueEntry] = []
+            for entry in self.queue:
+                if self._hopeless(entry.job, probe):
+                    rec = self.records[entry.job.jid]
+                    rec.status = "rejected"
+                    self.audit.append(AuditEvent(t, "reject", entry.job.jid, ()))
+                else:
+                    keep.append(entry)
+            self.queue = keep
+        # ... while an eviction may have freed boards the queue can use (the
+        # victim's old placement minus the failed board)
+        self._schedule_pass(t)
+        self._sample(t)
+
+    def _fail_board(self, t: float, r: int, c: int) -> None:
+        self._counts["fail"] += 1
+        # capture the victim's boards before fail_board releases them
+        victim = self.alloc.victim_of(r, c)
+        if victim is not None:
+            boards = tuple(self.alloc.placements[victim].boards)
+        self.alloc.fail_board(r, c)
+        if victim is not None:
+            rec = self.records[victim]
+            rec.n_evictions += 1
+            rec.token += 1
+            self.busy -= rec.job.size
+            self.audit.append(AuditEvent(t, "release", victim, boards))
+        self.audit.append(AuditEvent(t, "fail", -1, ((r, c),)))
+        if victim is not None:
+            self._remap_or_requeue(t, rec, max(0.0, rec.finish_t - t))
+
+    def _remap_or_requeue(self, t: float, rec: JobRecord, remaining: float) -> None:
+        """Fail-in-place (§IV-B): try a fresh virtual sub-HxMesh right away,
+        else return the job to the head of the queue with its residual work.
+        A job that no longer fits even an *empty* surviving grid is rejected
+        outright — requeueing it would deadlock a FIFO line forever."""
+        pl = self.policy.place(self.alloc, rec.job.to_alloc_job())
+        if pl is not None:
+            rec.n_remaps += 1
+            rec.status = "running"
+            self.busy += rec.job.size
+            self.audit.append(AuditEvent(t, "place", rec.job.jid, tuple(pl.boards)))
+            self._finish_later(t, rec, remaining)
+        elif self._hopeless(rec.job):
+            rec.status = "rejected"
+            self.audit.append(AuditEvent(t, "reject", rec.job.jid, ()))
+        else:
+            rec.status = "queued"
+            self.queue.insert(0, QueueEntry(job=rec.job, remaining=remaining))
+
+    def _surviving_probe(self) -> HxMeshAllocator:
+        """An empty allocator with only the current failures applied."""
+        probe = HxMeshAllocator(self.cfg.x, self.cfg.y)
+        for r, c in self.alloc.failed:
+            probe.fail_board(r, c)
+        return probe
+
+    def _fits_surviving(
+        self, job: TraceJob, probe: HxMeshAllocator | None = None
+    ) -> bool:
+        """Could the job fit the current surviving grid if it were empty?"""
+        if probe is None:
+            probe = self._surviving_probe()
+        return any(
+            next(probe.iter_blocks(u, v), None) is not None
+            for u, v in self.policy.shapes(job.to_alloc_job())
+        )
+
+    def _on_repair(self, t: float, r: int, c: int) -> None:
+        self._counts["repair"] += 1
+        self.alloc.repair_board(r, c)
+        self.audit.append(AuditEvent(t, "repair", -1, ((r, c),)))
+        self._schedule_pass(t)
+        self._sample(t)
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _schedule_pass(self, t: float) -> None:
+        """Try to start waiting jobs in policy order; without backfill the
+        first blocked job blocks the line (plain FIFO head-of-line)."""
+        started: list[QueueEntry] = []
+        for entry in self.policy.order_queue(self.queue):
+            pl = self.policy.place(self.alloc, entry.job.to_alloc_job())
+            if pl is None:
+                if not self.policy.backfill:
+                    break
+                continue
+            rec = self.records[entry.job.jid]
+            rec.status = "running"
+            rec.token += 1
+            if rec.start is None:
+                rec.start = t
+            self.busy += entry.job.size
+            self.audit.append(AuditEvent(t, "place", entry.job.jid, tuple(pl.boards)))
+            self._finish_later(t, rec, entry.remaining)
+            started.append(entry)
+        if started:
+            ids = {id(e) for e in started}
+            self.queue = [e for e in self.queue if id(e) not in ids]
+
+    def _finish_later(self, t: float, rec: JobRecord, remaining: float) -> None:
+        rec.finish_t = t + remaining
+        self._push(t + remaining, EV_FINISH, (rec.job.jid, rec.token))
+
+    # -- failure churn & probes ----------------------------------------------
+
+    def _next_fail_time(self, t: float) -> float:
+        # fail_rate is per *working* board-second; only surviving boards
+        # contribute hazard
+        working = self.alloc.x * self.alloc.y - len(self.alloc.failed)
+        rate = self.cfg.fail_rate * max(1, working)
+        return t + self.rng.expovariate(rate)
+
+    def _net_now(self) -> F.Network:
+        if self._base_net is None:
+            self._base_net = F.build_hxmesh(
+                self.cfg.board_a, self.cfg.board_b, self.cfg.x, self.cfg.y
+            )
+        if not self.alloc.failed:
+            return self._base_net
+        return F.build_network(
+            self._base_net,
+            failures=[("board", c, r) for (r, c) in sorted(self.alloc.failed)],
+        )
+
+    def _on_probe(self, t: float) -> None:
+        self._counts["probe"] += 1
+        net = self._net_now()
+        jobs_eps = {
+            jid: F.placement_endpoints(net, pl.boards)
+            for jid, pl in self.alloc.placements.items()
+        }
+        achieved = M.concurrent_bandwidth(net, jobs_eps)
+        for jid, frac in achieved.items():
+            rec = self.records[jid]
+            if rec.allocated_token != rec.token:  # new or re-placed job
+                rec.achieved_bw = []  # samples of the old placement
+                rec.allocated_bw = M.allocated_bandwidth(net, jobs_eps[jid])
+                rec.allocated_token = rec.token
+            rec.achieved_bw.append(frac)
+        self.frag_samples.append((t, M.fragmentation(self.alloc)))
+        nxt = t + self.cfg.probe_interval
+        if nxt <= self.last_arrival:
+            self._push(nxt, EV_PROBE, None)
+
+
+def simulate(
+    trace: list[TraceJob], config: SimConfig, policy: Policy
+) -> SimResult:
+    """Convenience one-shot: run ``trace`` under ``policy`` on ``config``."""
+    return ClusterSimulator(config, policy).run(trace)

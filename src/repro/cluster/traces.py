@@ -1,0 +1,201 @@
+"""Job traces for the cluster scheduler (paper §IV-B; Philly/Helios mixes).
+
+A trace is a list of :class:`TraceJob` — arrival time, requested board shape
+``u × v``, workload class, and a service time derived from
+:mod:`repro.core.commodel` iteration-time estimates (so the compute /
+communication mix of the workload shapes the schedule).
+
+Two synthetic generators:
+
+* :func:`poisson_trace` — Poisson arrivals over the paper's Alibaba-MLaaS
+  job-size mix (``allocation.JOB_SIZE_DISTRIBUTION``), self-calibrated so the
+  offered load (board-seconds per second / cluster boards) hits a target.
+* :func:`philly_trace` — Philly/Helios-style heavy-tailed mix: mostly small
+  short jobs with a long lognormal duration tail and a few large jobs.
+
+Traces round-trip through a replayable JSONL format (:func:`save_trace` /
+:func:`load_trace`): one JSON object per line with keys ``jid, arrival, u,
+v, duration, workload, iterations`` — times in (simulated) seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+
+from repro.core import commodel
+from repro.core.allocation import JOB_SIZE_DISTRIBUTION, Job, _divisors
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceJob:
+    """One job of a trace: a ``u × v``-board request arriving at ``arrival``
+    with ``duration`` seconds of service time."""
+
+    jid: int
+    arrival: float
+    u: int
+    v: int
+    duration: float
+    workload: str = "GPT-3"
+    iterations: int = 0
+
+    @property
+    def size(self) -> int:
+        return self.u * self.v
+
+    def to_alloc_job(self) -> Job:
+        return Job(jid=self.jid, u=self.u, v=self.v)
+
+
+# -- workload classes --------------------------------------------------------
+
+# Size-conditioned workload mix: big allocations are the paper's §V-B large
+# models, small ones are recommendation / vision fine-tunes.
+_LARGE_MIX = [("GPT-3", 0.5), ("GPT-3-MoE", 0.3), ("CosmoFlow", 0.2)]
+_MID_MIX = [("CosmoFlow", 0.4), ("ResNet-152", 0.4), ("GPT-3", 0.2)]
+_SMALL_MIX = [("DLRM", 0.5), ("ResNet-152", 0.5)]
+
+
+def _workload_for(size: int, rng: random.Random) -> str:
+    mix = _LARGE_MIX if size >= 32 else _MID_MIX if size >= 8 else _SMALL_MIX
+    names, weights = zip(*mix)
+    return rng.choices(names, weights)[0]
+
+
+def _sample_shape(
+    size: int, x: int, y: int, rng: random.Random, max_aspect: int = 8
+) -> tuple[int, int] | None:
+    """Draw a ``u × v`` shape of ``size`` boards uniformly over the
+    aspect-bounded factorizations that fit a ``y × x`` board grid, or
+    ``None`` when none fits (the size is skipped).  Jobs request genuinely
+    rectangular shapes — that is what makes the transpose heuristic matter."""
+    shapes = [
+        (u, size // u)
+        for u in _divisors(size)
+        if max(u, size // u) / min(u, size // u) <= max_aspect
+        and u <= y and size // u <= x
+    ]
+    if not shapes:
+        return None
+    return rng.choice(shapes)
+
+
+def _generate(
+    n_jobs: int,
+    x: int,
+    y: int,
+    load: float,
+    rng: random.Random,
+    sizes: list[int],
+    weights: list[float],
+    mean_iterations: float,
+    sigma_iterations: float,
+    topology: str,
+    max_aspect: int,
+) -> list[TraceJob]:
+    """Shared generation loop: draw (size → shape → workload → iterations)
+    per job, then assign Poisson arrivals calibrated so that offered load —
+    mean board-seconds per wall-clock second over the cluster's boards —
+    equals ``load``."""
+    mu = _log_mu(mean_iterations, sigma_iterations)
+    raw: list[tuple[int, int, str, int, float]] = []
+    while len(raw) < n_jobs:
+        size = rng.choices(sizes, weights)[0]
+        shape = _sample_shape(size, x, y, rng, max_aspect)
+        if shape is None:
+            continue
+        u, v = shape
+        wl = _workload_for(size, rng)
+        iters = max(1, int(rng.lognormvariate(mu, sigma_iterations)))
+        dur = commodel.job_duration_s(wl, iters, topology)
+        raw.append((u, v, wl, iters, dur))
+    mean_bs = sum(u * v * dur for u, v, _, _, dur in raw) / len(raw)
+    mean_gap = mean_bs / (load * x * y)
+    jobs: list[TraceJob] = []
+    t = 0.0
+    for jid, (u, v, wl, iters, dur) in enumerate(raw):
+        t += rng.expovariate(1.0 / mean_gap)
+        jobs.append(TraceJob(jid=jid, arrival=t, u=u, v=v, duration=dur,
+                             workload=wl, iterations=iters))
+    return jobs
+
+
+def poisson_trace(
+    n_jobs: int,
+    x: int,
+    y: int,
+    load: float = 1.3,
+    seed: int = 0,
+    topology: str = "Hx2Mesh",
+    mean_iterations: float = 300.0,
+    sigma_iterations: float = 1.0,
+    max_aspect: int = 8,
+) -> list[TraceJob]:
+    """Poisson arrivals over the paper's job-size distribution.
+
+    ``load`` is the offered load: 1.0 keeps the cluster marginally busy,
+    >1 builds a persistent backlog so allocation quality is what limits
+    utilization (the dynamic analogue of Fig 8's single-shot packing).
+    """
+    return _generate(
+        n_jobs, x, y, load, random.Random(seed),
+        sizes=[s for s, _ in JOB_SIZE_DISTRIBUTION],
+        weights=[w for _, w in JOB_SIZE_DISTRIBUTION],
+        mean_iterations=mean_iterations,
+        sigma_iterations=sigma_iterations,
+        topology=topology, max_aspect=max_aspect,
+    )
+
+
+def philly_trace(
+    n_jobs: int,
+    x: int,
+    y: int,
+    load: float = 1.3,
+    seed: int = 0,
+    topology: str = "Hx2Mesh",
+    sigma_iterations: float = 1.8,
+    max_aspect: int = 8,
+) -> list[TraceJob]:
+    """Philly/Helios-style heavy-tailed mix: ~90% of jobs are 1–4 boards and
+    short, but a fat lognormal tail of iterations (σ≈1.8) plus occasional
+    large jobs dominate the board-seconds — the regime where backfill and
+    queue reordering matter most."""
+    return _generate(
+        n_jobs, x, y, load, random.Random(seed),
+        sizes=[1, 2, 4, 8, 16, 32, 64],
+        weights=[0.60, 0.20, 0.10, 0.05, 0.025, 0.015, 0.01],
+        mean_iterations=100.0,
+        sigma_iterations=sigma_iterations,
+        topology=topology, max_aspect=max_aspect,
+    )
+
+
+def _log_mu(mean: float, sigma: float) -> float:
+    """μ of a lognormal with the given mean and log-σ."""
+    import math
+
+    return math.log(mean) - sigma * sigma / 2.0
+
+
+# -- replayable JSONL trace format -------------------------------------------
+
+
+def save_trace(jobs: list[TraceJob], path: str) -> None:
+    """One JSON object per line; key order fixed for diff-stable files."""
+    with open(path, "w") as fh:
+        for j in jobs:
+            fh.write(json.dumps(dataclasses.asdict(j), sort_keys=True) + "\n")
+
+
+def load_trace(path: str) -> list[TraceJob]:
+    jobs: list[TraceJob] = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            jobs.append(TraceJob(**json.loads(line)))
+    return sorted(jobs, key=lambda j: (j.arrival, j.jid))

@@ -8,13 +8,19 @@ not be consecutive, but all selected rows must use the same column set).
 This module implements the paper's greedy allocator (<50 lines), the four
 optimization heuristics (transpose, aspect ratio, sorting, locality), the
 board-failure model and the utilization experiments.
+
+The allocator state is exposed behind a small candidate-enumeration
+interface (``job_shapes`` / ``iter_blocks`` / ``commit`` / ``repair_board``)
+so that pluggable scheduling policies (:mod:`repro.cluster.policies`) can
+score and choose placements without reimplementing the free-set bookkeeping;
+``allocate`` remains the paper's greedy first-fit over that interface.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import random
-from collections.abc import Iterable
+from collections.abc import Iterable, Iterator
 
 
 @dataclasses.dataclass
@@ -59,17 +65,31 @@ class HxMeshAllocator:
     def num_free(self) -> int:
         return sum(len(s) for s in self.free)
 
+    def victim_of(self, row: int, col: int) -> int | None:
+        """jid of the job whose placement covers board ``(row, col)``."""
+        for jid, pl in self.placements.items():
+            if row in pl.rows and col in pl.cols:
+                return jid
+        return None
+
     def fail_board(self, row: int, col: int) -> int | None:
         """Mark a board failed. Returns the jid of an evicted job, if any."""
         self.failed.add((row, col))
-        evicted = None
-        for jid, pl in list(self.placements.items()):
-            if row in pl.rows and col in pl.cols:
-                evicted = jid
-                self.release(jid)
-                break
+        evicted = self.victim_of(row, col)
+        if evicted is not None:
+            self.release(evicted)
         self.free[row].discard(col)
         return evicted
+
+    def repair_board(self, row: int, col: int) -> None:
+        """Return a failed board to the free pool (fail-in-place churn)."""
+        if (row, col) not in self.failed:
+            return
+        self.failed.discard((row, col))
+        for pl in self.placements.values():
+            if row in pl.rows and col in pl.cols:  # pragma: no cover - safety
+                return
+        self.free[row].add(col)
 
     def release(self, jid: int) -> None:
         pl = self.placements.pop(jid)
@@ -77,14 +97,20 @@ class HxMeshAllocator:
             if (r, c) not in self.failed:
                 self.free[r].add(c)
 
-    # -- the paper's greedy allocation (§IV-A) --------------------------------
+    # -- candidate enumeration (policy interface) ----------------------------
 
-    def _find_block(self, u: int, v: int, locality: bool = False) -> Placement | None:
-        """Greedy: pick rows whose free-column intersection stays >= v."""
-        if u > self.y:
-            return None
-        order = range(self.y)
-        for first in order:
+    def iter_blocks(
+        self, u: int, v: int, locality: bool = False
+    ) -> Iterator[Placement]:
+        """Enumerate candidate ``u × v`` virtual sub-HxMeshes, greedily grown
+        from each possible first row (the paper's scan order).  Yields
+        *uncommitted* placements (``jid = -1``); callers pick one and
+        :meth:`commit` it.  The first yield is exactly the paper's greedy
+        choice, so first-fit == ``next(iter_blocks(...), None)``.
+        """
+        if u > self.y or v > self.x:
+            return
+        for first in range(self.y):
             if len(self.free[first]) < v:
                 continue
             rows = [first]
@@ -108,8 +134,19 @@ class HxMeshAllocator:
                     cols = cols[best : best + v]
                 else:
                     cols = cols[:v]
-                return Placement(jid=-1, rows=rows, cols=cols)
-        return None
+                yield Placement(jid=-1, rows=rows, cols=cols)
+
+    def _find_block(self, u: int, v: int, locality: bool = False) -> Placement | None:
+        """Greedy: the first candidate block (paper's allocator)."""
+        return next(self.iter_blocks(u, v, locality=locality), None)
+
+    def commit(self, job: Job, pl: Placement) -> Placement:
+        """Commit a candidate placement produced by :meth:`iter_blocks`."""
+        pl.jid = job.jid
+        for r in pl.rows:
+            self.free[r] -= set(pl.cols)
+        self.placements[job.jid] = pl
+        return pl
 
     def allocate(
         self,
@@ -119,26 +156,32 @@ class HxMeshAllocator:
         locality: bool = False,
         max_aspect: int = 8,
     ) -> Placement | None:
-        shapes: list[tuple[int, int]] = [(job.u, job.v)]
-        if transpose and job.v != job.u:
-            shapes.append((job.v, job.u))
-        if aspect:
-            size = job.size
-            for u in _divisors(size):
-                v = size // u
-                if max(u, v) / max(1, min(u, v)) <= max_aspect and (u, v) not in shapes:
-                    shapes.append((u, v))
-            # prefer squarest first, as the paper does by default
-            shapes.sort(key=lambda s: (max(s) / min(s), s))
-        for u, v in shapes:
+        for u, v in job_shapes(job, transpose=transpose, aspect=aspect,
+                               max_aspect=max_aspect):
             pl = self._find_block(u, v, locality=locality)
             if pl is not None:
-                pl.jid = job.jid
-                for r in pl.rows:
-                    self.free[r] -= set(pl.cols)
-                self.placements[job.jid] = pl
-                return pl
+                return self.commit(job, pl)
         return None
+
+
+def job_shapes(
+    job: Job, transpose: bool = False, aspect: bool = False, max_aspect: int = 8
+) -> list[tuple[int, int]]:
+    """Candidate ``(u, v)`` board shapes for a job under the §IV-A heuristics
+    (requested shape, then transpose, then bounded-aspect-ratio reshapes,
+    squarest first)."""
+    shapes: list[tuple[int, int]] = [(job.u, job.v)]
+    if transpose and job.v != job.u:
+        shapes.append((job.v, job.u))
+    if aspect:
+        size = job.size
+        for u in _divisors(size):
+            v = size // u
+            if max(u, v) / max(1, min(u, v)) <= max_aspect and (u, v) not in shapes:
+                shapes.append((u, v))
+        # prefer squarest first, as the paper does by default
+        shapes.sort(key=lambda s: (max(s) / min(s), s))
+    return shapes
 
 
 def _divisors(n: int) -> list[int]:

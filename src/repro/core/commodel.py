@@ -228,6 +228,21 @@ WORKLOADS = {
     "GPT-3-MoE": gpt3_moe,
 }
 
+
+def iteration_ms(workload: str, topology: str = "Hx2Mesh") -> float:
+    """Predicted iteration time (ms) of a named workload on a named topology
+    profile — the service-rate input of the cluster scheduler
+    (:mod:`repro.cluster.traces`)."""
+    return WORKLOADS[workload](TOPOLOGIES[topology]).iteration_ms
+
+
+def job_duration_s(
+    workload: str, iterations: int, topology: str = "Hx2Mesh"
+) -> float:
+    """Wall-clock service time (s) of ``iterations`` training iterations, so
+    workload class (compute/communication mix) shapes the job schedule."""
+    return iterations * iteration_ms(workload, topology) / 1e3
+
 # Paper-reported iteration times (ms) for validation where stated (§V-B).
 PAPER_ITERATION_MS = {
     ("ResNet-152", "nonbl. FT"): 109.7,

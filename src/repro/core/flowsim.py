@@ -572,6 +572,36 @@ def build_network(topo, failures=()) -> Network:
     return Network(n_endpoints=base.n_endpoints, adj=adj, meta=dict(base.meta))
 
 
+def subnetwork(net: Network, endpoints) -> Network:
+    """Induced sub-fabric for a placement: keep the given endpoints and every
+    switch; all *other* endpoints lose their links (they stay in the id space
+    as isolated nodes, exactly like failed endpoints).
+
+    This is the fabric a job would see under the paper's §III-E isolation
+    argument — routes may only traverse the kept boards and the shared
+    row/column switch trees, so ``achievable_fraction(subnetwork(net, eps),
+    ...)`` is the job's *allocated* (isolated sub-HxMesh) bandwidth.
+    """
+    keep = set(int(e) for e in np.asarray(endpoints).ravel())
+    return build_network(
+        net, failures=[e for e in range(net.n_endpoints) if e not in keep]
+    )
+
+
+def placement_endpoints(net: Network, boards) -> np.ndarray:
+    """Endpoint ids covered by an iterable of board coordinates.
+
+    Boards are ``(row, col)`` pairs as produced by
+    :meth:`repro.core.allocation.Placement.boards` — i.e. ``(by, bx)`` in the
+    builder's geometry, which is the transpose of :func:`board_nodes`'s
+    ``(bx, by)`` argument order.
+    """
+    eps: list[int] = []
+    for r, c in boards:
+        eps.extend(board_nodes(net, int(c), int(r)))
+    return np.array(sorted(eps), dtype=np.int64)
+
+
 def board_nodes(net: Network, bx: int, by: int) -> list[int]:
     """Accelerator node ids of board ``(bx, by)`` (HxMesh board-major ids;
     for a plain torus, the 2x2-board tiling of the paper's comparison)."""
@@ -630,24 +660,12 @@ def _ring_allreduce_matrix(net: Network, volume: float | None = None, **_kw):
     """
     from repro.core import hamiltonian as ham
 
-    meta = net.meta
     n = net.n_endpoints
     act = net.active_endpoints()
     rings: list[tuple[list[int], float]] = []
-    if len(act) == n and meta.get("kind") in ("hxmesh", "torus"):
-        if meta["kind"] == "hxmesh":
-            r, c = meta["b"] * meta["y"], meta["a"] * meta["x"]
-
-            def gid(rr, cc):
-                by, i = divmod(rr, meta["b"])
-                bx, j = divmod(cc, meta["a"])
-                return ((by * meta["x"] + bx) * meta["b"] + i) * meta["a"] + j
-        else:
-            r, c = meta["side_y"], meta["side_x"]
-
-            def gid(rr, cc):
-                return rr * meta["side_x"] + cc
-
+    geo = _grid_geometry(net)
+    if len(act) == n and geo is not None:
+        r, c, gid = geo
         try:
             red, green = ham.dual_cycles(r, c)
             v = 0.25 if volume is None else volume
@@ -667,11 +685,112 @@ def _ring_allreduce_matrix(net: Network, volume: float | None = None, **_kw):
     return T
 
 
+def _grid_geometry(net: Network):
+    """(rows, cols, gid) of the virtual 2D grid for mesh-like geometries, or
+    ``None``.  ``gid(r, c)`` maps grid coordinates to endpoint ids."""
+    meta = net.meta
+    if meta.get("kind") == "hxmesh":
+        r, c = meta["b"] * meta["y"], meta["a"] * meta["x"]
+
+        def gid(rr, cc):
+            by, i = divmod(rr, meta["b"])
+            bx, j = divmod(cc, meta["a"])
+            return ((by * meta["x"] + bx) * meta["b"] + i) * meta["a"] + j
+
+        return r, c, gid
+    if meta.get("kind") == "torus":
+        return meta["side_y"], meta["side_x"], (
+            lambda rr, cc: rr * meta["side_x"] + cc
+        )
+    return None
+
+
+def _squarest_grid(n: int) -> tuple[int, int]:
+    r = int(np.sqrt(n))
+    while n % r:
+        r -= 1
+    return r, n // r
+
+
+def _grid_or_squarest(net: Network, require_square: bool = False):
+    """(rows, cols, gid) — the builder grid when the geometry provides one
+    (optionally only if square), else the squarest row-major factorization
+    of ``n_endpoints``."""
+    geo = _grid_geometry(net)
+    if geo is not None and (not require_square or geo[0] == geo[1]):
+        return geo
+    r, c = _squarest_grid(net.n_endpoints)
+    return r, c, (lambda rr, cc: rr * c + cc)
+
+
+def _transpose_matrix(net: Network, volume: float = 1.0, **_kw) -> np.ndarray:
+    """Matrix-transpose permutation: endpoint at grid position ``(i, j)``
+    sends to ``(j, i)`` — the classic adversary for row/column-separated
+    routing.  Uses the builder grid when the geometry provides one (square
+    grids only; a rectangular grid has no transpose), else the squarest
+    row-major factorization of ``n``."""
+    n = net.n_endpoints
+    r, c, gid = _grid_or_squarest(net, require_square=True)
+    act = set(net.active_endpoints().tolist())
+    T = np.zeros((n, n))
+    for i in range(r):
+        for j in range(c):
+            if i < c and j < r:  # transpose within the leading square
+                s, t = gid(i, j), gid(j, i)
+                if s != t and s in act and t in act:
+                    T[s, t] = volume
+    return T
+
+
+def _tornado_matrix(net: Network, volume: float = 1.0, **_kw) -> np.ndarray:
+    """Tornado permutation: each endpoint sends ``ceil(c/2) - 1`` positions
+    around its grid row — the classic worst case for minimal routing on
+    rings/tori (all flows chase each other the long way around)."""
+    n = net.n_endpoints
+    r, c, gid = _grid_or_squarest(net)
+    off = (c - 1) // 2
+    act = set(net.active_endpoints().tolist())
+    T = np.zeros((n, n))
+    if off == 0:
+        return T
+    for i in range(r):
+        for j in range(c):
+            s, t = gid(i, j), gid(i, (j + off) % c)
+            if s != t and s in act and t in act:
+                T[s, t] = volume
+    return T
+
+
+def _permutation_matrix(
+    net: Network, seed: int = 0, samples: int = 1, volume: float = 1.0, **_kw
+) -> np.ndarray:
+    """Seeded random-permutation traffic: the mean of ``samples`` uniformly
+    drawn permutations of the active endpoints (fixed points carry no
+    traffic), each source sending ``volume`` to its image.  ``samples > 1``
+    averages several permutations into one matrix for sampled-permutation
+    sweeps."""
+    n = net.n_endpoints
+    act = net.active_endpoints()
+    T = np.zeros((n, n))
+    if len(act) < 2 or samples < 1:
+        return T
+    rng = np.random.default_rng(seed)
+    for _ in range(samples):
+        perm = rng.permutation(act)
+        for s, t in zip(act, perm):
+            if s != t:
+                T[s, t] += volume / samples
+    return T
+
+
 TRAFFIC_PATTERNS = {
     "uniform": _uniform_matrix,
     "alltoall": _uniform_matrix,
     "bit-complement": _bit_complement_matrix,
     "ring-allreduce": _ring_allreduce_matrix,
+    "transpose": _transpose_matrix,
+    "tornado": _tornado_matrix,
+    "permutation": _permutation_matrix,
 }
 
 

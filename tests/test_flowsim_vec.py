@@ -69,6 +69,55 @@ def test_bit_complement_matches_oracle(name):
     )
 
 
+@pytest.mark.parametrize("pattern", ["transpose", "tornado", "permutation"])
+@pytest.mark.parametrize("name", ["hx2mesh", "torus", "fat-tree", "dragonfly"])
+def test_new_patterns_match_oracle(name, pattern):
+    """transpose / tornado / seeded sampled permutations: engine == oracle."""
+    net = TOPOLOGIES[name]()
+    Tm = F.traffic_matrix(net, pattern, seed=3)
+    assert Tm.shape == (net.n_endpoints, net.n_endpoints)
+    assert (Tm >= 0).all() and np.diagonal(Tm).max() == 0.0
+    assert Tm.any(), f"{pattern} generated no traffic on {name}"
+    assert F.max_link_load(net, Tm) == pytest.approx(
+        O.max_link_load(net, O.matrix_to_triples(Tm)), abs=1e-9
+    )
+
+
+def test_transpose_pattern_geometry():
+    """On a square virtual grid the transpose pattern is the exact matrix
+    transpose: (i, j) -> (j, i), diagonal silent, one send per endpoint."""
+    net = F.build_torus(8, 8)
+    Tm = F.traffic_matrix(net, "transpose")
+    for i in range(8):
+        for j in range(8):
+            s, t = i * 8 + j, j * 8 + i
+            assert Tm[s, t] == (1.0 if s != t else 0.0)
+    assert Tm.sum() == 8 * 8 - 8  # all but the diagonal send
+
+
+def test_tornado_pattern_row_offset():
+    """Tornado sends (c-1)//2 positions around each grid row."""
+    net = F.build_torus(8, 8)
+    Tm = F.traffic_matrix(net, "tornado")
+    off = (8 - 1) // 2
+    for i in range(8):
+        for j in range(8):
+            assert Tm[i * 8 + j, i * 8 + (j + off) % 8] == 1.0
+    assert Tm.sum() == 64
+
+
+def test_permutation_pattern_seeded():
+    net = F.build_hxmesh(2, 2, 2, 2)
+    a = F.traffic_matrix(net, "permutation", seed=5)
+    b = F.traffic_matrix(net, "permutation", seed=5)
+    c = F.traffic_matrix(net, "permutation", seed=6)
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).any()
+    # each row sends at most `volume` total; sampled average stays normalized
+    multi = F.traffic_matrix(net, "permutation", seed=5, samples=4)
+    assert multi.sum(axis=1).max() <= 1.0 + 1e-12
+
+
 def test_failure_injection_matches_oracle():
     """Board + node + link failures: engine and oracle agree on the broken
     graph, and the achievable fraction degrades (not improves)."""
@@ -87,6 +136,72 @@ def test_failure_injection_matches_oracle():
     frac_healthy = F.achievable_fraction(healthy, F.traffic_matrix(healthy, "alltoall"), 4)
     frac_broken = F.achievable_fraction(broken, F.traffic_matrix(broken, "alltoall"), 4)
     assert frac_broken <= frac_healthy + 1e-9
+
+
+def test_dragonfly_structure():
+    """Canonical Dragonfly invariants: router degree p + (a-1) + h, exactly
+    h global links per router, and a balanced group-pair all-to-all."""
+    a, p, h, groups = 4, 2, 2, 9
+    net = F.build_dragonfly(a, p, h, groups)
+    n = net.n_endpoints
+    assert n == a * p * groups
+
+    def group_of(router: int) -> int:
+        return (router - n) // a
+
+    k = (a * h) // (groups - 1)  # global links per group pair
+    pair_links: dict[tuple[int, int], int] = {}
+    for r in range(n, n + a * groups):
+        nbrs = net.adj[r]
+        terminals = [v for v in nbrs if v < n]
+        local = [v for v in nbrs if v >= n and group_of(v) == group_of(r)]
+        global_links = [v for v in nbrs if v >= n and group_of(v) != group_of(r)]
+        assert len(terminals) == p
+        assert sorted(set(local)) == sorted(local)  # no parallel local links
+        assert len(local) == a - 1  # complete intra-group graph
+        assert len(global_links) == h  # global degree exactly h
+        for v in global_links:
+            g1, g2 = sorted((group_of(r), group_of(v)))
+            pair_links[(g1, g2)] = pair_links.get((g1, g2), 0) + 1
+    # every unordered group pair carries exactly k links (counted twice above)
+    assert len(pair_links) == groups * (groups - 1) // 2
+    assert set(pair_links.values()) == {2 * k}
+    # every endpoint hangs off exactly one router
+    for e in range(n):
+        assert len(net.adj[e]) == 1 and net.adj[e][0] >= n
+
+
+def test_failure_edge_cases():
+    """Failing a board twice is idempotent; failing every endpoint of a
+    board equals failing the board."""
+    spec = T.HxMesh(2, 2, 4, 4)
+    once = F.build_network(spec, failures=[("board", 1, 2)])
+    twice = F.build_network(spec, failures=[("board", 1, 2), ("board", 1, 2)])
+    assert once.adj == twice.adj
+    by_nodes = F.build_network(spec, failures=F.board_nodes(once, 1, 2))
+    assert by_nodes.adj == once.adj
+    # an already-failed board's endpoints are gone from the active set
+    gone = set(F.board_nodes(once, 1, 2))
+    assert gone.isdisjoint(once.active_endpoints().tolist())
+    assert len(once.active_endpoints()) == once.n_endpoints - len(gone)
+
+
+def test_subnetwork_extraction():
+    """Placement sub-network: kept endpoints retain their fabric, foreign
+    endpoints are isolated, and keeping everything is the identity."""
+    net = F.build_hxmesh(2, 2, 4, 4)
+    boards = [(0, 0), (0, 2), (1, 0), (1, 2)]  # a 2x2 virtual sub-HxMesh
+    eps = F.placement_endpoints(net, boards)
+    assert sorted(eps) == sorted(
+        e for (r, c) in boards for e in F.board_nodes(net, c, r)
+    )
+    sub = F.subnetwork(net, eps)
+    assert sorted(sub.active_endpoints().tolist()) == sorted(eps.tolist())
+    # every kept endpoint can still reach every other one
+    D, _ = F.shortest_paths(sub, sources=eps)
+    assert (D[:, eps] >= 0).all()
+    full = F.subnetwork(net, np.arange(net.n_endpoints))
+    assert full.adj == net.adj
 
 
 def test_source_chunking_invariant():
