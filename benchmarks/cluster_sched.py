@@ -1,23 +1,27 @@
 """Cluster-scheduling benchmark: the Fig-8 heuristic ladder *over time*.
 
-Two sections:
+Three scenario groups:
 
-* ``ladder`` — a 500-job Poisson trace (paper job-size mix, rectangular
+* ``ladder/*`` — a 500-job Poisson trace (paper job-size mix, rectangular
   shapes, offered load 1.5) on an Hx2Mesh-16x16, replayed under each Fig-8
   heuristic configuration (baseline → +transpose → +sorted → +aspect →
-  +locality) and averaged over three fixed trace seeds.  The mean
-  time-weighted utilization must reproduce the static experiment's ordering:
+  +locality) and averaged over three fixed trace seeds.  The summary row
+  checks the static experiment's ordering:
   baseline < +transpose < +sorted ≤ +aspect ≤ +locality.
-* ``bw`` — a smaller Hx2Mesh-8x8 run with board fail/repair churn and
+* ``topo/*`` — the same 500-job trace replayed on ``hx2-16x16`` vs
+  ``torus-32x32`` (identical 16x16 board grids, identical durations) under
+  the +sorted policy.  The torus runs behind the contiguity-constrained
+  :class:`repro.core.allocation.TorusAllocator` via
+  ``SimConfig.for_topology`` — the *dynamic* version of the paper's
+  allocation-flexibility claim (Figs 8-9): virtual sub-HxMeshes pack a
+  churning queue better than physical torus rectangles.  The summary row
+  reports the utilization gap and checks hx2 >= torus.
+* ``bw/*`` — a smaller Hx2Mesh-8x8 run with board fail/repair churn and
   flow-level bandwidth probes: per job, the *allocated* bandwidth of its
   isolated virtual sub-HxMesh next to the *achieved* bandwidth under every
   concurrent job's alltoall on the shared, failure-degraded fabric
   (§III-E's isolation claim, measured with ``core.flowsim``).  On
-  HammingMesh the two coincide (``isolation_gap=0``): a virtual
-  sub-HxMesh's shortest paths stay on its own boards and its own
-  accelerator↔switch links, so concurrent jobs share no links — the
-  full-bandwidth isolation the paper argues, now measured rather than
-  asserted.
+  HammingMesh the two coincide (``isolation_gap=0``).
 
 Everything is seeded — reruns are bit-identical.
 """
@@ -26,95 +30,149 @@ import statistics
 
 from repro.cluster import FIG8_LADDER, SimConfig, poisson_trace, simulate
 
+from benchmarks import scenarios as S
+
+SUITE = "cluster_sched"
+
 LADDER_SEEDS = (0, 1, 2)
+LADDER_SPEC = "hx2-16x16"
+TOPO_SPECS = (LADDER_SPEC, "torus-32x32")  # identical 16x16 board grids
+TOPO_POLICY = "+sorted"
+BW_SPEC = "hx2-8x8"
 
 
-def run_ladder(
-    n_jobs: int = 500, seeds=LADDER_SEEDS, x: int = 16, y: int = 16,
-    load: float = 1.5,
-) -> list[str]:
-    rows = []
-    means = {}
-    for name, policy in FIG8_LADDER:
-        utils = [
-            simulate(
-                poisson_trace(n_jobs, x, y, load=load, seed=s),
-                SimConfig(x, y),
-                policy,
-            ).utilization()
-            for s in seeds
-        ]
-        means[name] = statistics.mean(utils)
-        rows.append(
-            f"cluster_sched,ladder,Hx2Mesh-{x}x{y},{name},"
-            f"mean_util={means[name]:.4f},min={min(utils):.4f},"
-            f"max={max(utils):.4f},jobs={n_jobs},seeds={len(utils)}"
-        )
-    order = [n for n, _ in FIG8_LADDER]
-    v = [means[n] for n in order]
-    ok = v[0] < v[1] < v[2] <= v[3] + 1e-12 and v[3] <= v[4] + 1e-12
-    rows.append(f"cluster_sched,ladder,ordering_ok={ok}")
-    return rows
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    out = [
+        S.make(SUITE, f"ladder/{name}", topology=LADDER_SPEC, kind="ladder",
+               policy=name, n_jobs=500, load=1.5, trials=len(LADDER_SEEDS))
+        for name, _ in FIG8_LADDER
+    ]
+    out += [
+        S.make(SUITE, f"topo/{spec}", topology=spec, kind="topo",
+               policy=TOPO_POLICY, n_jobs=500, load=1.5,
+               trials=len(LADDER_SEEDS))
+        for spec in TOPO_SPECS
+    ]
+    # quick mode trims only the flowsim-heavy bandwidth section; the ladder
+    # needs its full 500 jobs x 3 seeds to separate the heuristics
+    out.append(S.make(
+        SUITE, f"bw/{BW_SPEC}", topology=BW_SPEC, kind="bw",
+        n_jobs=30 if ctx.quick else 80,
+        n_probes=4 if ctx.quick else 8,
+        expected_failures=3.0 if ctx.quick else 6.0,
+    ))
+    return out
 
 
-def run_bandwidth(
-    n_jobs: int = 80, x: int = 8, y: int = 8, seed: int = 0,
-    expected_failures: float = 6.0, n_probes: int = 8,
-    max_job_rows: int = 40,
-) -> list[str]:
+def _policy(name: str):
+    return dict(FIG8_LADDER)[name]
+
+
+def _replay_utilizations(sc: S.Scenario) -> list[float]:
+    """One utilization per trace seed: generate the trace on the scenario's
+    board grid and replay it under the scenario's policy and topology."""
+    cfg = SimConfig.for_topology(sc.topology)
+    return [
+        simulate(
+            poisson_trace(sc.opts["n_jobs"], cfg.x, cfg.y,
+                          load=sc.opts["load"], seed=seed),
+            cfg,
+            _policy(sc.opts["policy"]),
+        ).utilization()
+        for seed in LADDER_SEEDS[:sc.trials]
+    ]
+
+
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    if sc.opts["kind"] in ("ladder", "topo"):
+        utils = _replay_utilizations(sc)
+        return [{
+            "kind": sc.opts["kind"],
+            "policy": sc.opts["policy"],
+            "mean_util": round(statistics.mean(utils), 4),
+            "min": round(min(utils), 4),
+            "max": round(max(utils), 4),
+            "jobs": sc.opts["n_jobs"],
+            "seeds": len(utils),
+        }]
+    return _compute_bw(sc)
+
+
+def _compute_bw(sc: S.Scenario) -> list[dict]:
     """Achieved-vs-allocated per-job bandwidth under churn (flowsim)."""
-    trace = poisson_trace(n_jobs, x, y, load=1.3, seed=seed)
+    n_jobs, n_probes = sc.opts["n_jobs"], sc.opts["n_probes"]
+    max_job_rows = 40
+    base = SimConfig.for_topology(sc.topology)
+    trace = poisson_trace(n_jobs, base.x, base.y, load=1.3, seed=sc.seed)
     horizon = max(j.arrival for j in trace)
-    cfg = SimConfig(
-        x, y,
-        fail_rate=expected_failures / (x * y * horizon),
+    cfg = SimConfig.for_topology(
+        sc.topology,
+        fail_rate=sc.opts["expected_failures"] / (base.x * base.y * horizon),
         repair_time=horizon / 10,
         probe_interval=horizon / n_probes,
-        seed=seed,
+        seed=sc.seed,
     )
     _, policy = FIG8_LADDER[-1]  # +locality: the full heuristic stack
     res = simulate(trace, cfg, policy)
     rows = []
-    observed = [
-        rec for rec in res.records.values() if rec.achieved_bw
-    ]
+    observed = [rec for rec in res.records.values() if rec.achieved_bw]
     for rec in sorted(observed, key=lambda r: r.job.jid)[:max_job_rows]:
-        rows.append(
-            f"cluster_sched,bw,jid={rec.job.jid},workload={rec.job.workload},"
-            f"boards={rec.job.size},allocated={rec.allocated_bw:.3f},"
-            f"achieved_mean={statistics.mean(rec.achieved_bw):.3f},"
-            f"achieved_min={min(rec.achieved_bw):.3f},"
-            f"evictions={rec.n_evictions},remaps={rec.n_remaps}"
-        )
+        rows.append({
+            "kind": "bw",
+            "jid": rec.job.jid,
+            "workload": rec.job.workload,
+            "boards": rec.job.size,
+            "allocated": round(rec.allocated_bw, 3),
+            "achieved_mean": round(statistics.mean(rec.achieved_bw), 3),
+            "achieved_min": round(min(rec.achieved_bw), 3),
+            "evictions": rec.n_evictions,
+            "remaps": rec.n_remaps,
+        })
     if len(observed) > max_job_rows:
-        rows.append(
-            f"cluster_sched,bw,TRUNCATED,shown={max_job_rows},"
-            f"observed={len(observed)}"
-        )
+        rows.append({"kind": "bw", "truncated": True,
+                     "shown": max_job_rows, "observed": len(observed)})
     s = res.summary()
-    alloc_mean = statistics.mean(r.allocated_bw for r in observed) if observed else 0.0
+    alloc_mean = (statistics.mean(r.allocated_bw for r in observed)
+                  if observed else 0.0)
     ach_mean = (
         statistics.mean(statistics.mean(r.achieved_bw) for r in observed)
         if observed else 0.0
     )
-    rows.append(
-        f"cluster_sched,bw,SUMMARY,Hx2Mesh-{x}x{y},jobs={n_jobs},"
-        f"probes={res.n_probes},failures={res.n_failures},"
-        f"repairs={res.n_repairs},observed_jobs={len(observed)},"
-        f"allocated_mean={alloc_mean:.3f},achieved_mean={ach_mean:.3f},"
-        f"isolation_gap={alloc_mean - ach_mean:.3f},"
-        f"util={s['utilization']:.3f},"
-        f"mean_fragmentation={s.get('mean_fragmentation', 0.0):.3f}"
-    )
+    rows.append({
+        "kind": "bw",
+        "summary": True,
+        "jobs": n_jobs,
+        "probes": res.n_probes,
+        "failures": res.n_failures,
+        "repairs": res.n_repairs,
+        "observed_jobs": len(observed),
+        "allocated_mean": round(alloc_mean, 3),
+        "achieved_mean": round(ach_mean, 3),
+        "isolation_gap": round(alloc_mean - ach_mean, 3),
+        "util": round(s["utilization"], 3),
+        "mean_fragmentation": round(s.get("mean_fragmentation", 0.0), 3),
+    })
     return rows
 
 
-def run(full: bool = False, quick: bool = False) -> list[str]:
-    # the ladder needs its full 500 jobs x 3 seeds to separate the
-    # heuristics (seconds of wall clock); quick mode trims only the
-    # flowsim-heavy bandwidth section
-    if quick:
-        return run_ladder() + run_bandwidth(
-            n_jobs=30, n_probes=4, expected_failures=3.0
-        )
-    return run_ladder() + run_bandwidth()
+def summarize(results: list[tuple[S.Scenario, list[dict]]],
+              ctx: S.RunContext) -> list[dict]:
+    ladder = {sc.opts["policy"]: out[0]["mean_util"]
+              for sc, out in results if sc.opts["kind"] == "ladder"}
+    topo = {sc.topology: out[0]["mean_util"]
+            for sc, out in results if sc.opts["kind"] == "topo"}
+    rows = []
+    if ladder:
+        v = [ladder[name] for name, _ in FIG8_LADDER]
+        ok = v[0] < v[1] < v[2] <= v[3] + 1e-12 and v[3] <= v[4] + 1e-12
+        rows.append({"kind": "ladder", "ordering_ok": ok})
+    if len(topo) == len(TOPO_SPECS):
+        hx, torus = topo[TOPO_SPECS[0]], topo[TOPO_SPECS[1]]
+        rows.append({
+            "kind": "topo",
+            "hx2_util": round(hx, 4),
+            "torus_util": round(torus, 4),
+            "flexibility_gap": round(hx - torus, 4),
+            "hx2_wins": hx >= torus - 1e-12,
+        })
+    return rows

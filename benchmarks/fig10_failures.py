@@ -1,12 +1,11 @@
 """Fig 10: behaviour under random board failures.
 
-Two complementary views, both per the paper's §IV-B story:
+Two scenario groups, both per the paper's §IV-B story:
 
-* ``fig10_alloc`` — utilization of working boards from the greedy allocator
-  (the seed benchmark), and
-* ``fig10_bw`` — achievable alltoall bandwidth of the *surviving* fabric,
-  computed with the vectorized flow-level engine via
-  ``build_network(topo, failures=[("board", bx, by), ...])``.
+* ``alloc/*`` — utilization of working boards from the greedy allocator;
+* ``bw/*`` — achievable alltoall bandwidth of the *surviving* fabric,
+  computed with the flow-level engine on the spec's ``network()`` view
+  with ``("board", bx, by)`` failures applied.
 """
 
 import random
@@ -14,49 +13,73 @@ import statistics
 
 from repro.core import allocation as A
 from repro.core import flowsim as F
-from repro.core import topology as T
+from repro.core import registry as R
+
+from benchmarks import scenarios as S
+
+SUITE = "fig10_failures"
+
+ALLOC_MESHES = ["hx2-16x16", "hx4-8x8"]
+BW_MESHES = ["hx2-8x8", "hx4-4x4"]
 
 
-def run(trials: int = 20) -> list[str]:
-    rows = []
-    for mesh_name, (x, y) in [("Hx2Mesh-16x16", (16, 16)), ("Hx4Mesh-8x8", (8, 8))]:
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    out = []
+    for spec in ALLOC_MESHES:
+        impl = R.parse(spec).impl
         for nf in (0, 8, 16, 24, 40):
-            if nf >= x * y // 2:
+            if nf >= impl.x * impl.y // 2:
                 continue
-            us = [
-                A.utilization_experiment(
-                    x, y, n_failures=nf, transpose=True, sort_jobs=True,
-                    aspect=True, seed=s,
-                )
-                for s in range(trials)
-            ]
-            rows.append(
-                f"fig10_alloc,{mesh_name},failures={nf},median={statistics.median(us):.3f},"
-                f"mean={statistics.mean(us):.3f}"
-            )
-    rows.extend(run_bandwidth())
-    return rows
-
-
-def run_bandwidth(trials: int = 3) -> list[str]:
-    """Surviving-fabric alltoall bandwidth vs failed boards (flowsim)."""
-    rows = []
-    for mesh_name, spec in [
-        ("Hx2Mesh-8x8", T.HxMesh(2, 2, 8, 8)),
-        ("Hx4Mesh-4x4", T.HxMesh(4, 4, 4, 4)),
-    ]:
-        boards = [(bx, by) for bx in range(spec.x) for by in range(spec.y)]
+            out.append(S.make(SUITE, f"alloc/{spec}/f{nf}", topology=spec,
+                              failures=nf, trials=ctx.trials(20),
+                              kind="alloc"))
+    for spec in BW_MESHES:
         for nf in (0, 2, 4, 8):
-            fracs = []
-            for seed in range(1 if nf == 0 else trials):
-                rng = random.Random(seed)
-                failed = rng.sample(boards, nf)
-                net = F.build_network(
-                    spec, failures=[("board", bx, by) for bx, by in failed])
-                fracs.append(F.achievable_fraction(
-                    net, F.traffic_matrix(net, "alltoall"), 4))
-            rows.append(
-                f"fig10_bw,{mesh_name},failures={nf},"
-                f"alltoall_median={statistics.median(fracs):.3f}"
-            )
-    return rows
+            out.append(S.make(SUITE, f"bw/{spec}/f{nf}", topology=spec,
+                              failures=nf, trials=1 if nf == 0 else 3,
+                              pattern="alltoall", kind="bw"))
+    return out
+
+
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    if sc.opts["kind"] == "alloc":
+        return _compute_alloc(sc)
+    return _compute_bw(sc)
+
+
+def _compute_alloc(sc: S.Scenario) -> list[dict]:
+    topo = R.parse(sc.topology)
+    us = [
+        A.utilization_experiment(
+            topo.impl.x, topo.impl.y, n_failures=sc.failures,
+            transpose=True, sort_jobs=True, aspect=True, seed=s,
+        )
+        for s in range(sc.trials)
+    ]
+    return [{
+        "kind": "alloc",
+        "failures": sc.failures,
+        "median": round(statistics.median(us), 3),
+        "mean": round(statistics.mean(us), 3),
+    }]
+
+
+def _compute_bw(sc: S.Scenario) -> list[dict]:
+    """Surviving-fabric alltoall bandwidth vs failed boards (flowsim)."""
+    topo = R.parse(sc.topology)
+    boards = [(bx, by) for bx in range(topo.impl.x)
+              for by in range(topo.impl.y)]
+    fracs = []
+    for seed in range(sc.trials):
+        rng = random.Random(seed)
+        failed = rng.sample(boards, sc.failures)
+        net = topo.network(
+            failures=[("board", bx, by) for bx, by in failed])
+        fracs.append(F.achievable_fraction(
+            net, F.traffic_matrix(net, sc.pattern),
+            topo.links_per_endpoint))
+    return [{
+        "kind": "bw",
+        "failures": sc.failures,
+        "alltoall_median": round(statistics.median(fracs), 3),
+    }]

@@ -1,7 +1,7 @@
 """Fig 13/17: allreduce algorithms — α-β model curves + measured HLO traffic
 of our shard_map implementations on a 16-device mesh + flow-level achievable
-bandwidth of the ring-allreduce traffic pattern per topology (vectorized
-engine), tying the model curves to the fabric simulation."""
+bandwidth of the ring-allreduce traffic pattern per topology spec, tying the
+model curves to the fabric simulation."""
 
 import os
 import subprocess
@@ -9,31 +9,59 @@ import sys
 
 from repro.core import commodel as C
 from repro.core import flowsim as F
-from repro.core import topology as T
+from repro.core import registry as R
+
+from benchmarks import scenarios as S
+
+SUITE = "fig13_allreduce"
+
+FLOW_SPECS = ["hx2-8x8", "torus-16x16", "ft256"]
 
 
-def run() -> list[str]:
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    out = [
+        S.make(SUITE, f"model/p{p}", kind="model", p=p)
+        for p in (64, 1024, 16384)
+    ]
+    out += [
+        S.make(SUITE, f"flow/{spec}", topology=spec,
+               pattern="ring-allreduce", kind="flow")
+        for spec in FLOW_SPECS
+    ]
+    out.append(S.make(SUITE, "hlo", kind="hlo"))
+    return out
+
+
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    kind = sc.opts["kind"]
+    if kind == "model":
+        return _compute_model(sc.opts["p"])
+    if kind == "flow":
+        return _compute_flow(sc)
+    return _compute_hlo()
+
+
+def _compute_model(p: int) -> list[dict]:
     rows = []
-    # model curves (the paper's algorithm comparison)
-    for p in (64, 1024, 16384):
-        for size in (1e4, 1e6, 1e8, 1e9):
-            name, t = C.best_algorithm(p, size)
-            per = {n: f(p, size) for n, f in C.ALGORITHMS.items()}
-            bw = {n: size / t_ / C.INJECTION_BW for n, t_ in per.items()}
-            rows.append(
-                f"fig13_model,p={p},S={size:.0e},best={name}," +
-                ",".join(f"{n}={bw[n]:.3f}" for n in C.ALGORITHMS)
-            )
-    # flow-level steady state: ring-allreduce traffic achievable fraction
-    for name, spec, links in [
-        ("Hx2Mesh-8x8", T.HxMesh(2, 2, 8, 8), 4),
-        ("torus-16", T.Torus2D(8, 8), 4),
-        ("FT-256", T.FatTree(256, 0.0), 1),
-    ]:
-        net = F.build_network(spec)
-        frac = F.achievable_fraction(
-            net, F.traffic_matrix(net, "ring-allreduce"), links)
-        rows.append(f"fig13_flow,{name},ring_allreduce={frac:.3f}")
+    for size in (1e4, 1e6, 1e8, 1e9):
+        name, t = C.best_algorithm(p, size)
+        per = {n: f(p, size) for n, f in C.ALGORITHMS.items()}
+        row = {"kind": "model", "p": p, "S": f"{size:.0e}", "best": name}
+        row.update({n: round(size / t_ / C.INJECTION_BW, 3)
+                    for n, t_ in per.items()})
+        rows.append(row)
+    return rows
+
+
+def _compute_flow(sc: S.Scenario) -> list[dict]:
+    topo = R.parse(sc.topology)
+    net = topo.network()
+    frac = F.achievable_fraction(
+        net, F.traffic_matrix(net, sc.pattern), topo.links_per_endpoint)
+    return [{"kind": "flow", "ring_allreduce": round(frac, 3)}]
+
+
+def _compute_hlo() -> list[dict]:
     # measured wire bytes of the JAX implementations (subprocess: fake devices)
     script = r"""
 import os
@@ -60,12 +88,16 @@ for algo in ("psum", "ring", "bidir", "torus", "hamiltonian"):
 """
     env = dict(os.environ)
     proc = subprocess.run(
-        [sys.executable, "-c", script], capture_output=True, text=True, env=env,
-        timeout=600,
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, timeout=600,
     )
+    rows = []
     for line in proc.stdout.splitlines():
         if line.startswith("MEASURE"):
-            rows.append("fig13_hlo," + line[len("MEASURE,"):])
+            algo, perm, ar = line[len("MEASURE,"):].split(",")
+            rows.append({"kind": "hlo", "algo": algo,
+                         "permutes": int(perm.split("=")[1]),
+                         "allreduces": int(ar.split("=")[1])})
     if proc.returncode != 0:
-        rows.append(f"fig13_hlo,ERROR,{proc.stderr[-200:]}")
+        rows.append({"kind": "hlo", "error": proc.stderr[-200:]})
     return rows

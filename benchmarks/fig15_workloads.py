@@ -1,21 +1,55 @@
-"""§V-B / Fig 15: DNN workload iteration times + relative cost savings."""
+"""§V-B / Fig 15: DNN workload iteration times + relative cost savings.
+
+Scenarios pair every workload with every Table II topology (rows are
+tagged with the small-cluster spec string of the family); the compute
+function evaluates the calibrated workload model — the transcribed
+``commodel.PROFILES`` row, per its provenance note — never the measured
+profile, so iteration times stay validated against
+``PAPER_ITERATION_MS``.
+"""
 
 from repro.core import commodel as C
+from repro.core import registry as R
+
+from benchmarks import scenarios as S
+
+SUITE = "fig15_workloads"
+
+SAVINGS_ROWS = ("Hx2Mesh", "Hx4Mesh", "2D torus")
 
 
-def run() -> list[str]:
-    rows = []
-    for wname, fn in C.WORKLOADS.items():
-        for tname, topo in C.TOPOLOGIES.items():
-            r = fn(topo)
-            paper = C.PAPER_ITERATION_MS.get((wname, tname))
-            ptxt = f",paper={paper}" if paper else ""
-            rows.append(
-                f"fig15_iter,{wname},{tname},iter_ms={r.iteration_ms:.2f},"
-                f"comm_ms={r.comm_exposed_ms:.3f}{ptxt}"
-            )
-    for wname in C.WORKLOADS:
-        for tname in ("Hx2Mesh", "Hx4Mesh", "2D torus"):
-            s = C.cost_savings(wname, tname)
-            rows.append(f"fig15_savings,{wname},{tname},vs_nonblocking_ft={s:.2f}x")
-    return rows
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    specs = R.TABLE2_SPECS["small"]
+    out = [
+        S.make(SUITE, f"iter/{wname}/{tname}", topology=specs[tname],
+               kind="iter", workload=wname, table_row=tname)
+        for wname in C.WORKLOADS
+        for tname in C.PROFILES
+    ]
+    out += [
+        S.make(SUITE, f"savings/{wname}/{tname}", topology=specs[tname],
+               kind="savings", workload=wname, table_row=tname)
+        for wname in C.WORKLOADS
+        for tname in SAVINGS_ROWS
+    ]
+    return out
+
+
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    wname, tname = sc.opts["workload"], sc.opts["table_row"]
+    if sc.opts["kind"] == "savings":
+        s = C.cost_savings(wname, tname)
+        return [{"kind": "savings", "workload": wname, "name": tname,
+                 "vs_nonblocking_ft": f"{s:.2f}x"}]
+    r = C.WORKLOADS[wname](C.PROFILES[tname])
+    row = {
+        "kind": "iter",
+        "workload": wname,
+        "name": tname,
+        "iter_ms": round(r.iteration_ms, 2),
+        "comm_ms": round(r.comm_exposed_ms, 3),
+    }
+    paper = C.PAPER_ITERATION_MS.get((wname, tname))
+    if paper:
+        row["paper"] = paper
+    return [row]

@@ -1,8 +1,17 @@
-"""Fig 8: system utilization of the greedy allocator + heuristics."""
+"""Fig 8: system utilization of the greedy allocator + heuristics.
+
+Scenarios are (topology spec x heuristic rung) — pure data; the dynamic
+torus-vs-HxMesh counterpart lives in the ``cluster_sched`` suite.
+"""
 
 import statistics
 
 from repro.core import allocation as A
+from repro.core import registry as R
+
+from benchmarks import scenarios as S
+
+SUITE = "fig8_utilization"
 
 SETTINGS = [
     ("baseline", dict(transpose=False, sort_jobs=False)),
@@ -12,14 +21,29 @@ SETTINGS = [
     ("+locality", dict(transpose=True, sort_jobs=True, aspect=True, locality=True)),
 ]
 
+MESHES = ["hx2-16x16", "hx4-8x8"]
 
-def run(trials: int = 25) -> list[str]:
-    rows = []
-    for mesh_name, (x, y) in [("Hx2Mesh-16x16", (16, 16)), ("Hx4Mesh-8x8", (8, 8))]:
-        for label, kw in SETTINGS:
-            us = [A.utilization_experiment(x, y, seed=s, **kw) for s in range(trials)]
-            rows.append(
-                f"fig8,{mesh_name},{label},mean={statistics.mean(us):.3f},"
-                f"median={statistics.median(us):.3f},p1={min(us):.3f}"
-            )
-    return rows
+
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    trials = ctx.trials(25)
+    return [
+        S.make(SUITE, f"{spec}/{label}", topology=spec, trials=trials,
+               **kw)
+        for spec in MESHES
+        for label, kw in SETTINGS
+    ]
+
+
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    alloc = R.parse(sc.topology).allocator()
+    us = [
+        A.utilization_experiment(alloc.x, alloc.y, seed=s, **sc.opts)
+        for s in range(sc.trials)
+    ]
+    return [{
+        "label": sc.name.split("/")[-1],
+        "mean": round(statistics.mean(us), 3),
+        "median": round(statistics.median(us), 3),
+        "p1": round(min(us), 3),
+        "trials": sc.trials,
+    }]

@@ -1,49 +1,81 @@
 """Flowsim wall-clock micro-benchmark: scalar oracle vs vectorized engine.
 
-Runs the Table II bandwidth suite (alltoall + ring-allreduce per topology)
-on both engines and reports per-topology and total wall clock plus the
-speedup ratio.  ``full=True`` uses the paper-size (1,024-endpoint)
-topologies — the acceptance measurement for the vectorized rewrite
-(target: >= 10x) — the default uses the 256-endpoint versions.
+One scenario per topology spec (the Table II bandwidth suite): run
+alltoall + ring-allreduce on both engines, report per-topology wall clock
+and the speedup ratio; a summary row totals the suite.  ``--full`` uses
+the paper-size (1,024-endpoint) specs — the acceptance measurement for
+the vectorized rewrite (target: >= 10x) — the default the ~256-endpoint
+versions.
 """
 
 import time
 
-from benchmarks import table2_bandwidth as T2
 from repro.core import flowsim as F
 from repro.core import flowsim_oracle as O
+from repro.core import registry as R
+
+from benchmarks import scenarios as S
+from benchmarks import table2_bandwidth as T2
+
+SUITE = "flowsim_micro"
 
 
-def _oracle_fractions(net, links):
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    size = "full" if ctx.full else "reduced"
+    return [
+        S.make(SUITE, f"{size}/{name}", topology=spec, size=size,
+               table_row=name)
+        for name, spec in T2._specs(ctx.full).items()
+    ]
+
+
+def _vec_fractions(topo: R.Topology, net: F.Network) -> tuple[float, float]:
+    links = topo.links_per_endpoint
+    a2a = F.achievable_fraction(net, F.traffic_matrix(net, "alltoall"), links)
+    ared = F.achievable_fraction(
+        net, F.traffic_matrix(net, "ring-allreduce"), links)
+    return a2a, ared
+
+
+def _oracle_fractions(topo: R.Topology, net: F.Network) -> tuple[float, float]:
+    links = topo.links_per_endpoint
     a2a = O.alltoall_fraction(net, links)
     triples = O.matrix_to_triples(F.traffic_matrix(net, "ring-allreduce"))
     ared = O.achievable_fraction(net, triples, links)
     return a2a, ared
 
 
-def run(full: bool = False) -> list[str]:
-    size = "full" if full else "reduced"
-    rows = []
-    t_new_total = t_old_total = 0.0
-    for name, (spec, links) in T2._cases(full).items():
-        net = F.build_network(spec)
-        t0 = time.time()
-        a2a_new, ared_new = T2.bandwidth_fractions(spec, links)
-        t_new = time.time() - t0
-        t0 = time.time()
-        a2a_old, ared_old = _oracle_fractions(net, links)
-        t_old = time.time() - t0
-        t_new_total += t_new
-        t_old_total += t_old
-        match = abs(a2a_new - a2a_old) < 1e-9 and abs(ared_new - ared_old) < 1e-9
-        rows.append(
-            f"flowsim_micro,{size},{name},endpoints={net.n_endpoints},"
-            f"old_s={t_old:.3f},new_s={t_new:.3f},"
-            f"speedup={t_old / max(t_new, 1e-9):.1f}x,match={match}"
-        )
-    rows.append(
-        f"flowsim_micro,{size},TOTAL,old_s={t_old_total:.3f},"
-        f"new_s={t_new_total:.3f},"
-        f"speedup={t_old_total / max(t_new_total, 1e-9):.1f}x"
-    )
-    return rows
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    topo = R.parse(sc.topology)
+    net = topo.network()
+    t0 = time.time()
+    a2a_new, ared_new = _vec_fractions(topo, net)
+    t_new = time.time() - t0
+    t0 = time.time()
+    a2a_old, ared_old = _oracle_fractions(topo, net)
+    t_old = time.time() - t0
+    match = (abs(a2a_new - a2a_old) < 1e-9
+             and abs(ared_new - ared_old) < 1e-9)
+    return [{
+        "size": sc.opts["size"],
+        "name": sc.opts["table_row"],
+        "endpoints": net.n_endpoints,
+        "old_s": round(t_old, 3),
+        "new_s": round(t_new, 3),
+        "speedup": f"{t_old / max(t_new, 1e-9):.1f}x",
+        "match": match,
+    }]
+
+
+def summarize(results: list[tuple[S.Scenario, list[dict]]],
+              ctx: S.RunContext) -> list[dict]:
+    rows = [r for _, out in results for r in out]
+    t_old = sum(r["old_s"] for r in rows)
+    t_new = sum(r["new_s"] for r in rows)
+    return [{
+        "size": "full" if ctx.full else "reduced",
+        "name": "TOTAL",
+        "old_s": round(t_old, 3),
+        "new_s": round(t_new, 3),
+        "speedup": f"{t_old / max(t_new, 1e-9):.1f}x",
+    }]

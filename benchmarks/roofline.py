@@ -14,11 +14,17 @@ Per (arch × shape × mesh) cell:
   usefulness      = MODEL_FLOPS / HLO_FLOPs
 """
 
+import functools
 import json
 import os
 
 from repro.configs import get_config
 from repro.configs.base import SHAPES
+
+from benchmarks import scenarios as S
+
+SUITE = "roofline"
+DRYRUN_PATH = "results/dryrun.json"
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -66,20 +72,41 @@ def analyse(rec: dict) -> dict:
     }
 
 
-def run(path: str = "results/dryrun.json") -> list[str]:
-    if not os.path.exists(path):
-        return [f"roofline,SKIP,no {path} (run repro.launch.dryrun first)"]
-    rows = []
-    for rec in json.load(open(path)):
-        if not rec.get("ok"):
-            rows.append(f"roofline,{rec['arch']},{rec['shape']},{rec['mesh']},FAILED")
-            continue
-        a = analyse(rec)
-        rows.append(
-            f"roofline,{rec['arch']},{rec['shape']},{rec['mesh']},sync={rec.get('sync','auto')},"
-            f"compute_s={a['t_compute']:.4f},memory_s={a['t_memory']:.4f},"
-            f"collective_s={a['t_collective']:.4f},dominant={a['dominant']},"
-            f"useful={a['useful_fraction']:.2f},roofline={a['roofline_fraction']:.3f},"
-            f"peakGB={rec['peak_bytes_per_device'] / 1e9:.1f}"
-        )
-    return rows
+@functools.lru_cache(maxsize=1)
+def _records() -> tuple:
+    return tuple(json.load(open(DRYRUN_PATH)))
+
+
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    """One scenario per dry-run record (the dryrun JSON is the work list);
+    a single ``skip`` scenario when no dry-run output exists."""
+    if not os.path.exists(DRYRUN_PATH):
+        return [S.make(SUITE, "skip")]
+    return [
+        S.make(SUITE, f"{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+               index=i)
+        for i, rec in enumerate(_records())
+    ]
+
+
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    if sc.name == "skip":
+        return [{"skip": f"no {DRYRUN_PATH} (run repro.launch.dryrun first)"}]
+    rec = _records()[sc.opts["index"]]
+    if not rec.get("ok"):
+        return [{"arch": rec["arch"], "shape": rec["shape"],
+                 "mesh": rec["mesh"], "failed": True}]
+    a = analyse(rec)
+    return [{
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "sync": rec.get("sync", "auto"),
+        "compute_s": round(a["t_compute"], 4),
+        "memory_s": round(a["t_memory"], 4),
+        "collective_s": round(a["t_collective"], 4),
+        "dominant": a["dominant"],
+        "useful": round(a["useful_fraction"], 2),
+        "roofline": round(a["roofline_fraction"], 3),
+        "peakGB": round(rec["peak_bytes_per_device"] / 1e9, 1),
+    }]

@@ -1,22 +1,78 @@
-"""Benchmark harness: one module per paper table/figure + roofline.
+"""Benchmark harness: a declarative scenario runner.
 
-Prints ``name,...`` CSV rows by default.  ``--json [PATH]`` additionally
-emits one machine-readable JSON document (rows + wall-clock per suite — the
-seed of the ``BENCH_*.json`` perf trajectory) to PATH, or to stdout as the
-only output when PATH is omitted.
+Every suite is *data plus a compute function* (see
+``benchmarks/scenarios.py``): ``scenarios(ctx)`` enumerates
+:class:`~benchmarks.scenarios.Scenario` records (each naming its topology
+as a :mod:`repro.core.registry` spec string), ``compute(scenario, ctx)``
+produces result rows as dicts, and an optional ``summarize`` derives
+cross-scenario rows.  The runner tags every row with its suite, scenario
+and topology spec, so ``--json`` output is uniformly machine-readable —
+CI validates it against ``benchmarks/schema.json``.
 
-``--full`` runs the paper-size (1k-endpoint) flow simulations — seconds on
-the vectorized engine (cached afterwards; the ``flowsim_micro`` suite also
-times the retained scalar oracle, which is what used to take ~5 min).
-``--scale N`` sweeps HxMesh alltoall/allreduce past 1k endpoints.
-``--quick`` is the CI smoke mode: reduced trials/jobs everywhere and the
-scalar-oracle timing suite skipped.
+Prints one CSV-ish line per row by default.  ``--json [PATH]`` emits the
+JSON report to PATH, or to stdout as the only output when PATH is
+omitted.  ``--full`` runs the paper-size (1k-endpoint) flow simulations.
+``--scale N`` adds the endpoint-scale sweep suite.  ``--quick`` is the CI
+smoke mode: reduced trials/jobs everywhere and the scalar-oracle timing
+suite skipped.  ``--only suite1,suite2`` restricts the run.
 """
 
 import argparse
 import json
 import sys
 import time
+
+
+def _suite_registry(args):
+    """Ordered {suite name: module-like} for this invocation.  A suite is
+    anything with ``scenarios(ctx)`` + ``compute(sc, ctx)`` (+ optional
+    ``summarize``); the scale sweep reuses table2_bandwidth's functions
+    under its own name."""
+    from types import SimpleNamespace
+
+    from benchmarks import (cluster_sched, fig8_utilization, fig10_failures,
+                            fig13_allreduce, fig15_workloads, flowsim_micro,
+                            roofline, table2_bandwidth, table2_cost)
+
+    suites = {
+        "table2_cost": table2_cost,
+        "table2_bandwidth": table2_bandwidth,
+        "fig8_utilization": fig8_utilization,
+        "fig10_failures": fig10_failures,
+        "fig13_allreduce": fig13_allreduce,
+        "fig15_workloads": fig15_workloads,
+        "roofline": roofline,
+        "flowsim_micro": flowsim_micro,
+        "cluster_sched": cluster_sched,
+    }
+    if args.quick:
+        del suites["flowsim_micro"]  # times the slow scalar oracle
+    if args.scale:
+        suites["scale"] = SimpleNamespace(
+            SUITE="scale",
+            scenarios=table2_bandwidth.scale_scenarios,
+            compute=table2_bandwidth.scale_compute,
+        )
+    return suites
+
+
+def run_suite(mod, ctx, quiet: bool):
+    """Run one suite: enumerate scenarios, compute each, summarize."""
+    from benchmarks import scenarios as S
+
+    scs = mod.scenarios(ctx)
+    results: list[tuple[S.Scenario, list[dict]]] = []
+    rows: list[dict] = []
+    for sc in scs:
+        out = mod.compute(sc, ctx)
+        results.append((sc, out))
+        rows.extend(S.tag_rows(sc, out))
+    if hasattr(mod, "summarize"):
+        rows.extend(S.tag_summary(mod.SUITE, mod.summarize(results, ctx)))
+    if not quiet:
+        for row in rows:
+            print(S.render(row), flush=True)
+    return scs, rows
 
 
 def main() -> None:
@@ -35,28 +91,10 @@ def main() -> None:
                     help="CI smoke mode: reduced trials, no oracle timing")
     args = ap.parse_args()
 
-    from benchmarks import (cluster_sched, fig8_utilization, fig10_failures,
-                            fig13_allreduce, fig15_workloads, flowsim_micro,
-                            roofline, table2_bandwidth, table2_cost)
+    from benchmarks.scenarios import RunContext
 
-    trials = 5 if args.quick else 25
-    suites = {
-        "table2_cost": lambda: table2_cost.run(),
-        "table2_bandwidth": lambda: table2_bandwidth.run(full=args.full),
-        "fig8_utilization": lambda: fig8_utilization.run(trials=trials),
-        "fig10_failures": lambda: fig10_failures.run(
-            trials=5 if args.quick else 20),
-        "fig13_allreduce": lambda: fig13_allreduce.run(),
-        "fig15_workloads": lambda: fig15_workloads.run(),
-        "roofline": lambda: roofline.run(),
-        "flowsim_micro": lambda: flowsim_micro.run(full=args.full),
-        "cluster_sched": lambda: cluster_sched.run(
-            full=args.full, quick=args.quick),
-    }
-    if args.quick:
-        del suites["flowsim_micro"]  # times the slow scalar oracle
-    if args.scale:
-        suites["scale"] = lambda: table2_bandwidth.run_scale(args.scale)
+    ctx = RunContext(full=args.full, quick=args.quick, scale=args.scale)
+    suites = _suite_registry(args)
     only = set(args.only.split(",")) if args.only else None
     if only:
         unknown = only - set(suites)
@@ -66,25 +104,26 @@ def main() -> None:
     report = {"args": {"full": args.full, "scale": args.scale,
                        "quick": args.quick}, "suites": {}}
     quiet = args.json == "-"
-    for name, fn in suites.items():
+    for name, mod in suites.items():
         if only and name not in only:
             continue
         t0 = time.time()
         try:
-            rows = fn()
+            scs, rows = run_suite(mod, ctx, quiet)
             err = None
         except Exception as e:  # noqa: BLE001
-            rows, err = [], f"{type(e).__name__}: {e}"
+            scs, rows, err = [], [], f"{type(e).__name__}: {e}"
             if not quiet:
                 print(f"{name},ERROR,{err}", flush=True)
         dt = time.time() - t0
-        report["suites"][name] = {"rows": rows, "seconds": round(dt, 3)}
+        report["suites"][name] = {
+            "scenarios": [sc.describe() for sc in scs],
+            "rows": rows,
+            "seconds": round(dt, 3),
+        }
         if err:
             report["suites"][name]["error"] = err
             continue
-        if not quiet:
-            for row in rows:
-                print(row, flush=True)
         print(f"# {name}: {len(rows)} rows in {dt:.1f}s",
               file=sys.stderr, flush=True)
     if args.json == "-":

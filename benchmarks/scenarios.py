@@ -1,0 +1,118 @@
+"""Declarative scenario records for the benchmark harness.
+
+A benchmark suite is *data plus a small compute function*:
+
+* ``scenarios(ctx) -> list[Scenario]`` enumerates what to run — each
+  :class:`Scenario` names its topology (a :mod:`repro.core.registry` spec
+  string), traffic pattern, failure count, seed and trial count, plus
+  free-form ``params``;
+* ``compute(scenario, ctx) -> list[dict]`` runs one scenario and returns
+  result rows as plain dicts;
+* an optional ``summarize(results, ctx) -> list[dict]`` derives
+  cross-scenario rows (orderings, totals) from the per-scenario results.
+
+The runner (``benchmarks/run.py``) tags every row with ``suite``,
+``scenario`` and ``spec`` (the topology spec string, empty for
+non-topology rows), renders a CSV-ish text line per row, and emits the
+whole report as machine-readable JSON under ``--json`` — which CI
+validates against ``benchmarks/schema.json``.  New sweeps are one
+scenario list away: add records, not modules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One benchmark run: a topology spec + knobs, no behaviour."""
+
+    suite: str
+    name: str  # row-group label, unique within the suite
+    topology: str | None = None  # repro.core.registry spec string
+    pattern: str | None = None  # flowsim traffic pattern
+    failures: int = 0  # failed boards injected
+    seed: int = 0
+    trials: int = 1
+    params: tuple[tuple[str, object], ...] = ()  # sorted extra knobs
+
+    @property
+    def opts(self) -> dict:
+        return dict(self.params)
+
+    def describe(self) -> dict:
+        """JSON-serializable record of the scenario itself."""
+        return {
+            "suite": self.suite,
+            "name": self.name,
+            "topology": self.topology,
+            "pattern": self.pattern,
+            "failures": self.failures,
+            "seed": self.seed,
+            "trials": self.trials,
+            "params": dict(self.params),
+        }
+
+
+def make(
+    suite: str,
+    name: str,
+    *,
+    topology: str | None = None,
+    pattern: str | None = None,
+    failures: int = 0,
+    seed: int = 0,
+    trials: int = 1,
+    **params,
+) -> Scenario:
+    """Scenario constructor with ``params`` as keyword arguments."""
+    return Scenario(
+        suite=suite, name=name, topology=topology, pattern=pattern,
+        failures=failures, seed=seed, trials=trials,
+        params=tuple(sorted(params.items())),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class RunContext:
+    """Harness-wide switches every suite sees."""
+
+    full: bool = False  # paper-size (1k-endpoint) flow simulations
+    quick: bool = False  # CI smoke: reduced trials / jobs
+    scale: int = 0  # endpoint-scale sweep bound (0 = off)
+
+    def trials(self, n: int, quick_n: int = 5) -> int:
+        return quick_n if self.quick else n
+
+
+def _tag(suite: str, scenario: str, spec: str, rows: Iterable[dict]
+         ) -> list[dict]:
+    out = []
+    for row in rows:
+        tagged = {"suite": suite, "scenario": scenario, "spec": spec}
+        tagged.update({k: v for k, v in row.items()
+                       if k not in ("suite", "scenario", "spec")})
+        out.append(tagged)
+    return out
+
+
+def tag_rows(sc: Scenario, rows: Iterable[dict]) -> list[dict]:
+    """Stamp one scenario's suite/scenario/spec identity onto its rows."""
+    return _tag(sc.suite, sc.name, sc.topology or "", rows)
+
+
+def tag_summary(suite: str, rows: Iterable[dict]) -> list[dict]:
+    """Tag cross-scenario summary rows: whole-suite identity, empty spec."""
+    return _tag(suite, "SUMMARY", "", rows)
+
+
+def render(row: dict) -> str:
+    """One human-readable CSV-ish line per row."""
+    head = [str(row.get("suite", "")), str(row.get("scenario", ""))]
+    body = [
+        f"{k}={v}" for k, v in row.items()
+        if k not in ("suite", "scenario")
+    ]
+    return ",".join(head + body)

@@ -1,111 +1,92 @@
 """Table II (bandwidth columns) via the vectorized flow-level simulator.
 
-All rows run on the vectorized engine (repro.core.flowsim): alltoall and
-ring-allreduce achievable fractions per topology.  ``--full`` runs the
-paper-size (1,024-endpoint) validation — seconds on the vectorized engine
-(the retained scalar oracle needs ~1 min *per topology*; see the
-``flowsim_micro`` suite for the measured old-vs-new ratio).  ``--scale N``
-sweeps HxMeshes well past 1k endpoints.  Results are cached in
-``results/flowsim_cache.json``.
+Each scenario is one topology spec; the compute function reads the
+registry's measured fractions (alltoall + ring-allreduce + bisection,
+flow-level, cached in ``results/profile_cache.json``) and cross-checks
+them against the paper's packet-level values
+(``commodel.PAPER_TABLE2_BANDWIDTH``).  ``--full`` runs the paper-size
+(1,024-endpoint) validation; the default uses ~256-endpoint versions.
+``--scale N`` adds an endpoint-scale sweep (the ``scale`` suite).
 """
 
-import json
-import os
 import time
 
-from repro.core import flowsim as F
-from repro.core import topology as T
+from repro.core import commodel as C
+from repro.core import registry as R
 
-CACHE = "results/flowsim_cache.json"
-CACHE_VERSION = "v2"  # vectorized engine
+from benchmarks import scenarios as S
 
-# paper Table II small-cluster values for reference
-PAPER = {
-    "Hx2Mesh": {"alltoall": 0.254, "allreduce": 0.983},
-    "Hx4Mesh": {"alltoall": 0.113, "allreduce": 0.984},
-    "nonbl. FT": {"alltoall": 0.999, "allreduce": 0.989},
-    "50% tap. FT": {"alltoall": 0.512, "allreduce": 0.989},
-    "2D torus": {"alltoall": 0.020, "allreduce": 0.981},
+SUITE = "table2_bandwidth"
+
+# (table row -> reduced-size spec); full size comes from TABLE2_SPECS
+REDUCED_SPECS = {
+    "Hx2Mesh": "hx2-8x8",
+    "Hx4Mesh": "hx4-4x4",
+    "nonbl. FT": "ft256",
+    "50% tap. FT": "ft256-t50",
+    "2D torus": "torus-16x16",
 }
 
 
-def _cases(full: bool):
-    """Topology specs for build_network: (spec, links_per_endpoint)."""
+def _specs(full: bool) -> dict[str, str]:
     if full:
-        return {
-            "Hx2Mesh": (T.HxMesh(2, 2, 16, 16), 4),
-            "Hx4Mesh": (T.HxMesh(4, 4, 8, 8), 4),
-            "nonbl. FT": (T.FatTree(1024, 0.0), 1),
-            "50% tap. FT": (T.FatTree(1050, 0.5), 1),
-            "2D torus": (T.Torus2D(16, 16), 4),
-        }
-    return {
-        "Hx2Mesh": (T.HxMesh(2, 2, 8, 8), 4),
-        "Hx4Mesh": (T.HxMesh(4, 4, 4, 4), 4),
-        "nonbl. FT": (T.FatTree(256, 0.0), 1),
-        "50% tap. FT": (T.FatTree(256, 0.5), 1),
-        "2D torus": (T.Torus2D(8, 8), 4),
-    }
+        return {name: R.TABLE2_SPECS["small"][name] for name in REDUCED_SPECS}
+    return REDUCED_SPECS
 
 
-def _load_cache() -> dict:
-    if os.path.exists(CACHE):
-        return json.load(open(CACHE))
-    return {}
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    size = "full" if ctx.full else "reduced"
+    return [
+        S.make(SUITE, f"{size}/{name}", topology=spec, size=size,
+               table_row=name)
+        for name, spec in _specs(ctx.full).items()
+    ]
 
 
-def _store_cache(cache: dict) -> None:
-    os.makedirs(os.path.dirname(CACHE), exist_ok=True)
-    json.dump(cache, open(CACHE, "w"))
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    meas = R.parse(sc.topology).measured_fractions()
+    paper = C.PAPER_TABLE2_BANDWIDTH.get(sc.opts["table_row"], {})
+    return [{
+        "size": sc.opts["size"],
+        "name": sc.opts["table_row"],
+        "alltoall": round(meas["alltoall"], 3),
+        "paper_alltoall": paper.get("alltoall", "-"),
+        "allreduce": round(meas["allreduce"], 3),
+        "paper_allreduce": paper.get("allreduce", "-"),
+        "bisection": round(meas["bisection"], 3),
+    }]
 
 
-def bandwidth_fractions(spec, links: int) -> tuple[float, float]:
-    """(alltoall, ring-allreduce) achievable fractions for one topology."""
-    net = F.build_network(spec)
-    a2a = F.achievable_fraction(net, F.traffic_matrix(net, "alltoall"), links)
-    ared = F.achievable_fraction(
-        net, F.traffic_matrix(net, "ring-allreduce"), links)
-    return a2a, ared
+# -- the --scale sweep (its own suite in the runner) --------------------------
+
+SCALE_SUITE = "scale"
 
 
-def run(full: bool = False) -> list[str]:
-    cache = _load_cache()
-    key_sfx = "full" if full else "reduced"
-    rows = []
-    for name, (spec, links) in _cases(full).items():
-        key = f"{name}|{key_sfx}|{CACHE_VERSION}"
-        if key in cache:
-            a2a, ared = cache[key]
-        else:
-            a2a, ared = bandwidth_fractions(spec, links)
-            cache[key] = (a2a, ared)
-            _store_cache(cache)
-        paper = PAPER.get(name, {})
-        rows.append(
-            f"table2_bw,{key_sfx},{name},alltoall={a2a:.3f}"
-            f"(paper {paper.get('alltoall', '-')}),allreduce={ared:.3f}"
-            f"(paper {paper.get('allreduce', '-')})"
-        )
-    return rows
-
-
-def run_scale(max_endpoints: int = 4096) -> list[str]:
-    """Endpoint-count sweep past the paper's 1k cluster (the ``--scale``
-    mode): alltoall + ring-allreduce wall clock of the vectorized engine on
-    growing Hx4Meshes.  Infeasible on the scalar oracle (hours at 4k)."""
-    rows = []
+def scale_scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    """Growing Hx4Meshes up to ``ctx.scale`` endpoints (4x per step) —
+    infeasible on the retained scalar oracle (hours at 4k)."""
+    out = []
     x = 4
-    while True:
-        spec = T.HxMesh(4, 4, x, x)
-        n = spec.num_accelerators
-        if n > max_endpoints:
-            break
-        t0 = time.time()
-        a2a, ared = bandwidth_fractions(spec, 4)
-        dt = time.time() - t0
-        rows.append(
-            f"scale,{spec.name},endpoints={n},alltoall={a2a:.4f},"
-            f"allreduce={ared:.4f},seconds={dt:.2f}"
-        )
+    while R.parse(f"hx4-{x}x{x}").num_accelerators <= ctx.scale:
+        out.append(S.make(SCALE_SUITE, f"hx4-{x}x{x}",
+                          topology=f"hx4-{x}x{x}"))
         x *= 2
-    return rows
+    return out
+
+
+def scale_compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    from repro.core import flowsim as F
+
+    topo = R.parse(sc.topology)
+    net = topo.network()
+    t0 = time.time()
+    a2a = F.achievable_fraction(
+        net, F.traffic_matrix(net, "alltoall"), topo.links_per_endpoint)
+    ared = F.achievable_fraction(
+        net, F.traffic_matrix(net, "ring-allreduce"), topo.links_per_endpoint)
+    return [{
+        "endpoints": topo.num_accelerators,
+        "alltoall": round(a2a, 4),
+        "allreduce": round(ared, 4),
+        "seconds": round(time.time() - t0, 2),  # uncached: honest timing
+    }]

@@ -1,19 +1,43 @@
-"""Table II (cost & structure columns): all 8 topologies, both clusters."""
+"""Table II (cost & structure columns): all 8 topologies, both clusters.
 
+Pure data: one scenario per Table II row (``registry.TABLE2_SPECS``), the
+compute function derives everything from the spec's ``structure()`` view.
+"""
+
+from repro.core import registry as R
 from repro.core import topology as T
 
+from benchmarks import scenarios as S
 
-def run() -> list[str]:
-    rows = []
-    for label, build, paper in [
-        ("small", T.small_cluster(), T.PAPER_COSTS_SMALL),
-        ("large", T.large_cluster(), T.PAPER_COSTS_LARGE),
-    ]:
-        for name, tc in build.items():
-            err = (tc.cost_musd - paper[name]) / paper[name]
-            rows.append(
-                f"table2_cost,{label},{name},{tc.cost_musd:.2f},"
-                f"paper={paper[name]},err={err:+.1%},switches={tc.num_switches},"
-                f"dac={tc.num_dac},aoc={tc.num_aoc},diam={tc.diameter}"
-            )
-    return rows
+SUITE = "table2_cost"
+
+_PAPER = {"small": (T.PAPER_COSTS_SMALL, T.PAPER_DIAMETERS_SMALL),
+          "large": (T.PAPER_COSTS_LARGE, T.PAPER_DIAMETERS_LARGE)}
+
+
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    return [
+        S.make(SUITE, f"{cluster}/{name}", topology=spec,
+               cluster=cluster, table_row=name)
+        for cluster, specs in R.TABLE2_SPECS.items()
+        for name, spec in specs.items()
+    ]
+
+
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    cluster, name = sc.opts["cluster"], sc.opts["table_row"]
+    tc = R.parse(sc.topology).structure()
+    paper_costs, paper_diams = _PAPER[cluster]
+    paper = paper_costs[name]
+    return [{
+        "cluster": cluster,
+        "name": name,
+        "cost_musd": round(tc.cost_musd, 2),
+        "paper": paper,
+        "err": f"{(tc.cost_musd - paper) / paper:+.1%}",
+        "switches": tc.num_switches,
+        "dac": tc.num_dac,
+        "aoc": tc.num_aoc,
+        "diam": tc.diameter,
+        "paper_diam": paper_diams[name],
+    }]

@@ -1,0 +1,74 @@
+"""Validate a ``benchmarks/run.py --json`` report against the checked-in
+shape contract (``benchmarks/schema.json``).
+
+No third-party schema library: the contract is small and explicit —
+required suites, minimum row counts, required row keys (scenario tags on
+every row, per-suite metric keys on every non-SUMMARY row), scenario
+record keys, and boolean SUMMARY truths (the Fig-8 ladder ordering and
+the torus-vs-Hx2 flexibility check).  Exit 1 with one line per violation.
+
+Usage:  python benchmarks/validate_json.py report.json [schema.json]
+"""
+
+import json
+import sys
+
+
+def validate(report: dict, schema: dict) -> list[str]:
+    errors: list[str] = []
+    suites = report.get("suites", {})
+    for name, rules in schema["suites"].items():
+        if name not in suites:
+            if rules.get("required"):
+                errors.append(f"missing required suite: {name}")
+            continue
+        s = suites[name]
+        if "error" in s:
+            errors.append(f"suite {name} errored: {s['error']}")
+            continue
+        rows = s.get("rows", [])
+        if len(rows) < rules.get("min_rows", 1):
+            errors.append(
+                f"suite {name}: {len(rows)} rows < min {rules['min_rows']}"
+            )
+        for i, row in enumerate(rows):
+            for k in schema["required_row_keys"]:
+                if k not in row:
+                    errors.append(f"{name} row {i}: missing tag key {k!r}")
+            if row.get("scenario") == "SUMMARY":
+                continue
+            for k in rules.get("row_keys", []):
+                if k not in row:
+                    errors.append(f"{name} row {i}: missing key {k!r}")
+        for i, sc in enumerate(s.get("scenarios", [])):
+            for k in schema["scenario_keys"]:
+                if k not in sc:
+                    errors.append(f"{name} scenario {i}: missing {k!r}")
+    for name, flags in schema.get("summary_truths", {}).items():
+        rows = suites.get(name, {}).get("rows", [])
+        summary = [r for r in rows if r.get("scenario") == "SUMMARY"]
+        for flag in flags:
+            if not any(r.get(flag) is True for r in summary):
+                errors.append(
+                    f"suite {name}: no SUMMARY row asserts {flag}=true"
+                )
+    return errors
+
+
+def main() -> None:
+    if not 2 <= len(sys.argv) <= 3:
+        sys.exit(__doc__)
+    report = json.load(open(sys.argv[1]))
+    schema_path = sys.argv[2] if len(sys.argv) == 3 else "benchmarks/schema.json"
+    schema = json.load(open(schema_path))
+    errors = validate(report, schema)
+    for e in errors:
+        print(f"SCHEMA: {e}")
+    if errors:
+        sys.exit(1)
+    n = sum(len(s.get("rows", [])) for s in report.get("suites", {}).values())
+    print(f"schema OK: {len(report.get('suites', {}))} suites, {n} rows")
+
+
+if __name__ == "__main__":
+    main()

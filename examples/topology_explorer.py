@@ -1,24 +1,55 @@
-"""Sweep the HxMesh design space (board size x global size): the cost /
-global-bandwidth / flexibility trade-off of paper Fig 1.
+"""Explore topologies by spec string (the unified topology API).
+
+Pass any registry specs on the command line; with no arguments, sweep the
+HxMesh design space around 1k accelerators (the cost / global-bandwidth /
+flexibility trade-off of paper Fig 1) against a fat-tree baseline.
 
   PYTHONPATH=src python examples/topology_explorer.py
+  PYTHONPATH=src python examples/topology_explorer.py hx4-8x8 torus-32x32 ft1024
 """
 
-from repro.core.topology import HxMesh, FatTree
+import sys
 
-print(f"{'topology':20s} {'accels':>7s} {'cost M$':>8s} {'$/accel':>8s} "
-      f"{'bisect':>7s} {'diam':>5s}")
-ft = FatTree(1024, 0.0).structure()
-print(f"{'nonblocking FT':20s} {ft.num_accelerators:7d} {ft.cost_musd:8.1f} "
-      f"{ft.cost/ft.num_accelerators:8.0f} {ft.bisection_fraction:7.2f} {ft.diameter:5d}")
-for a in (1, 2, 4, 8):
-    for x in (32, 16, 8, 4):
-        hx = HxMesh(a, a, x, x)
-        if not 900 <= hx.num_accelerators <= 1100:
-            continue
-        tc = hx.structure()
-        print(f"{tc.name:20s} {tc.num_accelerators:7d} {tc.cost_musd:8.1f} "
-              f"{tc.cost/tc.num_accelerators:8.0f} {tc.bisection_fraction:7.3f} "
-              f"{tc.diameter:5d}")
-print("\nTapering the global trees (paper §III-F) scales the cost of the "
-      "switched layer by the taper factor while rings stay full-bandwidth.")
+from repro.core.registry import parse
+from repro.core.topology import HxMesh
+
+HEADER = (f"{'spec':16s} {'topology':20s} {'accels':>7s} {'cost M$':>8s} "
+          f"{'$/accel':>8s} {'bisect':>7s} {'diam':>5s} {'boards':>7s}")
+
+
+def describe(spec: str) -> str:
+    t = parse(spec)
+    tc = t.structure()
+    alloc = t.allocator()
+    boards = f"{alloc.x}x{alloc.y}" if alloc is not None else "-"
+    return (f"{t.spec:16s} {tc.name:20s} {tc.num_accelerators:7d} "
+            f"{tc.cost_musd:8.1f} {tc.cost / tc.num_accelerators:8.0f} "
+            f"{tc.bisection_fraction:7.3f} {tc.diameter:5d} {boards:>7s}")
+
+
+def default_sweep() -> list[str]:
+    """HxMesh board-size x global-size sweep around 1k accelerators."""
+    specs = ["ft1024"]
+    for a in (1, 2, 4, 8):
+        for x in (32, 16, 8, 4):
+            if 900 <= HxMesh(a, a, x, x).num_accelerators <= 1100:
+                specs.append(f"hx{a}-{x}x{x}")
+    return specs
+
+
+def main(argv: list[str]) -> None:
+    specs = argv or default_sweep()
+    print(HEADER)
+    for spec in specs:
+        try:
+            print(describe(spec))
+        except ValueError as e:
+            print(f"{spec:16s} ERROR: {e}")
+    if not argv:
+        print("\nTapering the global trees (paper §III-F) scales the cost of "
+              "the switched layer by the taper factor while rings stay "
+              "full-bandwidth.")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -91,7 +91,7 @@ class BestFitPolicy(Policy):
         for u, v in self.shapes(job):
             for pl in alloc.iter_blocks(u, v, locality=self.locality):
                 leftover = sum(len(alloc.free[r]) for r in pl.rows) - u * v
-                spread = pl.cols[-1] - pl.cols[0]
+                spread = alloc.col_spread(pl.cols)
                 score = (leftover, spread)
                 if best_score is None or score < best_score:
                     best, best_score = pl, score

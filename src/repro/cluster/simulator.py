@@ -38,6 +38,7 @@ from repro.cluster import metrics as M
 from repro.cluster.policies import Policy
 from repro.cluster.traces import TraceJob
 from repro.core import flowsim as F
+from repro.core import registry
 from repro.core.allocation import HxMeshAllocator
 
 EV_ARRIVAL, EV_FINISH, EV_FAIL, EV_REPAIR, EV_PROBE = range(5)
@@ -80,7 +81,15 @@ class AuditEvent:
 
 @dataclasses.dataclass
 class SimConfig:
-    """Cluster geometry + churn + probe knobs (all times in seconds)."""
+    """Cluster geometry + churn + probe knobs (all times in seconds).
+
+    ``topology`` is an optional :mod:`repro.core.registry` spec string
+    ("hx2-16x16", "torus-32x32"); when set, the board allocator and the
+    probed fabric come from the spec's registry views (a torus, for
+    example, gets the contiguity-constrained
+    :class:`repro.core.allocation.TorusAllocator`).  Use
+    :meth:`for_topology` to derive the geometry fields from the spec.
+    """
 
     x: int  # board columns
     y: int  # board rows
@@ -91,6 +100,19 @@ class SimConfig:
     probe_interval: float | None = None  # flowsim probe cadence (probes
     # fire only up to the last arrival, like the failure churn)
     seed: int = 0
+    topology: str | None = None  # registry spec string
+
+    @classmethod
+    def for_topology(cls, spec: str, **kw) -> "SimConfig":
+        """Build a config whose board grid comes from a topology spec —
+        family-agnostic: any registered family with an allocator works."""
+        topo = registry.parse(spec)
+        alloc = topo.allocator()
+        if alloc is None:
+            raise ValueError(f"{spec} has no board grid to schedule over")
+        board_a, board_b = topo.board_dims
+        return cls(topology=topo.spec, x=alloc.x, y=alloc.y,
+                   board_a=board_a, board_b=board_b, **kw)
 
 
 @dataclasses.dataclass
@@ -138,7 +160,7 @@ class ClusterSimulator:
     def __init__(self, config: SimConfig, policy: Policy):
         self.cfg = config
         self.policy = policy
-        self.alloc = HxMeshAllocator(config.x, config.y)
+        self.alloc = self._new_allocator()
         self.rng = random.Random(config.seed)
         self.queue: list[QueueEntry] = []
         self.records: dict[int, JobRecord] = {}
@@ -301,9 +323,25 @@ class ClusterSimulator:
             rec.status = "queued"
             self.queue.insert(0, QueueEntry(job=rec.job, remaining=remaining))
 
+    def _new_allocator(self) -> HxMeshAllocator:
+        """A fresh, empty allocator of the configured topology family."""
+        if self.cfg.topology:
+            alloc = registry.parse(self.cfg.topology).allocator()
+            if alloc is None:
+                raise ValueError(
+                    f"{self.cfg.topology} has no board grid to schedule over"
+                )
+            if (alloc.x, alloc.y) != (self.cfg.x, self.cfg.y):
+                raise ValueError(
+                    f"{self.cfg.topology} board grid {alloc.x}x{alloc.y} "
+                    f"does not match SimConfig {self.cfg.x}x{self.cfg.y}"
+                )
+            return alloc
+        return HxMeshAllocator(self.cfg.x, self.cfg.y)
+
     def _surviving_probe(self) -> HxMeshAllocator:
         """An empty allocator with only the current failures applied."""
-        probe = HxMeshAllocator(self.cfg.x, self.cfg.y)
+        probe = self._new_allocator()
         for r, c in self.alloc.failed:
             probe.fail_board(r, c)
         return probe
@@ -366,9 +404,12 @@ class ClusterSimulator:
 
     def _net_now(self) -> F.Network:
         if self._base_net is None:
-            self._base_net = F.build_hxmesh(
-                self.cfg.board_a, self.cfg.board_b, self.cfg.x, self.cfg.y
-            )
+            if self.cfg.topology:
+                self._base_net = registry.parse(self.cfg.topology).network()
+            else:
+                self._base_net = F.build_hxmesh(
+                    self.cfg.board_a, self.cfg.board_b, self.cfg.x, self.cfg.y
+                )
         if not self.alloc.failed:
             return self._base_net
         return F.build_network(

@@ -3,7 +3,10 @@
 A trace is a list of :class:`TraceJob` — arrival time, requested board shape
 ``u × v``, workload class, and a service time derived from
 :mod:`repro.core.commodel` iteration-time estimates (so the compute /
-communication mix of the workload shapes the schedule).
+communication mix of the workload shapes the schedule).  The ``topology``
+argument of the generators accepts either a paper profile name
+("Hx2Mesh") or a :mod:`repro.core.registry` spec string ("hx2-16x16",
+"torus-32x32") — durations resolve through :func:`commodel.get_profile`.
 
 Two synthetic generators:
 

@@ -140,6 +140,11 @@ class HxMeshAllocator:
         """Greedy: the first candidate block (paper's allocator)."""
         return next(self.iter_blocks(u, v, locality=locality), None)
 
+    def col_spread(self, cols: list[int]) -> int:
+        """Width of the column span a placement occupies — the tie-break
+        used by best-fit scoring and the §IV-A locality heuristic."""
+        return max(cols) - min(cols) if cols else 0
+
     def commit(self, job: Job, pl: Placement) -> Placement:
         """Commit a candidate placement produced by :meth:`iter_blocks`."""
         pl.jid = job.jid
@@ -162,6 +167,45 @@ class HxMeshAllocator:
             if pl is not None:
                 return self.commit(job, pl)
         return None
+
+
+class TorusAllocator(HxMeshAllocator):
+    """Board allocator for a 2D torus of boards (paper Figs 8-9 comparison).
+
+    A torus job must occupy a *physically contiguous* rectangle of boards
+    (contiguity modulo wraparound in each dimension) — unlike HammingMesh,
+    rows and columns cannot be stitched together from arbitrary free lines.
+    This is exactly the flexibility gap the paper's §IV allocation study
+    quantifies; everything else (free-set bookkeeping, commit/release,
+    failure handling, the policy interface) is shared with
+    :class:`HxMeshAllocator`.
+    """
+
+    def col_spread(self, cols: list[int]) -> int:
+        """Minimal covering arc on the column ring (wraparound blocks like
+        ``[3, 0]`` span 1 column, not 3)."""
+        if len(cols) <= 1:
+            return 0
+        cs = sorted(cols)
+        gaps = [(cs[(i + 1) % len(cs)] - cs[i]) % self.x
+                for i in range(len(cs))]
+        return self.x - max(gaps)
+
+    def iter_blocks(
+        self, u: int, v: int, locality: bool = False
+    ) -> Iterator[Placement]:
+        if u > self.y or v > self.x:
+            return
+        row_starts = range(self.y) if u < self.y else (0,)
+        col_starts = range(self.x) if v < self.x else (0,)
+        for r0 in row_starts:
+            rows = [(r0 + i) % self.y for i in range(u)]
+            if any(len(self.free[r]) < v for r in rows):
+                continue
+            for c0 in col_starts:
+                cols = [(c0 + j) % self.x for j in range(v)]
+                if all(c in self.free[r] for r in rows for c in cols):
+                    yield Placement(jid=-1, rows=rows, cols=cols)
 
 
 def job_shapes(

@@ -103,8 +103,20 @@ def best_algorithm(p: int, size: float, **kw) -> tuple[str, float]:
 
 
 # ---------------------------------------------------------------------------
-# 3. Topology efficiency table (measured values from the paper, Table II /
-#    Figs 11-13; fractions of theoretical peak)
+# 3. Topology efficiency profiles
+#
+# Provenance: the entries in PROFILES are *transcribed calibration
+# constants* — costs from Table II, bandwidth fractions from the paper's
+# packet-level SST microbenchmarks (Table II bandwidth columns / Figs
+# 11-13, at the paper's simulated scales), hop_eff calibrated once on the
+# paper's GPT-3 results.  They are the source of truth for the *workload
+# model* only (iteration-time predictions validated against
+# PAPER_ITERATION_MS).  For fractions *measured from our own fabric
+# simulation*, use the unified topology API —
+# ``repro.core.registry.parse(spec).profile()`` — which fills global_bw /
+# allreduce_eff / bisection from flow-level measurements on the actual
+# link graph; tests cross-check the two against PAPER_TABLE2_BANDWIDTH so
+# neither can silently drift.
 # ---------------------------------------------------------------------------
 
 
@@ -122,9 +134,15 @@ class TopologyProfile:
     # then predictions.  HxMesh keeps most hops on-board; a torus must fold
     # 96-deep pipelines with stretch; tapered trees lose uplink bandwidth.
     hop_eff: float
+    # relative bisection bandwidth; None in the transcribed table (the paper
+    # reports it analytically), filled by registry.Topology.profile()
+    bisection: float | None = None
+    # where the numbers come from: "paper" for the transcribed table below,
+    # "measured(flowsim)" for registry-derived profiles
+    provenance: str = "paper Table II / §V SST microbenchmarks (transcribed)"
 
 
-TOPOLOGIES = {
+PROFILES = {
     "nonbl. FT": TopologyProfile("nonbl. FT", 25.3, 680.0, 0.998, 0.989, 1.0),
     "50% tap. FT": TopologyProfile("50% tap. FT", 17.6, 419.0, 0.998, 0.476, 0.38),
     "75% tap. FT": TopologyProfile("75% tap. FT", 13.2, 271.0, 0.998, 0.240, 0.27),
@@ -134,6 +152,44 @@ TOPOLOGIES = {
     "Hx4Mesh": TopologyProfile("Hx4Mesh", 2.7, 43.3, 0.922, 0.105, 0.063),
     "2D torus": TopologyProfile("2D torus", 2.5, 39.5, 0.914, 0.011, 0.026),
 }
+
+# Back-compat alias (pre-registry name).
+TOPOLOGIES = PROFILES
+
+# Paper Table II bandwidth columns (packet-level SST, ~1k-accelerator
+# clusters): achieved alltoall / large-message allreduce fractions of
+# injection bandwidth.  Kept as the cross-check target for the *measured*
+# flow-level fractions of ``registry.Topology.profile()`` — the flow model
+# is an idealized-ECMP upper bound, so measured >= paper up to model error
+# (tight for switched topologies; ~3x loose for the torus, where
+# packet-level congestion dominates).
+PAPER_TABLE2_BANDWIDTH = {
+    "Hx2Mesh": {"alltoall": 0.254, "allreduce": 0.983},
+    "Hx4Mesh": {"alltoall": 0.113, "allreduce": 0.984},
+    "nonbl. FT": {"alltoall": 0.999, "allreduce": 0.989},
+    "50% tap. FT": {"alltoall": 0.512, "allreduce": 0.989},
+    "2D torus": {"alltoall": 0.020, "allreduce": 0.981},
+}
+
+
+def get_profile(topology: str, measured: bool = False) -> TopologyProfile:
+    """Resolve a profile from a paper table name *or* a registry spec string.
+
+    Table names ("Hx2Mesh", "nonbl. FT", ...) and spec strings whose family
+    maps onto a table row ("hx2-16x16", "ft1024", ...) return the transcribed
+    calibration profile — the workload model's source of truth — unless
+    ``measured=True``, which returns flow-level measured fractions for the
+    spec's actual scale via :mod:`repro.core.registry`.
+    """
+    from repro.core import registry  # lazy: registry imports this module
+
+    if topology in PROFILES:
+        if not measured:
+            return PROFILES[topology]
+        # table names measure at the paper's small-cluster scale (the scale
+        # of the Table II microbenchmarks the transcribed row came from)
+        topology = registry.TABLE2_SPECS["small"][topology]
+    return registry.parse(topology).profile(measured=measured)
 
 
 # ---------------------------------------------------------------------------
@@ -230,10 +286,11 @@ WORKLOADS = {
 
 
 def iteration_ms(workload: str, topology: str = "Hx2Mesh") -> float:
-    """Predicted iteration time (ms) of a named workload on a named topology
-    profile — the service-rate input of the cluster scheduler
+    """Predicted iteration time (ms) of a named workload on a topology —
+    a paper profile name or a registry spec string ("hx2-16x16") — the
+    service-rate input of the cluster scheduler
     (:mod:`repro.cluster.traces`)."""
-    return WORKLOADS[workload](TOPOLOGIES[topology]).iteration_ms
+    return WORKLOADS[workload](get_profile(topology)).iteration_ms
 
 
 def job_duration_s(
@@ -274,8 +331,9 @@ PAPER_ITERATION_MS = {
 
 def cost_savings(workload: str, topology: str, baseline: str = "nonbl. FT",
                  cluster: str = "large") -> float:
-    """Fig 15: cost ratio × inverse ratio of communication overheads."""
-    topo, base = TOPOLOGIES[topology], TOPOLOGIES[baseline]
+    """Fig 15: cost ratio × inverse ratio of communication overheads.
+    ``topology``/``baseline`` accept paper names or registry specs."""
+    topo, base = get_profile(topology), get_profile(baseline)
     fn = WORKLOADS[workload]
     w_t, w_b = fn(topo), fn(base)
     cost_t = topo.cost_large if cluster == "large" else topo.cost_small

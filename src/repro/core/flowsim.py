@@ -39,7 +39,11 @@ an already-built :class:`Network` or a :mod:`repro.core.topology` spec
 descriptors (node ids, ``("board", bx, by)``, ``("link", u, v)``).  Traffic
 matrices come from :func:`traffic_matrix` with pluggable patterns —
 ``uniform``/``alltoall``, ``bit-complement``, ``ring-allreduce`` (dual
-edge-disjoint Hamiltonian rings where the geometry supports them).
+edge-disjoint Hamiltonian rings where the geometry supports them),
+``transpose``/``tornado``/``permutation``, ``skewed-alltoall`` (DLRM/MoE
+hot-expert skew), and ``bisection`` (cross-cut traffic whose achievable
+fraction is the measured bisection fraction — the
+:mod:`repro.core.registry` profile view builds on it).
 
 Graphs model ONE plane (as the paper simulates): every accelerator has 4
 links (E/W/N/S) in an HxMesh plane, or 1 uplink in a fat-tree plane.  All
@@ -761,6 +765,94 @@ def _tornado_matrix(net: Network, volume: float = 1.0, **_kw) -> np.ndarray:
     return T
 
 
+def _skewed_alltoall_matrix(
+    net: Network,
+    skew: float = 0.75,
+    hot: int = 4,
+    seed: int = 0,
+    **_kw,
+) -> np.ndarray:
+    """DLRM/MoE-style alltoall with per-source hot-expert skew.
+
+    Every active endpoint sends unit volume total: a ``skew`` share is
+    concentrated on ``hot`` seeded "popular expert" destinations (drawn
+    independently per source, so hot sets overlap and create incast), the
+    remaining ``1 - skew`` is spread uniformly over all peers.  ``skew=0``
+    degenerates to the uniform alltoall; ``skew=1`` is pure hot-expert
+    traffic.  Seeded — the matrix is a pure function of ``(net, kwargs)``.
+    """
+    if not 0.0 <= skew <= 1.0:
+        raise ValueError(f"skew must be in [0, 1], got {skew}")
+    n = net.n_endpoints
+    act = net.active_endpoints()
+    T = np.zeros((n, n))
+    if len(act) < 2:
+        return T
+    if skew < 1.0:
+        T[np.ix_(act, act)] = (1.0 - skew) / (len(act) - 1)
+    rng = np.random.default_rng(seed)
+    hot = max(1, min(hot, len(act) - 1))
+    for s in act:
+        peers = act[act != s]
+        hot_dsts = rng.choice(peers, size=hot, replace=False)
+        T[s, hot_dsts] += skew / hot
+    T[act, act] = 0.0
+    return T
+
+
+def _bisection_matrix(net: Network, **_kw) -> np.ndarray:
+    """Cross-bisection uniform traffic: each active endpoint sends unit
+    volume spread uniformly over the active endpoints of the *opposite*
+    half.  All traffic crosses the cut, so the achievable fraction under
+    this pattern *is* the measured bisection fraction: a sustainable
+    per-endpoint rate ``f`` means cut bandwidth ``f·(n/2)·injection``,
+    i.e. ``f`` of the ideal full-bisection network.
+
+    Halves follow the builder grid when the geometry provides one (first
+    half of the rows — the cut the paper's §III-A formula counts; on an
+    HxMesh the cut row is aligned to a board boundary), else the
+    endpoint-id split (fat trees and dragonflies are symmetric under
+    relabeling).  When the halves are unequal (odd board rows), per-source
+    volumes are scaled so each direction still carries ``n/2`` total —
+    keeping the measured fraction equal to ``cut_bw / (half injection)``
+    regardless of the split."""
+    n = net.n_endpoints
+    act = net.active_endpoints()
+    T = np.zeros((n, n))
+    if len(act) < 2:
+        return T
+    geo = _grid_geometry(net)
+    if geo is not None:
+        r, c, gid = geo
+        cut = r // 2
+        if net.meta.get("kind") == "hxmesh":
+            # align the cut to a board boundary: a cut through a board's
+            # interior would let cross traffic ride on-board mesh links,
+            # which the paper's §III-A inter-board cut formula excludes
+            b = net.meta["b"]
+            aligned = (cut // b) * b
+            if 0 < aligned < r:
+                cut = aligned
+        top = {gid(rr, cc) for rr in range(cut) for cc in range(c)}
+        left = np.array([e for e in act if e in top], dtype=np.int64)
+        right = np.array([e for e in act if e not in top], dtype=np.int64)
+    else:
+        half = len(act) // 2
+        left, right = act[:half], act[half:]
+    if not len(left) or not len(right):
+        # no cross-cut traffic is expressible; returning zeros would make
+        # achievable_fraction report a perfect 1.0 for a fabric with zero
+        # surviving cut capacity
+        raise ValueError(
+            "bisection pattern undefined: every active endpoint is on one "
+            "side of the cut"
+        )
+    half = len(act) / 2.0
+    T[np.ix_(left, right)] = half / len(left) / len(right)
+    T[np.ix_(right, left)] = half / len(right) / len(left)
+    return T
+
+
 def _permutation_matrix(
     net: Network, seed: int = 0, samples: int = 1, volume: float = 1.0, **_kw
 ) -> np.ndarray:
@@ -791,6 +883,8 @@ TRAFFIC_PATTERNS = {
     "transpose": _transpose_matrix,
     "tornado": _tornado_matrix,
     "permutation": _permutation_matrix,
+    "skewed-alltoall": _skewed_alltoall_matrix,
+    "bisection": _bisection_matrix,
 }
 
 

@@ -118,6 +118,76 @@ def test_permutation_pattern_seeded():
     assert multi.sum(axis=1).max() <= 1.0 + 1e-12
 
 
+@pytest.mark.parametrize("name", ["hx2mesh", "torus", "fat-tree", "dragonfly"])
+def test_skewed_alltoall_matches_oracle(name):
+    """DLRM/MoE-style skewed alltoall: engine == oracle on the same
+    seeded matrix."""
+    net = TOPOLOGIES[name]()
+    Tm = F.traffic_matrix(net, "skewed-alltoall", seed=11)
+    assert F.max_link_load(net, Tm) == pytest.approx(
+        O.max_link_load(net, O.matrix_to_triples(Tm)), abs=1e-9
+    )
+
+
+def test_skewed_alltoall_properties():
+    """Per-source unit volume, seeded determinism, skew knob semantics."""
+    net = F.build_hxmesh(2, 2, 4, 4)
+    Tm = F.traffic_matrix(net, "skewed-alltoall", seed=0)
+    act = net.active_endpoints()
+    # every source sends exactly unit volume, none to itself
+    np.testing.assert_allclose(Tm[act].sum(axis=1), 1.0)
+    assert np.diagonal(Tm).max() == 0.0
+    # seeded: same seed == same matrix, different seed differs
+    np.testing.assert_array_equal(
+        Tm, F.traffic_matrix(net, "skewed-alltoall", seed=0))
+    assert (Tm != F.traffic_matrix(net, "skewed-alltoall", seed=1)).any()
+    # skew=0 degenerates to the uniform alltoall
+    np.testing.assert_allclose(
+        F.traffic_matrix(net, "skewed-alltoall", skew=0.0),
+        F.traffic_matrix(net, "alltoall"),
+    )
+    # skew=1 concentrates everything on `hot` destinations per source
+    hot_only = F.traffic_matrix(net, "skewed-alltoall", skew=1.0, hot=2)
+    assert ((hot_only > 0).sum(axis=1)[act] == 2).all()
+    # hot-expert incast makes the skewed pattern no easier than uniform
+    assert F.max_link_load(net, Tm) >= F.max_link_load(
+        net, F.traffic_matrix(net, "alltoall")) - 1e-9
+    with pytest.raises(ValueError):
+        F.traffic_matrix(net, "skewed-alltoall", skew=1.5)
+
+
+def test_bisection_pattern_measures_cut():
+    """The bisection pattern's achievable fraction reproduces the paper's
+    analytic cuts: 1/(2a) on an HxaMesh (§III-A), 4*side/(4*n) on a torus."""
+    hx = F.build_hxmesh(2, 2, 4, 4)
+    assert F.achievable_fraction(
+        hx, F.traffic_matrix(hx, "bisection"), 4) == pytest.approx(0.25)
+    tor = F.build_torus(8, 8)
+    assert F.achievable_fraction(
+        tor, F.traffic_matrix(tor, "bisection"), 4) == pytest.approx(1 / 8)
+    # every flow crosses the cut (no intra-half traffic)
+    Tm = F.traffic_matrix(tor, "bisection")
+    top = set(range(32))
+    for s in range(64):
+        for t in np.nonzero(Tm[s])[0]:
+            assert (s in top) != (int(t) in top)
+    # odd board-row grids: the cut aligns to a board boundary instead of
+    # splitting boards (on-board links are not part of the §III-A cut) and
+    # volumes renormalize to n/2 per direction.  hx2-4x5 splits 2|3 board
+    # rows: cut capacity is 2a*x*min-side links = 32, half injection is
+    # 40*4 = 160 -> 0.2 (the even-split 1/(2a) needs an even board grid)
+    odd = F.build_hxmesh(2, 2, 4, 5)  # 10 grid rows -> cut at row 4, not 5
+    assert F.achievable_fraction(
+        odd, F.traffic_matrix(odd, "bisection"), 4) == pytest.approx(0.2)
+    # degenerate cut: all survivors on one side must not report a perfect
+    # fabric — the pattern refuses instead of emitting a zero matrix
+    spec = T.HxMesh(2, 2, 2, 2)
+    half_dead = F.build_network(
+        spec, failures=[("board", bx, 0) for bx in range(2)])
+    with pytest.raises(ValueError):
+        F.traffic_matrix(half_dead, "bisection")
+
+
 def test_failure_injection_matches_oracle():
     """Board + node + link failures: engine and oracle agree on the broken
     graph, and the achievable fraction degrades (not improves)."""
