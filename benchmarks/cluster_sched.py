@@ -127,6 +127,8 @@ def _compute_bw(sc: S.Scenario) -> list[dict]:
             "achieved_min": round(min(rec.achieved_bw), 3),
             "evictions": rec.n_evictions,
             "remaps": rec.n_remaps,
+            # the reproducible address of the job's last measurement
+            "probe_scenario": rec.probe_scenario,
         })
     if len(observed) > max_job_rows:
         rows.append({"kind": "bw", "truncated": True,

@@ -8,11 +8,9 @@ Two scenario groups, both per the paper's §IV-B story:
   with ``("board", bx, by)`` failures applied.
 """
 
-import random
 import statistics
 
 from repro.core import allocation as A
-from repro.core import flowsim as F
 from repro.core import registry as R
 
 from benchmarks import scenarios as S
@@ -65,21 +63,20 @@ def _compute_alloc(sc: S.Scenario) -> list[dict]:
 
 
 def _compute_bw(sc: S.Scenario) -> list[dict]:
-    """Surviving-fabric alltoall bandwidth vs failed boards (flowsim)."""
-    topo = R.parse(sc.topology)
-    boards = [(bx, by) for bx in range(topo.impl.x)
-              for by in range(topo.impl.y)]
-    fracs = []
+    """Surviving-fabric alltoall bandwidth vs failed boards: per trial one
+    seeded scenario string, measured (and disk-cached) by the registry.
+    The row lists every trial's scenario token — the record-level tag
+    alone (implicit seed 0) would not reproduce the median."""
+    base = sc.parsed()
+    tokens = []
     for seed in range(sc.trials):
-        rng = random.Random(seed)
-        failed = rng.sample(boards, sc.failures)
-        net = topo.network(
-            failures=[("board", bx, by) for bx, by in failed])
-        fracs.append(F.achievable_fraction(
-            net, F.traffic_matrix(net, sc.pattern),
-            topo.links_per_endpoint))
+        leg = f"fail=boards:{sc.failures}:seed{seed}" if sc.failures else ""
+        tokens.append(
+            f"{base.topology}/{base.traffic}" + (f"/{leg}" if leg else ""))
+    fracs = [R.measured_fraction(token) for token in tokens]
     return [{
         "kind": "bw",
         "failures": sc.failures,
         "alltoall_median": round(statistics.median(fracs), 3),
+        "trial_scenarios": tokens,
     }]

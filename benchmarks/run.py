@@ -14,7 +14,14 @@ JSON report to PATH, or to stdout as the only output when PATH is
 omitted.  ``--full`` runs the paper-size (1k-endpoint) flow simulations.
 ``--scale N`` adds the endpoint-scale sweep suite.  ``--quick`` is the CI
 smoke mode: reduced trials/jobs everywhere and the scalar-oracle timing
-suite skipped.  ``--only suite1,suite2`` restricts the run.
+suite skipped.
+
+``--only`` takes a comma-separated mix of suite names and *scenario
+tokens* (the ``registry.parse_scenario`` grammar): suite names restrict
+which suites run, scenario tokens restrict which records run within them
+— only the legs a token specifies are pinned, so ``--only hx2-16x16``
+runs every record on that topology across all suites while ``--only
+cluster_sched,torus-32x32`` runs just the torus records of one suite.
 """
 
 import argparse
@@ -56,18 +63,56 @@ def _suite_registry(args):
     return suites
 
 
-def run_suite(mod, ctx, quiet: bool):
-    """Run one suite: enumerate scenarios, compute each, summarize."""
+def _parse_only(ap, only_arg: str, suites) -> tuple:
+    """Split ``--only`` tokens into a suite-name set and a scenario-record
+    predicate.  A token is a suite name when it matches one, else it must
+    parse as a scenario token (only its specified legs are pinned)."""
+    from repro.core import registry as R
+
+    if not only_arg:
+        return None, None
+    suite_names: set[str] = set()
+    tokens: list[str] = []
+    for tok in only_arg.split(","):
+        if tok in suites:
+            suite_names.add(tok)
+            continue
+        try:
+            R.parse_scenario(tok)
+        except ValueError as e:
+            ap.error(f"--only token {tok!r} is neither a suite "
+                     f"(available: {sorted(suites)}) nor a scenario "
+                     f"token: {e}")
+        tokens.append(tok)
+
+    def scenario_filter(sc) -> bool:
+        return any(
+            sc.scenario and R.match_scenario(tok, sc.scenario)
+            for tok in tokens
+        )
+
+    return (suite_names or None,
+            scenario_filter if tokens else None)
+
+
+def run_suite(mod, ctx, quiet: bool, scenario_filter=None):
+    """Run one suite: enumerate scenarios, compute each, summarize.
+
+    ``scenario_filter(record) -> bool`` (from ``--only`` scenario tokens)
+    restricts which records run; the summarize hook only fires on an
+    unfiltered run (cross-scenario truths need every record)."""
     from benchmarks import scenarios as S
 
     scs = mod.scenarios(ctx)
+    if scenario_filter is not None:
+        scs = [sc for sc in scs if scenario_filter(sc)]
     results: list[tuple[S.Scenario, list[dict]]] = []
     rows: list[dict] = []
     for sc in scs:
         out = mod.compute(sc, ctx)
         results.append((sc, out))
         rows.extend(S.tag_rows(sc, out))
-    if hasattr(mod, "summarize"):
+    if hasattr(mod, "summarize") and scenario_filter is None:
         rows.extend(S.tag_summary(mod.SUITE, mod.summarize(results, ctx)))
     if not quiet:
         for row in rows:
@@ -80,7 +125,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-size (1k-endpoint) flowsim validation")
     ap.add_argument("--only", default="",
-                    help="comma-separated subset of benchmark names")
+                    help="comma-separated suite names and/or scenario "
+                         "tokens (registry grammar, e.g. hx2-16x16 or "
+                         "torus-32x32/alltoall)")
     ap.add_argument("--json", nargs="?", const="-", default=None,
                     metavar="PATH",
                     help="emit machine-readable results (to PATH, or stdout)")
@@ -95,12 +142,7 @@ def main() -> None:
 
     ctx = RunContext(full=args.full, quick=args.quick, scale=args.scale)
     suites = _suite_registry(args)
-    only = set(args.only.split(",")) if args.only else None
-    if only:
-        unknown = only - set(suites)
-        if unknown:  # e.g. a typo, or flowsim_micro under --quick
-            ap.error(f"unknown or unavailable suites: {sorted(unknown)} "
-                     f"(available: {sorted(suites)})")
+    only, scenario_filter = _parse_only(ap, args.only, suites)
     report = {"args": {"full": args.full, "scale": args.scale,
                        "quick": args.quick}, "suites": {}}
     quiet = args.json == "-"
@@ -109,7 +151,9 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            scs, rows = run_suite(mod, ctx, quiet)
+            scs, rows = run_suite(mod, ctx, quiet, scenario_filter)
+            if scenario_filter is not None and not scs:
+                continue  # no record of this suite matches the tokens
             err = None
         except Exception as e:  # noqa: BLE001
             scs, rows, err = [], [], f"{type(e).__name__}: {e}"

@@ -3,20 +3,24 @@
 A benchmark suite is *data plus a small compute function*:
 
 * ``scenarios(ctx) -> list[Scenario]`` enumerates what to run — each
-  :class:`Scenario` names its topology (a :mod:`repro.core.registry` spec
-  string), traffic pattern, failure count, seed and trial count, plus
-  free-form ``params``;
+  :class:`Scenario` is **one registry scenario string**
+  (``hx2-16x16/alltoall/fail=boards:8`` — topology, traffic and failure
+  set in a single token, parsed and canonicalized through
+  ``repro.core.registry.parse_scenario``) plus a row-group label, seed,
+  trial count and free-form ``params``;
 * ``compute(scenario, ctx) -> list[dict]`` runs one scenario and returns
   result rows as plain dicts;
 * an optional ``summarize(results, ctx) -> list[dict]`` derives
   cross-scenario rows (orderings, totals) from the per-scenario results.
 
 The runner (``benchmarks/run.py``) tags every row with ``suite``,
-``scenario`` and ``spec`` (the topology spec string, empty for
-non-topology rows), renders a CSV-ish text line per row, and emits the
-whole report as machine-readable JSON under ``--json`` — which CI
-validates against ``benchmarks/schema.json``.  New sweeps are one
-scenario list away: add records, not modules.
+``case`` (the row-group label), ``scenario`` (the parseable scenario
+string, empty for non-fabric rows) and ``spec`` (its topology leg),
+renders a CSV-ish text line per row, and emits the whole report as
+machine-readable JSON under ``--json`` — which CI validates against
+``benchmarks/schema.json``, round-tripping every ``scenario`` field
+through ``parse_scenario``.  New sweeps are one scenario string away:
+add records, not modules.
 """
 
 from __future__ import annotations
@@ -24,16 +28,22 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable
 
+from repro.core import registry as R
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One benchmark run: a topology spec + knobs, no behaviour."""
+    """One benchmark run: a registry scenario string + knobs, no behaviour.
+
+    ``scenario`` is canonical (normalized by ``parse_scenario`` in
+    :func:`make`) or ``""`` for records with no fabric (roofline rows,
+    model-curve rows).  ``topology`` / ``pattern`` / ``failures`` are
+    derived views of the string, kept for compute functions and tests.
+    """
 
     suite: str
     name: str  # row-group label, unique within the suite
-    topology: str | None = None  # repro.core.registry spec string
-    pattern: str | None = None  # flowsim traffic pattern
-    failures: int = 0  # failed boards injected
+    scenario: str = ""  # canonical registry scenario string
     seed: int = 0
     trials: int = 1
     params: tuple[tuple[str, object], ...] = ()  # sorted extra knobs
@@ -42,14 +52,51 @@ class Scenario:
     def opts(self) -> dict:
         return dict(self.params)
 
+    def parsed(self) -> R.Scenario | None:
+        """The registry Scenario value object (None for fabric-less rows)."""
+        return R.parse_scenario(self.scenario) if self.scenario else None
+
+    @property
+    def topology(self) -> str | None:
+        """Topology leg of the scenario string (a registry spec)."""
+        sc = self.parsed()
+        return sc.topology.spec if sc else None
+
+    @property
+    def pattern(self) -> str | None:
+        """Traffic leg of the scenario string (canonical token)."""
+        sc = self.parsed()
+        return str(sc.traffic) if sc else None
+
+    @property
+    def failures(self) -> int:
+        """Statically known failure count (explicit clauses + count-valued
+        random clauses; percent clauses need a fabric to resolve)."""
+        sc = self.parsed()
+        if sc is None or not sc.failures:
+            return 0
+        total = 0
+        for c in sc.failures.clauses:
+            if c[0] in ("boards", "links", "nodes"):
+                how, value = c[1]
+                if how != "count":
+                    raise ValueError(
+                        f"failure count of {self.scenario!r} is not static "
+                        f"(clause {c!r} is percent-valued)"
+                    )
+                total += value
+            else:
+                total += 1
+        return total
+
     def describe(self) -> dict:
         """JSON-serializable record of the scenario itself."""
         return {
             "suite": self.suite,
             "name": self.name,
+            "scenario": self.scenario,
             "topology": self.topology,
             "pattern": self.pattern,
-            "failures": self.failures,
             "seed": self.seed,
             "trials": self.trials,
             "params": dict(self.params),
@@ -60,6 +107,7 @@ def make(
     suite: str,
     name: str,
     *,
+    scenario: str | None = None,
     topology: str | None = None,
     pattern: str | None = None,
     failures: int = 0,
@@ -67,10 +115,21 @@ def make(
     trials: int = 1,
     **params,
 ) -> Scenario:
-    """Scenario constructor with ``params`` as keyword arguments."""
+    """Scenario constructor: pass a full ``scenario`` string, or compose
+    one from ``topology`` (+ optional ``pattern`` / board-``failures``
+    count, seeded by ``seed``).  The string is canonicalized through
+    ``parse_scenario`` so every record round-trips."""
+    if scenario is None and topology is not None:
+        scenario = topology
+        if pattern:
+            scenario += f"/{pattern}"
+        if failures:
+            scenario += f"/fail=boards:{failures}"
+            if seed:
+                scenario += f":seed{seed}"
+    canonical = str(R.parse_scenario(scenario)) if scenario else ""
     return Scenario(
-        suite=suite, name=name, topology=topology, pattern=pattern,
-        failures=failures, seed=seed, trials=trials,
+        suite=suite, name=name, scenario=canonical, seed=seed, trials=trials,
         params=tuple(sorted(params.items())),
     )
 
@@ -87,32 +146,35 @@ class RunContext:
         return quick_n if self.quick else n
 
 
-def _tag(suite: str, scenario: str, spec: str, rows: Iterable[dict]
-         ) -> list[dict]:
+def _tag(suite: str, case: str, scenario: str, spec: str,
+         rows: Iterable[dict]) -> list[dict]:
     out = []
     for row in rows:
-        tagged = {"suite": suite, "scenario": scenario, "spec": spec}
+        tagged = {"suite": suite, "case": case, "scenario": scenario,
+                  "spec": spec}
         tagged.update({k: v for k, v in row.items()
-                       if k not in ("suite", "scenario", "spec")})
+                       if k not in ("suite", "case", "scenario", "spec")})
         out.append(tagged)
     return out
 
 
 def tag_rows(sc: Scenario, rows: Iterable[dict]) -> list[dict]:
-    """Stamp one scenario's suite/scenario/spec identity onto its rows."""
-    return _tag(sc.suite, sc.name, sc.topology or "", rows)
+    """Stamp one scenario's suite/case/scenario/spec identity onto its
+    rows."""
+    return _tag(sc.suite, sc.name, sc.scenario, sc.topology or "", rows)
 
 
 def tag_summary(suite: str, rows: Iterable[dict]) -> list[dict]:
-    """Tag cross-scenario summary rows: whole-suite identity, empty spec."""
-    return _tag(suite, "SUMMARY", "", rows)
+    """Tag cross-scenario summary rows: whole-suite identity, empty
+    scenario."""
+    return _tag(suite, "SUMMARY", "", "", rows)
 
 
 def render(row: dict) -> str:
     """One human-readable CSV-ish line per row."""
-    head = [str(row.get("suite", "")), str(row.get("scenario", ""))]
+    head = [str(row.get("suite", "")), str(row.get("case", ""))]
     body = [
         f"{k}={v}" for k, v in row.items()
-        if k not in ("suite", "scenario")
+        if k not in ("suite", "case")
     ]
     return ",".join(head + body)

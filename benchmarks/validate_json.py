@@ -5,13 +5,36 @@ No third-party schema library: the contract is small and explicit —
 required suites, minimum row counts, required row keys (scenario tags on
 every row, per-suite metric keys on every non-SUMMARY row), scenario
 record keys, and boolean SUMMARY truths (the Fig-8 ladder ordering and
-the torus-vs-Hx2 flexibility check).  Exit 1 with one line per violation.
+the torus-vs-Hx2 flexibility check).  Every non-empty ``scenario`` field
+(rows *and* scenario records) must round-trip through
+``repro.core.registry.parse_scenario`` unchanged — the one-string
+scenario addressing is part of the contract.  Exit 1 with one line per
+violation.
 
 Usage:  python benchmarks/validate_json.py report.json [schema.json]
 """
 
 import json
+import os
 import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+
+def _check_scenario_string(token: str, where: str, errors: list[str]) -> None:
+    from repro.core import registry as R
+
+    try:
+        canonical = str(R.parse_scenario(token))
+    except ValueError as e:
+        errors.append(f"{where}: scenario {token!r} does not parse: {e}")
+        return
+    if canonical != token:
+        errors.append(
+            f"{where}: scenario {token!r} is not canonical "
+            f"(parse round-trips to {canonical!r})"
+        )
 
 
 def validate(report: dict, schema: dict) -> list[str]:
@@ -35,7 +58,10 @@ def validate(report: dict, schema: dict) -> list[str]:
             for k in schema["required_row_keys"]:
                 if k not in row:
                     errors.append(f"{name} row {i}: missing tag key {k!r}")
-            if row.get("scenario") == "SUMMARY":
+            if row.get("scenario"):
+                _check_scenario_string(
+                    row["scenario"], f"{name} row {i}", errors)
+            if row.get("case") == "SUMMARY":
                 continue
             for k in rules.get("row_keys", []):
                 if k not in row:
@@ -44,9 +70,12 @@ def validate(report: dict, schema: dict) -> list[str]:
             for k in schema["scenario_keys"]:
                 if k not in sc:
                     errors.append(f"{name} scenario {i}: missing {k!r}")
+            if sc.get("scenario"):
+                _check_scenario_string(
+                    sc["scenario"], f"{name} scenario {i}", errors)
     for name, flags in schema.get("summary_truths", {}).items():
         rows = suites.get(name, {}).get("rows", [])
-        summary = [r for r in rows if r.get("scenario") == "SUMMARY"]
+        summary = [r for r in rows if r.get("case") == "SUMMARY"]
         for flag in flags:
             if not any(r.get(flag) is True for r in summary):
                 errors.append(
@@ -67,7 +96,12 @@ def main() -> None:
     if errors:
         sys.exit(1)
     n = sum(len(s.get("rows", [])) for s in report.get("suites", {}).values())
-    print(f"schema OK: {len(report.get('suites', {}))} suites, {n} rows")
+    n_sc = sum(
+        1 for s in report.get("suites", {}).values()
+        for r in s.get("rows", []) if r.get("scenario")
+    )
+    print(f"schema OK: {len(report.get('suites', {}))} suites, {n} rows "
+          f"({n_sc} scenario-addressed)")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,25 @@
-"""Explore topologies by spec string (the unified topology API).
+"""Explore topologies — and full scenarios — by string (the unified API).
 
-Pass any registry specs on the command line; with no arguments, sweep the
+Pass registry *topology specs* or full *scenario strings* on the command
+line.  A bare spec prints the structural row (cost / bisection /
+diameter); a scenario string (``topology/traffic[/fail=...]``) also runs
+the flow-level engine and prints the measured achievable fraction under
+the scenario's failure set next to the healthy baseline — the Fig-10
+degradation story from one CLI token.  With no arguments, sweep the
 HxMesh design space around 1k accelerators (the cost / global-bandwidth /
 flexibility trade-off of paper Fig 1) against a fat-tree baseline.
 
   PYTHONPATH=src python examples/topology_explorer.py
-  PYTHONPATH=src python examples/topology_explorer.py hx4-8x8 torus-32x32 ft1024
+  PYTHONPATH=src python examples/topology_explorer.py hx4-8x8 torus-32x32
+  PYTHONPATH=src python examples/topology_explorer.py \\
+      hx2-8x8/alltoall/fail=boards:4:seed7 \\
+      hx2-8x8/skewed-alltoall:h8:seed3 \\
+      torus-16x16/bisection/fail=links:1%:seed1
 """
 
 import sys
 
-from repro.core.registry import parse
+from repro.core.registry import parse, parse_scenario
 from repro.core.topology import HxMesh
 
 HEADER = (f"{'spec':16s} {'topology':20s} {'accels':>7s} {'cost M$':>8s} "
@@ -27,6 +36,21 @@ def describe(spec: str) -> str:
             f"{tc.bisection_fraction:7.3f} {tc.diameter:5d} {boards:>7s}")
 
 
+def describe_scenario(token: str) -> str:
+    """Measured achievable fraction of a full scenario vs its healthy
+    baseline (same topology + traffic, failure leg dropped)."""
+    sc = parse_scenario(token)
+    frac = sc.fraction()
+    line = f"{sc}: measured {sc.traffic} = {frac:.4f}"
+    if sc.failures:
+        healthy = parse_scenario(
+            f"{sc.topology}/{sc.traffic}").fraction()
+        loss = 0.0 if healthy == 0 else (healthy - frac) / healthy
+        line += (f"  (healthy {healthy:.4f}, degradation {loss:+.1%} "
+                 f"under {sc.failures})")
+    return line
+
+
 def default_sweep() -> list[str]:
     """HxMesh board-size x global-size sweep around 1k accelerators."""
     specs = ["ft1024"]
@@ -38,17 +62,25 @@ def default_sweep() -> list[str]:
 
 
 def main(argv: list[str]) -> None:
-    specs = argv or default_sweep()
-    print(HEADER)
-    for spec in specs:
+    structural = [s for s in argv if "/" not in s]
+    scenario_tokens = [s for s in argv if "/" in s]
+    if structural or not argv:
+        print(HEADER)
+        for spec in structural or default_sweep():
+            try:
+                print(describe(spec))
+            except ValueError as e:
+                print(f"{spec:16s} ERROR: {e}")
+    for token in scenario_tokens:
         try:
-            print(describe(spec))
+            print(describe_scenario(token))
         except ValueError as e:
-            print(f"{spec:16s} ERROR: {e}")
+            print(f"{token}: ERROR: {e}")
     if not argv:
         print("\nTapering the global trees (paper §III-F) scales the cost of "
               "the switched layer by the taper factor while rings stay "
-              "full-bandwidth.")
+              "full-bandwidth.\nScenario strings work too, e.g. "
+              "hx2-8x8/alltoall/fail=boards:4:seed7")
 
 
 if __name__ == "__main__":

@@ -21,7 +21,11 @@ jobs are remapped in place (§IV-B).  This module is that event loop:
   shared fabric (with its current failures) is loaded with every running
   job's alltoall at once via :mod:`repro.core.flowsim`, recording each job's
   *achieved* bandwidth next to the *allocated* (isolated sub-HxMesh)
-  bandwidth of §III-E.
+  bandwidth of §III-E.  Every probe also logs the registry *scenario
+  string* of the fabric it measured (``hx2-8x8/alltoall/fail=board:3,1``)
+  — per probe in ``SimResult.probe_log`` and per job in
+  ``JobRecord.probe_scenario`` — so any in-simulation measurement can be
+  reproduced offline with ``registry.parse_scenario(...).fraction()``.
 
 Every state change is appended to an audit log so tests can replay the run
 and assert conservation invariants (no placement on failed/occupied boards;
@@ -67,6 +71,10 @@ class JobRecord:
     allocated_bw: float | None = None  # isolated sub-HxMesh fraction
     allocated_token: int = -1  # placement the allocated_bw was computed for
     achieved_bw: list[float] = dataclasses.field(default_factory=list)
+    # registry scenario string of the fabric state at the last probe that
+    # observed this job (topology / traffic / current failure set) — the
+    # reproducible address of the measurement
+    probe_scenario: str | None = None
     token: int = 0  # placement version; stale FINISH events are dropped
     finish_t: float = 0.0  # scheduled completion of the current placement
 
@@ -126,6 +134,9 @@ class SimResult:
     n_failures: int = 0
     n_repairs: int = 0
     n_probes: int = 0
+    # one (time, scenario string) per bandwidth probe: the fabric each
+    # probe measured, addressable via registry.parse_scenario
+    probe_log: list = dataclasses.field(default_factory=list)
 
     def utilization(self, t_end: float | None = None) -> float:
         """Mean time-weighted utilization over the arrival window by
@@ -168,6 +179,7 @@ class ClusterSimulator:
         self.audit: list[AuditEvent] = []
         self.samples: list[M.Sample] = []
         self.frag_samples: list[tuple[float, float]] = []
+        self.probe_log: list[tuple[float, str]] = []
         self._heap: list = []
         self._seq = 0
         self._counts = {"fail": 0, "repair": 0, "probe": 0}
@@ -219,6 +231,7 @@ class ClusterSimulator:
             n_failures=self._counts["fail"],
             n_repairs=self._counts["repair"],
             n_probes=self._counts["probe"],
+            probe_log=self.probe_log,
         )
 
     # -- event handlers ------------------------------------------------------
@@ -417,9 +430,29 @@ class ClusterSimulator:
             failures=[("board", c, r) for (r, c) in sorted(self.alloc.failed)],
         )
 
+    def _probe_scenario(self) -> str:
+        """The registry scenario string of the fabric the probe measures:
+        topology spec + the probe traffic + the current failure set — one
+        token that reproduces this measurement offline."""
+        if self.cfg.topology:
+            spec = self.cfg.topology
+        elif self.cfg.board_a == self.cfg.board_b:
+            spec = f"hx{self.cfg.board_a}-{self.cfg.x}x{self.cfg.y}"
+        else:
+            spec = f"hx{self.cfg.board_a}x{self.cfg.board_b}-" \
+                   f"{self.cfg.x}x{self.cfg.y}"
+        token = f"{spec}/alltoall"
+        if self.alloc.failed:
+            clauses = "+".join(
+                f"board:{c},{r}" for (r, c) in sorted(self.alloc.failed))
+            token += f"/fail={clauses}"
+        return token
+
     def _on_probe(self, t: float) -> None:
         self._counts["probe"] += 1
         net = self._net_now()
+        scenario = self._probe_scenario()
+        self.probe_log.append((t, scenario))
         jobs_eps = {
             jid: F.placement_endpoints(net, pl.boards)
             for jid, pl in self.alloc.placements.items()
@@ -432,6 +465,7 @@ class ClusterSimulator:
                 rec.allocated_bw = M.allocated_bandwidth(net, jobs_eps[jid])
                 rec.allocated_token = rec.token
             rec.achieved_bw.append(frac)
+            rec.probe_scenario = scenario
         self.frag_samples.append((t, M.fragmentation(self.alloc)))
         nxt = t + self.cfg.probe_interval
         if nxt <= self.last_arrival:

@@ -173,13 +173,16 @@ PAPER_TABLE2_BANDWIDTH = {
 
 
 def get_profile(topology: str, measured: bool = False) -> TopologyProfile:
-    """Resolve a profile from a paper table name *or* a registry spec string.
+    """Resolve a profile from a paper table name, a registry spec string,
+    *or* a full scenario string (whose topology leg is used).
 
     Table names ("Hx2Mesh", "nonbl. FT", ...) and spec strings whose family
     maps onto a table row ("hx2-16x16", "ft1024", ...) return the transcribed
     calibration profile — the workload model's source of truth — unless
     ``measured=True``, which returns flow-level measured fractions for the
-    spec's actual scale via :mod:`repro.core.registry`.
+    spec's actual scale via :mod:`repro.core.registry`.  Scenario strings
+    ("hx2-16x16/alltoall/fail=boards:2") resolve through their topology leg
+    (the workload model's hop/volume terms are per-fabric, not per-pattern).
     """
     from repro.core import registry  # lazy: registry imports this module
 
@@ -189,6 +192,8 @@ def get_profile(topology: str, measured: bool = False) -> TopologyProfile:
         # table names measure at the paper's small-cluster scale (the scale
         # of the Table II microbenchmarks the transcribed row came from)
         topology = registry.TABLE2_SPECS["small"][topology]
+    elif isinstance(topology, str) and "/" in topology:
+        topology = registry.parse_scenario(topology).topology.spec
     return registry.parse(topology).profile(measured=measured)
 
 

@@ -31,19 +31,27 @@ Sources are processed in chunks (``source_chunk``) so paper-scale (1k+) and
 ``--scale`` sweeps (4k+ endpoints) stay within memory.  ``backend="jax"``
 runs the same algorithm with dense ``jnp`` matmuls for device execution.
 
-Topologies & traffic
---------------------
+Topologies, traffic & failures
+------------------------------
 ``build_network(topo, failures=...)`` is the uniform entry point: it accepts
 an already-built :class:`Network` or a :mod:`repro.core.topology` spec
-(``HxMesh``, ``FatTree``, ``Torus2D``, ``Dragonfly``) and applies failure
-descriptors (node ids, ``("board", bx, by)``, ``("link", u, v)``).  Traffic
-matrices come from :func:`traffic_matrix` with pluggable patterns —
-``uniform``/``alltoall``, ``bit-complement``, ``ring-allreduce`` (dual
-edge-disjoint Hamiltonian rings where the geometry supports them),
-``transpose``/``tornado``/``permutation``, ``skewed-alltoall`` (DLRM/MoE
-hot-expert skew), and ``bisection`` (cross-cut traffic whose achievable
-fraction is the measured bisection fraction — the
-:mod:`repro.core.registry` profile view builds on it).
+(``HxMesh``, ``FatTree``, ``Torus2D``, ``Dragonfly``) and applies failures
+given as legacy descriptors (node ids, ``("board", bx, by)``,
+``("link", u, v)``), a :class:`FailureSpec`, or a failure-spec *string* in
+the scenario grammar (``fail=boards:1%:seed7`` — see :data:`FAILURE_GRAMMAR`
+and ``registry.parse_scenario``).
+
+Traffic is first-class (:mod:`repro.core.traffic`): a parsed
+:class:`~repro.core.traffic.TrafficSpec` binds to a network as a sparse
+:class:`~repro.core.traffic.Demand` that this engine consumes directly —
+either chunk-materialized per source batch (:func:`demand_edge_loads`, no
+dense ``(n, n)`` matrix ever exists) or, for symmetric demands on fabrics
+with declared symmetry classes (:func:`endpoint_classes` /
+:func:`edge_orbit_ids`), via one representative BFS per class with
+orbit-weighted link loads (:func:`symmetric_max_link_load`) — the path that
+makes measured 16k-65k endpoint profiles tractable.  The PR-3 dense
+surface survives as shims: :func:`traffic_matrix` materializes a demand
+densely and ``TRAFFIC_PATTERNS`` views the registered traffic families.
 
 Graphs model ONE plane (as the paper simulates): every accelerator has 4
 links (E/W/N/S) in an HxMesh plane, or 1 uplink in a fat-tree plane.  All
@@ -53,6 +61,7 @@ link bandwidths are normalized to 1.
 from __future__ import annotations
 
 import dataclasses
+import re
 from collections import defaultdict
 
 import numpy as np
@@ -249,9 +258,17 @@ def max_link_load(
     source_chunk: int = 512,
     backend: str = "numpy",
 ) -> float:
-    """Max per-link load for a traffic matrix or ``(s, t, vol)`` triple list
-    — the engine's headline quantity (one batched pass, no Python loops over
-    sources or links)."""
+    """Max per-link load — the engine's headline quantity.
+
+    ``traffic`` may be a sparse :class:`~repro.core.traffic.Demand`, a
+    :class:`~repro.core.traffic.TrafficSpec` or traffic token string
+    (bound to ``net`` first), a dense matrix, or the legacy ``(s, t, vol)``
+    triple list.  Demands route through the sparse engine (symmetry fast
+    path when eligible); matrices through the dense batched pass.
+    """
+    dem = _as_demand(net, traffic)
+    if dem is not None:
+        return demand_max_link_load(net, dem, source_chunk, backend)
     traffic, sources = _coerce_traffic(net, traffic, sources)
     loads = edge_loads(net, traffic, sources, source_chunk, backend)
     return float(loads.max()) if len(loads) else 0.0
@@ -269,8 +286,8 @@ def achievable_fraction(
     Traffic volumes are normalized so each source's total demand is 1.  With
     ``L`` unit-bandwidth links per endpoint, injection bandwidth is L, the
     sustainable per-source rate is 1/max_load, and the reported fraction is
-    ``1 / (max_load * L)`` (capped at 1).  ``traffic`` may be a dense matrix
-    or the legacy ``[(src, dst, vol), ...]`` triple list.
+    ``1 / (max_load * L)`` (capped at 1).  ``traffic`` accepts everything
+    :func:`max_link_load` does (Demand / spec / token / matrix / triples).
     """
     mx = max_link_load(net, traffic, None, source_chunk, backend)
     if mx <= 0:
@@ -286,9 +303,170 @@ def alltoall_fraction(
 ) -> float:
     """Exact uniform-alltoall achievable fraction of injection bandwidth."""
     return achievable_fraction(
-        net, traffic_matrix(net, "alltoall"), links_per_endpoint,
-        source_chunk, backend,
+        net, "alltoall", links_per_endpoint, source_chunk, backend,
     )
+
+
+def _as_demand(net: Network, traffic):
+    """Coerce sparse-capable traffic inputs to a bound Demand (or None)."""
+    from repro.core import traffic as TR  # lazy: traffic imports flowsim
+
+    if isinstance(traffic, TR.Demand):
+        return traffic
+    if isinstance(traffic, (TR.TrafficSpec, str)):
+        return TR.parse_traffic(traffic).demand(net)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Sparse demand engine + symmetry reduction
+# ---------------------------------------------------------------------------
+
+
+def demand_edge_loads(
+    net: Network,
+    demand,
+    source_chunk: int = 512,
+    backend: str = "numpy",
+) -> np.ndarray:
+    """Per-link ECMP loads for a sparse Demand, materializing dense rows
+    one source chunk at a time — peak memory is ``O(chunk * n)`` however
+    large the fabric (the full ``(n, n)`` matrix never exists)."""
+    U, V, M = net.directed_edges()
+    loads = np.zeros(len(U), dtype=np.float64)
+    source_chunk = max(1, source_chunk)
+    for lo in range(0, demand.n_sources, source_chunk):
+        hi = min(lo + source_chunk, demand.n_sources)
+        loads += _edge_loads_chunk(
+            net, demand.sources[lo:hi], demand.rows(lo, hi), U, V, M, backend
+        )
+    return loads
+
+
+def demand_max_link_load(
+    net: Network,
+    demand,
+    source_chunk: int = 512,
+    backend: str = "numpy",
+) -> float:
+    """Max per-link load of a Demand: the symmetry-class fast path when the
+    demand is symmetric and the fabric declares classes, else the chunked
+    sparse pass over every source."""
+    if demand.n_sources == 0:
+        return 0.0
+    if demand.symmetric:
+        sym = symmetric_max_link_load(net, demand)
+        if sym is not None:
+            return sym
+    loads = demand_edge_loads(net, demand, source_chunk, backend)
+    return float(loads.max()) if len(loads) else 0.0
+
+
+def symmetric_max_link_load(net: Network, demand) -> float | None:
+    """Max link load via symmetry reduction, or ``None`` if ineligible.
+
+    For a demand invariant under a subgroup ``H`` of fabric automorphisms
+    (declared per builder by :func:`endpoint_classes` /
+    :func:`edge_orbit_ids`), the total link load is constant on each
+    H-orbit of directed edges, and for any edge orbit ``O`` and source
+    class ``c`` with representative ``r``::
+
+        load(e in O) = sum_c  N_c * (sum_{e' in O} L_r(e')) / |O|
+
+    because ``sum_{e' in O} L_s(e')`` is class-invariant in ``s`` (apply
+    the automorphism mapping ``r`` to ``s``; it permutes ``O``).  One BFS
+    per class replaces one per endpoint: hx2-64x64 (16,384 endpoints)
+    needs 4 representatives instead of 16,384 sources.
+    """
+    classes = endpoint_classes(net)
+    orbits = edge_orbit_ids(net)
+    if classes is None or orbits is None or not demand.symmetric:
+        return None
+    if len(demand.sources) != net.n_endpoints:
+        return None  # demand must cover every endpoint of the healthy fabric
+    U, V, M = net.directed_edges()
+    _, rep_idx, counts = np.unique(
+        classes, return_index=True, return_counts=True)
+    n_orbits = int(orbits.max()) + 1
+    orbit_sizes = np.bincount(orbits, minlength=n_orbits)
+    total = np.zeros(n_orbits, dtype=np.float64)
+    for rep, n_c in zip(rep_idx, counts):
+        rep = int(rep)  # class ids are assigned over endpoints 0..n-1
+        row = demand.rows_for([rep])
+        L = _edge_loads_chunk(
+            net, np.array([rep], dtype=np.int64), row, U, V, M, "numpy")
+        total += n_c * np.bincount(orbits, weights=L, minlength=n_orbits)
+    loads = total / np.maximum(orbit_sizes, 1)
+    return float(loads.max()) if len(loads) else 0.0
+
+
+def endpoint_classes(net: Network) -> np.ndarray | None:
+    """Endpoint symmetry-class ids under the builder's declared automorphism
+    subgroup, or ``None`` (no declared symmetry, or failures applied).
+
+    * ``hxmesh`` — permuting board columns and board rows (each global row/
+      column tree is a star, so any board permutation along it is an
+      automorphism): endpoints are equivalent iff they share an on-board
+      position ``(i, j)`` -> ``a*b`` classes.
+    * ``torus`` — translations: one class.
+
+    Class ids are chosen so that the *first* endpoint of each class (the
+    lowest id) is its representative.
+    """
+    meta = net.meta
+    if meta.get("failures_applied"):
+        return None
+    kind = meta.get("kind")
+    if kind == "hxmesh":
+        a, b = meta["a"], meta["b"]
+        e = np.arange(net.n_endpoints)
+        j = e % a
+        i = (e // a) % b
+        return (i * a + j).astype(np.int64)
+    if kind == "torus":
+        return np.zeros(net.n_endpoints, dtype=np.int64)
+    return None
+
+
+def edge_orbit_ids(net: Network) -> np.ndarray | None:
+    """Orbit ids of the directed edges (aligned with
+    :meth:`Network.directed_edges`) under the same subgroup as
+    :func:`endpoint_classes`, or ``None``."""
+    meta = net.meta
+    if meta.get("failures_applied"):
+        return None
+    kind = meta.get("kind")
+    U, V, _ = net.directed_edges()
+    if kind == "hxmesh":
+        inv = _hxmesh_node_invariants(net)
+        keys = [(inv[int(u)], inv[int(v)]) for u, v in zip(U, V)]
+    elif kind == "torus":
+        sx, sy = meta["side_x"], meta["side_y"]
+        iu, ju = U // sx, U % sx
+        iv, jv = V // sx, V % sx
+        keys = list(zip(((jv - ju) % sx).tolist(), ((iv - iu) % sy).tolist()))
+    else:
+        return None
+    ids: dict[tuple, int] = {}
+    return np.array([ids.setdefault(k, len(ids)) for k in keys],
+                    dtype=np.int64)
+
+
+def _hxmesh_node_invariants(net: Network) -> list[tuple]:
+    """Per-node invariants under board-row/column permutations: on-board
+    position for accelerators, on-board row for row switches, on-board
+    column for column switches."""
+    a, b, x, y = (net.meta[k] for k in ("a", "b", "x", "y"))
+    n = a * b * x * y
+    inv: list[tuple] = []
+    for v in range(net.n_nodes):
+        if v < n:
+            inv.append(("a", (v // a) % b, v % a))
+        elif v < n + y * b:
+            inv.append(("r", (v - n) % b))
+        else:
+            inv.append(("c", (v - n - y * b) % a))
+    return inv
 
 
 def _coerce_traffic(net, traffic, sources):
@@ -516,6 +694,157 @@ def build_dragonfly(a: int, p: int, h: int, groups: int) -> Network:
 
 
 # ---------------------------------------------------------------------------
+# Failure specs: the `fail=` leg of the scenario grammar
+# ---------------------------------------------------------------------------
+
+FAILURE_GRAMMAR = (
+    "fail=<clause>[+<clause>...] with clause one of "
+    "boards:<k|p%>[:seed<n>] | links:<k|p%>[:seed<n>] | "
+    "nodes:<k|p%>[:seed<n>] | board:<bx>,<by> | node:<id> | link:<u>,<v>; "
+    "legacy descriptors: int node id, ('node', id), ('board', bx, by), "
+    "('link', u, v)"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureSpec:
+    """Parsed failure leg of a scenario string (``fail=boards:1%:seed7``).
+
+    ``clauses`` holds normalized tuples::
+
+        ("boards"|"links"|"nodes", ("count", k) | ("pct", p), seed)
+        ("board", bx, by) | ("node", id) | ("link", u, v)
+
+    Random clauses (plural kinds) are *seeded samples* resolved against a
+    concrete network by :meth:`realize`; explicit clauses pass through as
+    legacy descriptors.  ``str()`` is canonical (``seed0`` omitted), so
+    ``parse_failures(str(f)) == f``.
+    """
+
+    clauses: tuple[tuple, ...] = ()
+
+    def __bool__(self) -> bool:
+        return bool(self.clauses)
+
+    def __str__(self) -> str:
+        if not self.clauses:
+            return ""
+        return "fail=" + "+".join(_clause_str(c) for c in self.clauses)
+
+    def realize(self, net: Network) -> list:
+        """Resolve the clauses against a network into legacy descriptors."""
+        out: list = []
+        for c in self.clauses:
+            kind = c[0]
+            if kind == "board":
+                out.append(("board", c[1], c[2]))
+            elif kind == "node":
+                out.append(int(c[1]))
+            elif kind == "link":
+                out.append(("link", c[1], c[2]))
+            elif kind in ("boards", "links", "nodes"):
+                out.extend(_sample_failures(net, kind, c[1], c[2]))
+            else:  # pragma: no cover - parse_failures never emits others
+                raise ValueError(
+                    f"unknown failure clause {c!r}; grammar: {FAILURE_GRAMMAR}"
+                )
+        return out
+
+
+def _clause_str(c: tuple) -> str:
+    kind = c[0]
+    if kind in ("boards", "links", "nodes"):
+        how, amount = c[1]
+        amt = f"{format(amount, 'g')}%" if how == "pct" else str(amount)
+        seed = f":seed{c[2]}" if c[2] else ""
+        return f"{kind}:{amt}{seed}"
+    if kind == "node":
+        return f"node:{c[1]}"
+    return f"{kind}:{c[1]},{c[2]}"
+
+
+def _board_grid(net: Network) -> tuple[int, int]:
+    """Board grid (bx, by) dimensions, or raise for gridless fabrics."""
+    meta = net.meta
+    if meta.get("kind") == "hxmesh":
+        return meta["x"], meta["y"]
+    if meta.get("kind") == "torus":
+        bd = meta.get("board", 2)
+        return meta["side_x"] // bd, meta["side_y"] // bd
+    raise ValueError(
+        "board failures need hxmesh/torus geometry in net.meta "
+        f"(got kind={meta.get('kind')!r})"
+    )
+
+
+def _sample_failures(net: Network, kind: str, amount: tuple, seed: int):
+    """Seeded sample of boards / links / endpoints for a random clause."""
+    rng = np.random.default_rng(seed)
+    if kind == "boards":
+        x, y = _board_grid(net)
+        pool: list = [("board", bx, by) for by in range(y) for bx in range(x)]
+    elif kind == "nodes":
+        pool = [int(e) for e in range(net.n_endpoints)]
+    else:  # links: unique undirected bundles (one parallel link removed)
+        U, V, _ = net.directed_edges()
+        keep = U < V
+        pool = [("link", int(u), int(v)) for u, v in zip(U[keep], V[keep])]
+    how, value = amount
+    count = value if how == "count" else int(round(value / 100.0 * len(pool)))
+    count = max(0, min(int(count), len(pool)))
+    if count == 0:
+        return []
+    idx = rng.choice(len(pool), size=count, replace=False)
+    return [pool[i] for i in sorted(int(i) for i in idx)]
+
+
+_RANDOM_CLAUSE_RE = re.compile(
+    r"(boards|links|nodes):(\d+(?:\.\d+)?(?:e-?\d+)?)(%?)(?::seed(\d+))?")
+_EXPLICIT_2_RE = re.compile(r"(board|link):(\d+),(\d+)")
+_NODE_RE = re.compile(r"node:(\d+)")
+
+
+def parse_failures(token) -> FailureSpec:
+    """Parse a failure leg (with or without the ``fail=`` prefix) into a
+    canonical :class:`FailureSpec`; '' parses to the empty spec.  Raises
+    ``ValueError`` listing :data:`FAILURE_GRAMMAR` on malformed input."""
+    if isinstance(token, FailureSpec):
+        return token
+    if not isinstance(token, str):
+        raise ValueError(
+            f"failure spec must be a string, got {type(token)}; "
+            f"grammar: {FAILURE_GRAMMAR}"
+        )
+    body = token.strip()
+    if body.startswith("fail="):
+        body = body[len("fail="):]
+    if not body:
+        return FailureSpec()
+    clauses: list[tuple] = []
+    for part in body.split("+"):
+        m = _RANDOM_CLAUSE_RE.fullmatch(part)
+        if m:
+            how = "pct" if m[3] else "count"
+            if how == "count" and not m[2].isdigit():
+                raise ValueError(f"failure count must be an integer: {part!r}")
+            value = float(m[2]) if m[3] else int(m[2])
+            clauses.append((m[1], (how, value), int(m[4] or 0)))
+            continue
+        m = _EXPLICIT_2_RE.fullmatch(part)
+        if m:
+            clauses.append((m[1], int(m[2]), int(m[3])))
+            continue
+        m = _NODE_RE.fullmatch(part)
+        if m:
+            clauses.append(("node", int(m[1])))
+            continue
+        raise ValueError(
+            f"unknown failure clause {part!r}; grammar: {FAILURE_GRAMMAR}"
+        )
+    return FailureSpec(clauses=tuple(clauses))
+
+
+# ---------------------------------------------------------------------------
 # Uniform entry point: topology spec + failures -> Network
 # ---------------------------------------------------------------------------
 
@@ -525,15 +854,22 @@ def build_network(topo, failures=()) -> Network:
 
     ``topo`` is a :class:`Network` (used as-is) or a
     :mod:`repro.core.topology` spec: ``HxMesh``, ``FatTree``, ``Torus2D`` or
-    ``Dragonfly``.  ``failures`` is an iterable of descriptors:
+    ``Dragonfly``.  ``failures`` is a failure-spec string
+    (``fail=boards:1%:seed7``), a :class:`FailureSpec`, or an iterable of
+    legacy descriptors:
 
     * ``int`` — node id (endpoint or switch) whose links are all removed,
+    * ``("node", id)`` — same, tagged,
     * ``("board", bx, by)`` — every accelerator of that board (HxMesh /
       Torus2D geometry from ``net.meta``),
     * ``("link", u, v)`` — one parallel link between ``u`` and ``v``.
 
-    Failed endpoints stay in the id space but become isolated; traffic
-    generators consult :meth:`Network.active_endpoints`.
+    Anything else raises ``ValueError`` with the supported grammar (the
+    same message ``registry.parse_scenario`` uses).  Failed endpoints stay
+    in the id space but become isolated; traffic generators consult
+    :meth:`Network.active_endpoints`.  Networks with failures applied are
+    flagged (``meta["failures_applied"]``) so the symmetry fast path never
+    fires on a degraded fabric.
     """
     from repro.core import topology as T
 
@@ -550,6 +886,8 @@ def build_network(topo, failures=()) -> Network:
         base = build_dragonfly(topo.a, topo.p, topo.h, topo.groups)
     else:
         raise TypeError(f"unsupported topology spec: {type(topo).__name__}")
+    if isinstance(failures, (str, FailureSpec)):
+        failures = parse_failures(failures).realize(base)
     if not failures:
         return base
 
@@ -558,22 +896,34 @@ def build_network(topo, failures=()) -> Network:
     for f in failures:
         if isinstance(f, (int, np.integer)):
             dead.add(int(f))
-        elif f[0] == "node":
+        elif _is_descriptor(f, "node", 2):
             dead.add(int(f[1]))
-        elif f[0] == "board":
+        elif _is_descriptor(f, "board", 3):
             dead.update(board_nodes(base, int(f[1]), int(f[2])))
-        elif f[0] == "link":
+        elif _is_descriptor(f, "link", 3):
             u, v = int(f[1]), int(f[2])
             if v in adj.get(u, ()):
                 adj[u].remove(v)
                 adj[v].remove(u)
         else:
-            raise ValueError(f"unknown failure descriptor: {f!r}")
+            raise ValueError(
+                f"unknown failure descriptor {f!r}; supported grammar: "
+                f"{FAILURE_GRAMMAR}"
+            )
     for u in dead:
         for v in adj.get(u, ()):
             adj[v] = [w for w in adj[v] if w != u]
         adj[u] = []
-    return Network(n_endpoints=base.n_endpoints, adj=adj, meta=dict(base.meta))
+    meta = dict(base.meta)
+    meta["failures_applied"] = True
+    return Network(n_endpoints=base.n_endpoints, adj=adj, meta=meta)
+
+
+def _is_descriptor(f, kind: str, arity: int) -> bool:
+    """True for a well-formed legacy failure tuple of the given kind."""
+    return (isinstance(f, (tuple, list)) and len(f) == arity
+            and f[0] == kind
+            and all(isinstance(v, (int, np.integer)) for v in f[1:]))
 
 
 def subnetwork(net: Network, endpoints) -> Network:
@@ -625,68 +975,8 @@ def board_nodes(net: Network, bx: int, by: int) -> list[int]:
 
 
 # ---------------------------------------------------------------------------
-# Traffic patterns (pluggable generators -> dense matrices)
+# Grid geometry helpers (shared with repro.core.traffic demand builders)
 # ---------------------------------------------------------------------------
-
-
-def _uniform_matrix(net: Network, **_kw) -> np.ndarray:
-    n = net.n_endpoints
-    act = net.active_endpoints()
-    T = np.zeros((n, n))
-    if len(act) > 1:
-        T[np.ix_(act, act)] = 1.0 / (len(act) - 1)
-        T[act, act] = 0.0
-    return T
-
-
-def _bit_complement_matrix(net: Network, volume: float = 1.0, **_kw):
-    """Endpoint ``s`` sends to its reversal partner ``n-1-s`` — for
-    power-of-two ``n`` this is exactly the classic bit-complement pattern
-    (``n-1-s == s XOR (n-1)``, the worst case for dimension-ordered meshes);
-    for other sizes it degrades to plain endpoint reversal."""
-    n = net.n_endpoints
-    act = set(net.active_endpoints().tolist())
-    T = np.zeros((n, n))
-    for s in act:
-        t = n - 1 - s
-        if t != s and t in act:
-            T[s, t] = volume
-    return T
-
-
-def _ring_allreduce_matrix(net: Network, volume: float | None = None, **_kw):
-    """Steady-state neighbor traffic of ring allreduce.
-
-    Uses the two edge-disjoint Hamiltonian cycles of the virtual torus when
-    the geometry supports them (HxMesh / torus metadata, no failures) —
-    volume 0.25 per direction per ring so total injection is 1 — else a
-    single bidirectional ring over the active endpoints at volume 0.5.
-    """
-    from repro.core import hamiltonian as ham
-
-    n = net.n_endpoints
-    act = net.active_endpoints()
-    rings: list[tuple[list[int], float]] = []
-    geo = _grid_geometry(net)
-    if len(act) == n and geo is not None:
-        r, c, gid = geo
-        try:
-            red, green = ham.dual_cycles(r, c)
-            v = 0.25 if volume is None else volume
-            rings = [([gid(rr, cc) for rr, cc in red], v),
-                     ([gid(rr, cc) for rr, cc in green], v)]
-        except ValueError:
-            pass
-    if not rings:
-        order = act.tolist()
-        rings = [(order, 0.5 if volume is None else volume)]
-    T = np.zeros((n, n))
-    for order, v in rings:
-        for k in range(len(order)):
-            u, w = order[k], order[(k + 1) % len(order)]
-            T[u, w] += v
-            T[w, u] += v
-    return T
 
 
 def _grid_geometry(net: Network):
@@ -727,178 +1017,34 @@ def _grid_or_squarest(net: Network, require_square: bool = False):
     return r, c, (lambda rr, cc: rr * c + cc)
 
 
-def _transpose_matrix(net: Network, volume: float = 1.0, **_kw) -> np.ndarray:
-    """Matrix-transpose permutation: endpoint at grid position ``(i, j)``
-    sends to ``(j, i)`` — the classic adversary for row/column-separated
-    routing.  Uses the builder grid when the geometry provides one (square
-    grids only; a rectangular grid has no transpose), else the squarest
-    row-major factorization of ``n``."""
-    n = net.n_endpoints
-    r, c, gid = _grid_or_squarest(net, require_square=True)
-    act = set(net.active_endpoints().tolist())
-    T = np.zeros((n, n))
-    for i in range(r):
-        for j in range(c):
-            if i < c and j < r:  # transpose within the leading square
-                s, t = gid(i, j), gid(j, i)
-                if s != t and s in act and t in act:
-                    T[s, t] = volume
-    return T
+# ---------------------------------------------------------------------------
+# Dense back-compat shims over repro.core.traffic (PR-3 surface)
+# ---------------------------------------------------------------------------
 
 
-def _tornado_matrix(net: Network, volume: float = 1.0, **_kw) -> np.ndarray:
-    """Tornado permutation: each endpoint sends ``ceil(c/2) - 1`` positions
-    around its grid row — the classic worst case for minimal routing on
-    rings/tori (all flows chase each other the long way around)."""
-    n = net.n_endpoints
-    r, c, gid = _grid_or_squarest(net)
-    off = (c - 1) // 2
-    act = set(net.active_endpoints().tolist())
-    T = np.zeros((n, n))
-    if off == 0:
-        return T
-    for i in range(r):
-        for j in range(c):
-            s, t = gid(i, j), gid(i, (j + off) % c)
-            if s != t and s in act and t in act:
-                T[s, t] = volume
-    return T
+def traffic_matrix(net: Network, pattern, **kw) -> np.ndarray:
+    """Dense ``(n_endpoints, n_endpoints)`` demand matrix for a traffic
+    token / pattern name (legacy kwargs like ``hot=``/``volume=`` still
+    accepted).  Materializes the sparse Demand of
+    :mod:`repro.core.traffic` — prefer passing the token straight to
+    :func:`achievable_fraction` at scale, where this matrix cannot fit."""
+    from repro.core import traffic as TR
+
+    return TR.demand(net, pattern, **kw).dense_full()
 
 
-def _skewed_alltoall_matrix(
-    net: Network,
-    skew: float = 0.75,
-    hot: int = 4,
-    seed: int = 0,
-    **_kw,
-) -> np.ndarray:
-    """DLRM/MoE-style alltoall with per-source hot-expert skew.
+def __getattr__(name: str):
+    # TRAFFIC_PATTERNS was the PR-3 registry (pattern name -> dense matrix
+    # function); keep it as a live view over the traffic-family registry.
+    if name == "TRAFFIC_PATTERNS":
+        import functools
 
-    Every active endpoint sends unit volume total: a ``skew`` share is
-    concentrated on ``hot`` seeded "popular expert" destinations (drawn
-    independently per source, so hot sets overlap and create incast), the
-    remaining ``1 - skew`` is spread uniformly over all peers.  ``skew=0``
-    degenerates to the uniform alltoall; ``skew=1`` is pure hot-expert
-    traffic.  Seeded — the matrix is a pure function of ``(net, kwargs)``.
-    """
-    if not 0.0 <= skew <= 1.0:
-        raise ValueError(f"skew must be in [0, 1], got {skew}")
-    n = net.n_endpoints
-    act = net.active_endpoints()
-    T = np.zeros((n, n))
-    if len(act) < 2:
-        return T
-    if skew < 1.0:
-        T[np.ix_(act, act)] = (1.0 - skew) / (len(act) - 1)
-    rng = np.random.default_rng(seed)
-    hot = max(1, min(hot, len(act) - 1))
-    for s in act:
-        peers = act[act != s]
-        hot_dsts = rng.choice(peers, size=hot, replace=False)
-        T[s, hot_dsts] += skew / hot
-    T[act, act] = 0.0
-    return T
+        from repro.core import traffic as TR
 
-
-def _bisection_matrix(net: Network, **_kw) -> np.ndarray:
-    """Cross-bisection uniform traffic: each active endpoint sends unit
-    volume spread uniformly over the active endpoints of the *opposite*
-    half.  All traffic crosses the cut, so the achievable fraction under
-    this pattern *is* the measured bisection fraction: a sustainable
-    per-endpoint rate ``f`` means cut bandwidth ``f·(n/2)·injection``,
-    i.e. ``f`` of the ideal full-bisection network.
-
-    Halves follow the builder grid when the geometry provides one (first
-    half of the rows — the cut the paper's §III-A formula counts; on an
-    HxMesh the cut row is aligned to a board boundary), else the
-    endpoint-id split (fat trees and dragonflies are symmetric under
-    relabeling).  When the halves are unequal (odd board rows), per-source
-    volumes are scaled so each direction still carries ``n/2`` total —
-    keeping the measured fraction equal to ``cut_bw / (half injection)``
-    regardless of the split."""
-    n = net.n_endpoints
-    act = net.active_endpoints()
-    T = np.zeros((n, n))
-    if len(act) < 2:
-        return T
-    geo = _grid_geometry(net)
-    if geo is not None:
-        r, c, gid = geo
-        cut = r // 2
-        if net.meta.get("kind") == "hxmesh":
-            # align the cut to a board boundary: a cut through a board's
-            # interior would let cross traffic ride on-board mesh links,
-            # which the paper's §III-A inter-board cut formula excludes
-            b = net.meta["b"]
-            aligned = (cut // b) * b
-            if 0 < aligned < r:
-                cut = aligned
-        top = {gid(rr, cc) for rr in range(cut) for cc in range(c)}
-        left = np.array([e for e in act if e in top], dtype=np.int64)
-        right = np.array([e for e in act if e not in top], dtype=np.int64)
-    else:
-        half = len(act) // 2
-        left, right = act[:half], act[half:]
-    if not len(left) or not len(right):
-        # no cross-cut traffic is expressible; returning zeros would make
-        # achievable_fraction report a perfect 1.0 for a fabric with zero
-        # surviving cut capacity
-        raise ValueError(
-            "bisection pattern undefined: every active endpoint is on one "
-            "side of the cut"
-        )
-    half = len(act) / 2.0
-    T[np.ix_(left, right)] = half / len(left) / len(right)
-    T[np.ix_(right, left)] = half / len(right) / len(left)
-    return T
-
-
-def _permutation_matrix(
-    net: Network, seed: int = 0, samples: int = 1, volume: float = 1.0, **_kw
-) -> np.ndarray:
-    """Seeded random-permutation traffic: the mean of ``samples`` uniformly
-    drawn permutations of the active endpoints (fixed points carry no
-    traffic), each source sending ``volume`` to its image.  ``samples > 1``
-    averages several permutations into one matrix for sampled-permutation
-    sweeps."""
-    n = net.n_endpoints
-    act = net.active_endpoints()
-    T = np.zeros((n, n))
-    if len(act) < 2 or samples < 1:
-        return T
-    rng = np.random.default_rng(seed)
-    for _ in range(samples):
-        perm = rng.permutation(act)
-        for s, t in zip(act, perm):
-            if s != t:
-                T[s, t] += volume / samples
-    return T
-
-
-TRAFFIC_PATTERNS = {
-    "uniform": _uniform_matrix,
-    "alltoall": _uniform_matrix,
-    "bit-complement": _bit_complement_matrix,
-    "ring-allreduce": _ring_allreduce_matrix,
-    "transpose": _transpose_matrix,
-    "tornado": _tornado_matrix,
-    "permutation": _permutation_matrix,
-    "skewed-alltoall": _skewed_alltoall_matrix,
-    "bisection": _bisection_matrix,
-}
-
-
-def traffic_matrix(net: Network, pattern: str, **kw) -> np.ndarray:
-    """Dense ``(n_endpoints, n_endpoints)`` demand matrix for a named
-    pattern (see :data:`TRAFFIC_PATTERNS`)."""
-    try:
-        gen = TRAFFIC_PATTERNS[pattern]
-    except KeyError:
-        raise ValueError(
-            f"unknown traffic pattern {pattern!r}; "
-            f"have {sorted(TRAFFIC_PATTERNS)}"
-        ) from None
-    return gen(net, **kw)
+        names = list(TR.TRAFFIC_FAMILIES) + list(TR._ALIASES)
+        return {n: functools.partial(traffic_matrix, pattern=n)
+                for n in sorted(names)}
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------

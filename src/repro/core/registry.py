@@ -35,6 +35,26 @@ Spec mini-language (case-sensitive, canonical forms shown)::
 every registered family.  New families register a :class:`Family` via
 :func:`register_family`; ``TABLE2_SPECS`` names the paper's Table II rows
 as spec strings for sweeps and cross-checks.
+
+Scenario grammar
+----------------
+The paper's claims are *scenario* claims — a topology under a traffic
+pattern with a failure set.  :func:`parse_scenario` addresses all three
+legs with one string::
+
+    scenario := <topology> [ "/" <traffic> ] [ "/" <failures> ]
+    traffic  := name(":" param)*          # repro.core.traffic grammar
+    failures := "fail=" clause("+" clause)*   # flowsim.FAILURE_GRAMMAR
+
+    hx2-16x16/skewed-alltoall:h8:seed3/fail=boards:1%:seed7
+
+returning a :class:`Scenario` value object with round-trip
+``parse_scenario(str(s)) == s``; each leg normalizes through its own
+registered-grammar table (``FAMILIES``, ``traffic.TRAFFIC_FAMILIES``, the
+failure clause kinds).  The omitted-traffic short form normalizes to
+``alltoall``.  ``Scenario.fraction()`` is the measured flow-level
+achievable fraction, cached on disk keyed by the full scenario string
+(``results/profile_cache.json``, versioned).
 """
 
 from __future__ import annotations
@@ -48,14 +68,18 @@ from typing import Callable
 from repro.core import commodel
 from repro.core import flowsim as F
 from repro.core import topology as T
+from repro.core import traffic as TR
 from repro.core.allocation import HxMeshAllocator, TorusAllocator
 
 # bump to invalidate cached measured fractions when the engine or the
-# builders change behaviour
-MEASURED_VERSION = "m1"
+# builders change behaviour.  v2: entries are keyed by the full canonical
+# *scenario* string (topology/traffic/failures) under an "entries" map with
+# an explicit version field; flat v1 files ("spec|m1" keys) are discarded
+# wholesale on load.
+MEASURED_VERSION = 2
 MEASURED_CACHE = "results/profile_cache.json"
 
-_measured_mem: dict[str, dict[str, float]] = {}
+_measured_mem: dict[str, float] = {}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,28 +149,17 @@ class Topology:
     def measured_fractions(self) -> dict[str, float]:
         """Flow-level achievable fractions measured on :meth:`network`:
         ``alltoall``, ``allreduce`` (ring steady state) and ``bisection``
-        (cross-cut traffic).  Cached on disk keyed by spec — deterministic,
-        so the cache is purely a time saver."""
-        key = f"{self.spec}|{MEASURED_VERSION}"
-        if key in _measured_mem:
-            return _measured_mem[key]
-        cache = _load_cache()
-        if key not in cache:
-            net = self.network()
-            links = self.links_per_endpoint
-            cache[key] = {
-                pattern_key: F.achievable_fraction(
-                    net, F.traffic_matrix(net, pattern), links
-                )
-                for pattern_key, pattern in (
-                    ("alltoall", "alltoall"),
-                    ("allreduce", "ring-allreduce"),
-                    ("bisection", "bisection"),
-                )
-            }
-            _store_cache(cache)
-        _measured_mem[key] = cache[key]
-        return cache[key]
+        (cross-cut traffic).  Each is one scenario (``<spec>/<traffic>``)
+        measured through :func:`measured_fraction` — deterministic, cached
+        on disk by full scenario string."""
+        return {
+            pattern_key: measured_fraction(f"{self.spec}/{pattern}")
+            for pattern_key, pattern in (
+                ("alltoall", "alltoall"),
+                ("allreduce", "ring-allreduce"),
+                ("bisection", "bisection"),
+            )
+        }
 
     def profile(self, measured: bool = True) -> commodel.TopologyProfile:
         """The workload-model profile of this topology.
@@ -189,19 +202,50 @@ class Topology:
         )
 
 
+def measured_fraction(scenario) -> float:
+    """Measured flow-level achievable fraction of one scenario (a string
+    or :class:`Scenario`): build the topology's link graph, apply the
+    failure set, bind the traffic spec as a sparse demand, and run the
+    flow engine (symmetry fast path when eligible).
+
+    Results are cached in ``MEASURED_CACHE`` keyed by the canonical
+    scenario string — deterministic (every random leg is seeded), so the
+    cache is purely a time saver."""
+    sc = parse_scenario(scenario)
+    key = str(sc)
+    if key in _measured_mem:
+        return _measured_mem[key]
+    cache = _load_cache()
+    entries = cache["entries"]
+    if key not in entries:
+        net = sc.network()
+        entries[key] = F.achievable_fraction(
+            net, sc.traffic.demand(net), sc.topology.links_per_endpoint
+        )
+        _store_cache(cache)
+    _measured_mem[key] = entries[key]
+    return entries[key]
+
+
 def _load_cache() -> dict:
+    fresh = {"version": MEASURED_VERSION, "entries": {}}
     if os.path.exists(MEASURED_CACHE):
         try:
-            return json.load(open(MEASURED_CACHE))
+            cache = json.load(open(MEASURED_CACHE))
         except (json.JSONDecodeError, OSError):  # corrupt cache: recompute
-            return {}
-    return {}
+            return fresh
+        # stale v1 layout (flat "spec|m1" keys) or version bump: discard
+        if isinstance(cache, dict) and \
+                cache.get("version") == MEASURED_VERSION and \
+                isinstance(cache.get("entries"), dict):
+            return cache
+    return fresh
 
 
 def _store_cache(cache: dict) -> None:
     try:
         os.makedirs(os.path.dirname(MEASURED_CACHE), exist_ok=True)
-        json.dump(cache, open(MEASURED_CACHE, "w"))
+        json.dump(cache, open(MEASURED_CACHE, "w"), indent=0)
     except OSError:  # read-only CWD etc. — the cache is purely a time saver
         pass
 
@@ -374,3 +418,120 @@ TABLE2_SPECS: dict[str, dict[str, str]] = {
         "2D torus": "torus-128x128",
     },
 }
+
+
+# ---------------------------------------------------------------------------
+# Scenario grammar: topology x traffic x failures in one string
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One experiment scenario: a topology under a traffic pattern with a
+    failure set — the unit every paper claim quantifies over (Table II
+    fractions, Fig 10 fail-in-place, §V global traffic).
+
+    The canonical string is ``<topology>/<traffic>[/<failures>]``; the
+    failure leg is omitted when empty, and ``parse_scenario(str(s)) == s``
+    round-trips for every registered grammar combination.
+    """
+
+    topology: Topology
+    traffic: TR.TrafficSpec
+    failures: F.FailureSpec = F.FailureSpec()
+
+    def __str__(self) -> str:
+        parts = [self.topology.spec, str(self.traffic)]
+        if self.failures:
+            parts.append(str(self.failures))
+        return "/".join(parts)
+
+    # -- derived views --------------------------------------------------------
+
+    def network(self) -> F.Network:
+        """The topology's one-plane link graph with the failure set
+        applied."""
+        return self.topology.network(failures=self.failures)
+
+    def demand(self, net: F.Network | None = None) -> TR.Demand:
+        """The traffic spec bound to this scenario's (possibly degraded)
+        fabric."""
+        return self.traffic.demand(self.network() if net is None else net)
+
+    def fraction(self) -> float:
+        """Measured flow-level achievable fraction (disk-cached by the
+        scenario string; see :func:`measured_fraction`)."""
+        return measured_fraction(self)
+
+
+def scenario_grammar() -> str:
+    """Human-readable summary of every registered scenario leg (used by
+    parse error messages and ``--help`` style listings)."""
+    topo = ", ".join(f.grammar for f in FAMILIES.values())
+    return (
+        "scenario := <topology>[/<traffic>][/<failures>] with topology in "
+        f"[{topo}], traffic in [{TR.traffic_grammars()}], failures "
+        f"{F.FAILURE_GRAMMAR}"
+    )
+
+
+def parse_scenario(token) -> Scenario:
+    """Parse a scenario string into a canonical :class:`Scenario`.
+
+    Each leg normalizes through its registered grammar table: topology
+    aliases canonicalize (``hx1-8x8/uniform`` -> ``hyperx-8x8/alltoall``),
+    default traffic params drop, ``seed0`` drops from failure clauses, and
+    an omitted traffic leg means ``alltoall``.  Raises ``ValueError`` with
+    the full grammar for malformed tokens."""
+    if isinstance(token, Scenario):
+        return token
+    if isinstance(token, Topology):
+        return Scenario(topology=token, traffic=TR.parse_traffic("alltoall"))
+    if not isinstance(token, str):
+        raise ValueError(f"scenario must be a string, got {type(token)}")
+    parts = token.strip().split("/")
+    try:
+        topo = parse(parts[0])
+    except ValueError as e:
+        raise ValueError(f"bad scenario topology leg: {e}") from None
+    traffic_tok: str | None = None
+    failure_tok: str | None = None
+    for part in parts[1:]:
+        if part.startswith("fail="):
+            if failure_tok is not None:
+                raise ValueError(f"duplicate failure leg in {token!r}")
+            failure_tok = part
+        elif failure_tok is not None:
+            raise ValueError(
+                f"traffic leg {part!r} after the failure leg in {token!r}; "
+                f"grammar: {scenario_grammar()}"
+            )
+        elif traffic_tok is not None:
+            raise ValueError(f"duplicate traffic leg in {token!r}")
+        elif not part:
+            raise ValueError(f"empty scenario leg in {token!r}")
+        else:
+            traffic_tok = part
+    traffic = TR.parse_traffic(traffic_tok or "alltoall")
+    failures = F.parse_failures(failure_tok or "")
+    return Scenario(topology=topo, traffic=traffic, failures=failures)
+
+
+def match_scenario(token: str, scenario) -> bool:
+    """True when a (possibly partial) scenario token addresses ``scenario``.
+
+    Only the legs the token *specifies* are compared — ``hx2-16x16``
+    matches every traffic/failure combination on that topology, while
+    ``hx2-16x16/alltoall`` pins the traffic leg too.  Legs normalize
+    before comparison, so aliases match their canonical forms."""
+    sc = parse_scenario(scenario)
+    parts = token.strip().strip("/").split("/")
+    if parse(parts[0]) != sc.topology:
+        return False
+    for part in parts[1:]:
+        if part.startswith("fail="):
+            if F.parse_failures(part) != sc.failures:
+                return False
+        elif TR.parse_traffic(part) != sc.traffic:
+            return False
+    return True

@@ -1,0 +1,330 @@
+"""Scenario grammar: one string addresses topology x traffic x failures.
+
+Mirrors ``tests/test_registry.py`` for the scenario layer: round-trip
+(``parse_scenario(str(s)) == s``) across every registered topology x
+traffic x failure grammar combination (including a seeded fuzz sweep),
+normalization rules, malformed-token rejection with grammar-listing
+errors, failure-spec strings through ``build_network``, and the
+scenario-keyed v2 profile cache (v1 invalidation included).
+"""
+
+import json
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import flowsim as F
+from repro.core import registry as R
+from repro.core import traffic as TR
+
+TOPOLOGY_SPECS = ["hx2-4x4", "hx4x2-4x4", "hyperx-8x8", "ft64", "ft64-t50",
+                  "df-2x2x9-a4", "torus-8x8"]
+TRAFFIC_TOKENS = ["alltoall", "bit-complement", "ring-allreduce", "transpose",
+                  "tornado", "permutation:seed3", "skewed-alltoall:h2:seed7",
+                  "bisection"]
+FAILURE_TOKENS = ["", "fail=boards:2:seed3", "fail=boards:25%:seed1",
+                  "fail=nodes:3:seed2", "fail=links:5%",
+                  "fail=board:1,2", "fail=node:5", "fail=link:0,1",
+                  "fail=board:0,0+boards:1:seed4+link:0,1"]
+
+
+# ---------------------------------------------------------------------------
+# Round-trip: every registered grammar combination
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", TOPOLOGY_SPECS)
+@pytest.mark.parametrize("traffic", TRAFFIC_TOKENS)
+def test_round_trip_topology_x_traffic(topo, traffic):
+    s = R.parse_scenario(f"{topo}/{traffic}")
+    assert R.parse_scenario(str(s)) == s
+
+
+def test_round_trip_exponent_percent():
+    """Percent amounts that g-format to exponent notation still
+    round-trip (and count amounts must stay plain integers)."""
+    f = F.parse_failures("fail=boards:0.00001%")
+    assert str(f) == "fail=boards:1e-05%"
+    assert F.parse_failures(str(f)) == f
+    with pytest.raises(ValueError):
+        F.parse_failures("fail=boards:1e2")  # exponent count: not an int
+
+
+def test_legacy_volume_none_kwarg():
+    """The PR-3 dense generators accepted volume=None as 'auto'; the shim
+    must keep doing so."""
+    net = F.build_hxmesh(2, 2, 4, 4)
+    np.testing.assert_array_equal(
+        F.traffic_matrix(net, "ring-allreduce", volume=None),
+        F.traffic_matrix(net, "ring-allreduce"))
+
+
+@pytest.mark.parametrize("failure", FAILURE_TOKENS)
+def test_round_trip_failures(failure):
+    token = "hx2-4x4/alltoall" + (f"/{failure}" if failure else "")
+    s = R.parse_scenario(token)
+    assert R.parse_scenario(str(s)) == s
+    assert str(s) == token  # these tokens are already canonical
+
+
+def test_fuzz_round_trip_over_registered_grammars():
+    """Seeded fuzz: random topology x traffic-params x failure-clauses,
+    assembled from the registered grammar tables, all round-trip."""
+    rng = random.Random(20260728)
+    for _ in range(300):
+        topo = rng.choice(TOPOLOGY_SPECS)
+        fam = rng.choice(list(TR.TRAFFIC_FAMILIES.values()))
+        parts = [fam.name]
+        for p in rng.sample(fam.params, rng.randint(0, len(fam.params))):
+            if p.type is int:
+                parts.append(f"{p.key}{rng.randint(1, 9)}")
+            else:
+                parts.append(f"{p.key}{round(rng.uniform(0.1, 0.9), 2)}")
+        token = f"{topo}/{':'.join(parts)}"
+        if rng.random() < 0.5:
+            clauses = []
+            for _ in range(rng.randint(1, 3)):
+                kind = rng.choice(["boards", "links", "nodes",
+                                   "board", "node", "link"])
+                if kind in ("boards", "links", "nodes"):
+                    amt = (f"{rng.randint(1, 20)}%"
+                           if rng.random() < 0.5 else str(rng.randint(1, 4)))
+                    seed = rng.randint(0, 3)
+                    clauses.append(
+                        f"{kind}:{amt}" + (f":seed{seed}" if seed else ""))
+                elif kind == "node":
+                    clauses.append(f"node:{rng.randint(0, 63)}")
+                else:
+                    clauses.append(
+                        f"{kind}:{rng.randint(0, 7)},{rng.randint(0, 7)}")
+            token += "/fail=" + "+".join(clauses)
+        s = R.parse_scenario(token)
+        assert R.parse_scenario(str(s)) == s, token
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_normalization():
+    # omitted traffic leg -> alltoall
+    assert str(R.parse_scenario("hx2-4x4")) == "hx2-4x4/alltoall"
+    # every leg normalizes through its own table
+    assert str(R.parse_scenario("hx1-8x8/uniform/fail=boards:2:seed0")) == \
+        "hyperx-8x8/alltoall/fail=boards:2"
+    assert str(R.parse_scenario("hx2x2-4x4/skewed-alltoall:seed3:h8")) == \
+        "hx2-4x4/skewed-alltoall:h8:seed3"
+    # whitespace-tolerant like registry.parse
+    assert str(R.parse_scenario(" hx2-4x4/alltoall ")) == "hx2-4x4/alltoall"
+    # value objects pass through parse_scenario unchanged
+    s = R.parse_scenario("hx2-4x4/bisection")
+    assert R.parse_scenario(s) is s
+    assert str(R.parse_scenario(R.parse("hx2-4x4"))) == "hx2-4x4/alltoall"
+
+
+@pytest.mark.parametrize("token", [
+    "",
+    "bogus-1x1/alltoall",  # unknown topology
+    "hx2-4x4/no-such-pattern",  # unknown traffic
+    "hx2-4x4//alltoall",  # empty leg
+    "hx2-4x4/alltoall/alltoall",  # duplicate traffic leg
+    "hx2-4x4/fail=boards:2/alltoall",  # traffic after failures
+    "hx2-4x4/fail=boards:2/fail=node:1",  # duplicate failure leg
+    "hx2-4x4/alltoall/fail=bogus:3",  # unknown failure kind
+    "hx2-4x4/alltoall/fail=boards:x",  # non-numeric count
+    "hx2-4x4/alltoall/fail=boards:1.5",  # fractional count (not a pct)
+    "hx2-4x4/alltoall/fail=board:1",  # board needs two coordinates
+    "hx2-4x4/skewed-alltoall:zzz",  # bad traffic param
+])
+def test_malformed_scenarios_rejected(token):
+    with pytest.raises(ValueError):
+        R.parse_scenario(token)
+
+
+def test_error_messages_list_grammars():
+    """The parse errors teach the grammar (same text build_network uses)."""
+    with pytest.raises(ValueError, match="boards:<k|p%>"):
+        R.parse_scenario("hx2-4x4/alltoall/fail=bogus:3")
+    with pytest.raises(ValueError, match="known families"):
+        R.parse_scenario("bogus-1x1")
+    with pytest.raises(ValueError, match="skewed-alltoall"):
+        R.parse_scenario("hx2-4x4/what-pattern")
+
+
+def test_match_scenario_partial_tokens():
+    s = "hx2-16x16/skewed-alltoall:h8:seed3/fail=boards:1%:seed7"
+    assert R.match_scenario("hx2-16x16", s)
+    assert R.match_scenario("hx2x2-16x16", s)  # aliases normalize
+    assert R.match_scenario("hx2-16x16/skewed-alltoall:seed3:h8", s)
+    assert R.match_scenario("hx2-16x16/fail=boards:1%:seed7", s)
+    assert not R.match_scenario("hx2-16x16/alltoall", s)
+    assert not R.match_scenario("hx2-16x16/fail=boards:2%", s)
+    assert not R.match_scenario("torus-32x32", s)
+
+
+# ---------------------------------------------------------------------------
+# Failure-spec strings through build_network (satellite: clear grammar
+# errors on unknown forms)
+# ---------------------------------------------------------------------------
+
+
+def test_network_accepts_failure_strings():
+    topo = R.parse("hx2-4x4")
+    net = topo.network(failures="fail=boards:2:seed3")
+    assert len(net.active_endpoints()) == topo.num_accelerators - 8
+    # with and without the fail= prefix
+    net2 = topo.network(failures="boards:2:seed3")
+    assert net2.adj == net.adj
+    # deterministic: same seed same boards, different seed differs
+    net3 = topo.network(failures="fail=boards:2:seed4")
+    assert sorted(net3.active_endpoints()) != sorted(net.active_endpoints())
+
+
+def test_failure_percent_resolves_against_fabric():
+    topo = R.parse("hx2-8x8")  # 64 boards
+    net = topo.network(failures="fail=boards:25%:seed1")
+    assert len(net.active_endpoints()) == topo.num_accelerators - 16 * 4
+
+
+def test_failure_clause_kinds():
+    topo = R.parse("hx2-4x4")
+    assert len(topo.network(failures="fail=node:5").active_endpoints()) == \
+        topo.num_accelerators - 1
+    net = topo.network(failures="fail=link:0,1")
+    assert 1 not in net.adj[0]
+    # explicit board == legacy descriptor
+    a = topo.network(failures="fail=board:1,2")
+    b = topo.network(failures=[("board", 1, 2)])
+    assert a.adj == b.adj
+
+
+def test_unknown_failure_descriptor_lists_grammar():
+    """Satellite: unknown descriptor forms raise ValueError carrying the
+    supported grammar instead of falling through."""
+    topo = R.parse("hx2-4x4")
+    for bad in [[("bogus", 1)], [{"board": 1}], [("board", 1)],
+                [("link", 0, 1, 2)], [3.5]]:
+        with pytest.raises((ValueError, TypeError)) as ei:
+            topo.network(failures=bad)
+        if ei.type is ValueError:
+            assert "fail=<clause>" in str(ei.value)
+    with pytest.raises(ValueError, match="fail=<clause>"):
+        topo.network(failures=[("bogus", 1)])
+
+
+def test_boards_clause_needs_board_grid():
+    with pytest.raises(ValueError, match="board failures"):
+        R.parse("ft64").network(failures="fail=boards:2")
+
+
+def test_scenario_fraction_degrades_under_failures():
+    healthy = R.measured_fraction("hx2-4x4/alltoall")
+    degraded = R.measured_fraction("hx2-4x4/alltoall/fail=boards:2:seed3")
+    assert degraded <= healthy + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Scenario-keyed v2 profile cache
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "profile_cache.json")
+    monkeypatch.setattr(R, "MEASURED_CACHE", path)
+    monkeypatch.setattr(R, "_measured_mem", {})
+    return path
+
+
+def test_cache_v2_layout(tmp_cache):
+    frac = R.measured_fraction("hx2-4x4/alltoall")
+    data = json.load(open(tmp_cache))
+    assert data["version"] == R.MEASURED_VERSION
+    assert data["entries"] == {"hx2-4x4/alltoall": frac}
+    # distinct scenario -> distinct entry (failures are part of the key)
+    R.measured_fraction("hx2-4x4/alltoall/fail=boards:1:seed2")
+    data = json.load(open(tmp_cache))
+    assert set(data["entries"]) == {
+        "hx2-4x4/alltoall", "hx2-4x4/alltoall/fail=boards:1:seed2"}
+
+
+def test_cache_invalidates_stale_v1(tmp_cache):
+    """A v1 file (flat 'spec|m1' keys, bogus values) must be discarded
+    wholesale, never read through."""
+    with open(tmp_cache, "w") as fh:
+        json.dump({"hx2-4x4|m1": {"alltoall": 999.0}}, fh)
+    frac = R.measured_fraction("hx2-4x4/alltoall")
+    assert frac <= 1.0  # recomputed, not the poisoned value
+    data = json.load(open(tmp_cache))
+    assert data["version"] == R.MEASURED_VERSION
+    assert "hx2-4x4|m1" not in data["entries"]
+
+
+def test_cache_survives_corruption(tmp_cache):
+    with open(tmp_cache, "w") as fh:
+        fh.write("{not json")
+    assert 0 < R.measured_fraction("hx2-4x4/alltoall") <= 1.0
+
+
+def test_cache_hit_skips_engine(tmp_cache, monkeypatch):
+    R.measured_fraction("hx2-4x4/bisection")
+    monkeypatch.setattr(R, "_measured_mem", {})  # force the disk path
+
+    def boom(*a, **k):  # the engine must not run again
+        raise AssertionError("cache miss on a cached scenario")
+
+    monkeypatch.setattr(F, "achievable_fraction", boom)
+    assert 0 < R.measured_fraction("hx2-4x4/bisection") <= 1.0
+
+
+def test_profile_uses_scenario_cache(tmp_cache):
+    p = R.parse("hx2-4x4").profile()
+    data = json.load(open(tmp_cache))
+    assert set(data["entries"]) >= {
+        "hx2-4x4/alltoall", "hx2-4x4/ring-allreduce", "hx2-4x4/bisection"}
+    assert p.global_bw == pytest.approx(data["entries"]["hx2-4x4/alltoall"])
+
+
+# ---------------------------------------------------------------------------
+# Harness integration: benchmark records and probe logs speak the grammar
+# ---------------------------------------------------------------------------
+
+
+def test_benchmark_records_are_canonical_scenarios():
+    pytest.importorskip(
+        "benchmarks.scenarios", reason="needs repo root on sys.path"
+    )
+    from benchmarks import fig10_failures, table2_bandwidth
+    from benchmarks.scenarios import RunContext, make
+
+    for mod in (table2_bandwidth, fig10_failures):
+        for sc in mod.scenarios(RunContext()):
+            assert sc.scenario
+            assert str(R.parse_scenario(sc.scenario)) == sc.scenario
+    sc = make("t", "x", topology="hx1-4x4", pattern="uniform", failures=2,
+              seed=3)
+    assert sc.scenario == "hyperx-4x4/alltoall/fail=boards:2:seed3"
+    assert sc.topology == "hyperx-4x4"
+    assert sc.pattern == "alltoall"
+    assert sc.failures == 2
+
+
+def test_cluster_probes_log_parseable_scenarios():
+    from repro.cluster import FIG8_LADDER, SimConfig, poisson_trace, simulate
+
+    cfg = SimConfig.for_topology(
+        "hx2-4x4", fail_rate=0.001, repair_time=50.0,
+        probe_interval=2.0, seed=1)
+    trace = poisson_trace(12, cfg.x, cfg.y, load=1.2, seed=1)
+    res = simulate(trace, cfg, FIG8_LADDER[-1][1])
+    assert res.n_probes > 0 and len(res.probe_log) == res.n_probes
+    for _, token in res.probe_log:
+        sc = R.parse_scenario(token)
+        assert sc.topology.spec == "hx2-4x4"
+    observed = [r for r in res.records.values() if r.achieved_bw]
+    assert observed
+    for rec in observed:
+        assert rec.probe_scenario in {tok for _, tok in res.probe_log}
