@@ -111,6 +111,7 @@ def _compute_bw(sc: S.Scenario) -> list[dict]:
         repair_time=horizon / 10,
         probe_interval=horizon / n_probes,
         seed=sc.seed,
+        probe_collective="ring:s16MiB",  # netsim per-job timelines
     )
     _, policy = FIG8_LADDER[-1]  # +locality: the full heuristic stack
     res = simulate(trace, cfg, policy)
@@ -140,11 +141,23 @@ def _compute_bw(sc: S.Scenario) -> list[dict]:
         statistics.mean(statistics.mean(r.achieved_bw) for r in observed)
         if observed else 0.0
     )
+    timed = [rec for rec in res.records.values() if rec.bw_timeline]
+    timeline_mean = (
+        statistics.mean(
+            statistics.mean(fr for _, fr in rec.bw_timeline)
+            for rec in timed)
+        if timed else 0.0
+    )
     rows.append({
         "kind": "bw",
         "summary": True,
         "jobs": n_jobs,
         "probes": res.n_probes,
+        "timeline_probes": len(res.probe_timelines),
+        "timeline_jobs": len(timed),
+        # per-job mean achieved fraction while every running job's ring
+        # collective loads the shared fabric (netsim time-domain probes)
+        "timeline_mean_fraction": round(timeline_mean, 3),
         "failures": res.n_failures,
         "repairs": res.n_repairs,
         "observed_jobs": len(observed),

@@ -1,11 +1,15 @@
 """Fig 10: behaviour under random board failures.
 
-Two scenario groups, both per the paper's §IV-B story:
+Three scenario groups, all per the paper's §IV-B story:
 
 * ``alloc/*`` — utilization of working boards from the greedy allocator;
 * ``bw/*`` — achievable alltoall bandwidth of the *surviving* fabric,
   computed with the flow-level engine on the spec's ``network()`` view
-  with ``("board", bx, by)`` failures applied.
+  with ``("board", bx, by)`` failures applied;
+* ``coll/*`` — time-domain counterpart: ring-allreduce *completion time*
+  on the surviving fabric (``coll=`` scenario leg through
+  :mod:`repro.netsim`), reported as degradation vs the healthy run — the
+  fail-in-place claim restated in seconds instead of fractions.
 """
 
 import statistics
@@ -19,6 +23,8 @@ SUITE = "fig10_failures"
 
 ALLOC_MESHES = ["hx2-16x16", "hx4-8x8"]
 BW_MESHES = ["hx2-8x8", "hx4-4x4"]
+COLL_MESH = "hx2-8x8"
+COLL_TOKEN = "coll=ring:s256MiB"
 
 
 def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
@@ -36,12 +42,20 @@ def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
             out.append(S.make(SUITE, f"bw/{spec}/f{nf}", topology=spec,
                               failures=nf, trials=1 if nf == 0 else 3,
                               pattern="alltoall", kind="bw"))
+    for nf in (0, 2, 4):
+        out.append(S.make(
+            SUITE, f"coll/{COLL_MESH}/f{nf}",
+            scenario=f"{COLL_MESH}/{COLL_TOKEN}"
+            + (f"/fail=boards:{nf}" if nf else ""),
+            trials=1 if nf == 0 else 3, kind="coll", n_failed=nf))
     return out
 
 
 def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
     if sc.opts["kind"] == "alloc":
         return _compute_alloc(sc)
+    if sc.opts["kind"] == "coll":
+        return _compute_coll(sc)
     return _compute_bw(sc)
 
 
@@ -59,6 +73,30 @@ def _compute_alloc(sc: S.Scenario) -> list[dict]:
         "failures": sc.failures,
         "median": round(statistics.median(us), 3),
         "mean": round(statistics.mean(us), 3),
+    }]
+
+
+def _compute_coll(sc: S.Scenario) -> list[dict]:
+    """Completion-time degradation of a ring allreduce on the surviving
+    fabric: one seeded failure scenario per trial (the row lists every
+    trial token, like the bw group), degradation = median time over the
+    healthy run's time."""
+    nf = sc.opts["n_failed"]
+    healthy_token = f"{COLL_MESH}/{COLL_TOKEN}"
+    healthy_s = R.simulated_time(healthy_token)
+    tokens = []
+    for seed in range(sc.trials):
+        leg = f"/fail=boards:{nf}" + (f":seed{seed}" if seed else "") \
+            if nf else ""
+        tokens.append(healthy_token + leg)
+    times = [R.simulated_time(token) for token in tokens]
+    med = statistics.median(times)
+    return [{
+        "kind": "coll",
+        "failures": nf,
+        "completion_ms_median": round(med * 1e3, 3),
+        "degradation": round(med / healthy_s, 4),
+        "trial_scenarios": tokens,
     }]
 
 

@@ -1,7 +1,17 @@
 """Fig 13/17: allreduce algorithms — α-β model curves + measured HLO traffic
 of our shard_map implementations on a 16-device mesh + flow-level achievable
-bandwidth of the ring-allreduce traffic pattern per topology spec, tying the
-model curves to the fabric simulation."""
+bandwidth of the ring-allreduce traffic pattern per topology spec + netsim
+*time-domain* simulations of the same algorithms as concrete collective
+schedules played through each fabric (``coll=`` scenario leg), tying the
+analytic curves to both the steady-state and the event-driven engines.
+
+The ``sim/*`` rows are the contention-aware counterpart of the ``model/*``
+rows: same algorithm, same payload, but completion time measured by
+routing every phase's flows through the actual link graph
+(:mod:`repro.netsim`).  The summary asserts the acceptance bars: simulated
+ring allreduce on a healthy hx2-8x8 within 5% of the α-β model, and the
+fluid-vs-simulated gap reported for the torus.
+"""
 
 import os
 import subprocess
@@ -15,6 +25,12 @@ from benchmarks import scenarios as S
 SUITE = "fig13_allreduce"
 
 FLOW_SPECS = ["hx2-8x8", "torus-16x16", "ft256"]
+SIM_ALGOS = {  # per spec: the algorithms its geometry motivates
+    "hx2-8x8": ("ring", "bidir", "hamiltonian"),
+    "torus-16x16": ("ring", "torus"),
+    "ft256": ("ring",),
+}
+SIM_SIZE = "s1GiB"
 
 
 def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
@@ -27,6 +43,12 @@ def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
                pattern="ring-allreduce", kind="flow")
         for spec in FLOW_SPECS
     ]
+    out += [
+        S.make(SUITE, f"sim/{spec}/{algo}",
+               scenario=f"{spec}/coll={algo}:{SIM_SIZE}", kind="sim")
+        for spec in FLOW_SPECS
+        for algo in SIM_ALGOS[spec]
+    ]
     out.append(S.make(SUITE, "hlo", kind="hlo"))
     return out
 
@@ -37,7 +59,49 @@ def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
         return _compute_model(sc.opts["p"])
     if kind == "flow":
         return _compute_flow(sc)
+    if kind == "sim":
+        return _compute_sim(sc)
     return _compute_hlo()
+
+
+def _compute_sim(sc: S.Scenario) -> list[dict]:
+    """Contention-aware simulated completion next to the analytic model."""
+    parsed = sc.parsed()
+    p = parsed.topology.num_accelerators
+    sim_s = R.simulated_time(sc.scenario)
+    model = parsed.collective.model_time(p)
+    return [{
+        "kind": "sim",
+        "algo": parsed.collective.algo,
+        "p": p,
+        "sim_ms": round(sim_s * 1e3, 3),
+        "model_ms": round(model * 1e3, 3) if model is not None else None,
+        "ratio": round(sim_s / model, 4) if model is not None else None,
+    }]
+
+
+def summarize(results: list[tuple[S.Scenario, list[dict]]],
+              ctx: S.RunContext) -> list[dict]:
+    def _row(name):
+        return next((r for sc, out in results for r in out
+                     if sc.name == name), None)
+
+    rows = []
+    ring = _row("sim/hx2-8x8/ring")
+    if ring is not None and ring["ratio"] is not None:
+        rows.append({
+            "kind": "sim",
+            "ring_hx2_within_5pct": abs(ring["ratio"] - 1.0) <= 0.05,
+            "ring_hx2_ratio": ring["ratio"],
+        })
+    torus = _row("sim/torus-16x16/torus") or _row("sim/torus-16x16/ring")
+    if torus is not None and torus["ratio"] is not None:
+        rows.append({
+            "kind": "sim",
+            "torus_fluid_gap": torus["ratio"],
+            "torus_algo": torus["algo"],
+        })
+    return rows
 
 
 def _compute_model(p: int) -> list[dict]:

@@ -1,0 +1,153 @@
+"""netsim quick suite: time-domain collective sims vs the α-β models.
+
+Three scenario groups:
+
+* ``sim/*`` — every registered collective algorithm lowered onto a small
+  HammingMesh and a torus, simulated on the healthy fabric and compared
+  to its ``core.commodel`` α-β closed form.  The summary asserts the
+  acceptance bars: ring allreduce on the Hx2Mesh within 5% of the model,
+  byte conservation exact on every run.
+* ``fail/*`` — the same ring payload on seeded failure-degraded fabrics:
+  completion-time degradation vs the healthy run (the time-domain version
+  of Fig 10's bandwidth story).
+* ``probe/*`` — a tiny co-scheduled pair of jobs playing collectives
+  concurrently through one shared fabric, reporting each group's mean
+  achieved fraction (the cluster-probe timeline path).
+
+Rows carry wall-clock timings so ``BENCH_netsim.json`` can track engine
+cost alongside fidelity.
+"""
+
+import time
+
+from repro import netsim as NS
+from repro.core import commodel as C
+from repro.core import registry as R
+
+from benchmarks import scenarios as S
+
+SUITE = "netsim"
+
+SIM_SPECS = ("hx2-8x8", "torus-16x16")
+ALGOS = ("ring", "bidir", "hamiltonian", "torus", "hierarchical")
+SIM_SIZE = "s64MiB"
+FAIL_SPEC = "hx2-8x8"
+FAIL_COUNTS = (2, 4)
+
+
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    out = [
+        S.make(SUITE, f"sim/{spec}/{algo}",
+               scenario=f"{spec}/coll={algo}:{SIM_SIZE}", kind="sim",
+               algo=algo)
+        for spec in SIM_SPECS
+        for algo in ALGOS
+    ]
+    out += [
+        S.make(SUITE, f"fail/{FAIL_SPEC}/f{nf}",
+               scenario=(f"{FAIL_SPEC}/coll=ring:{SIM_SIZE}"
+                         f"/fail=boards:{nf}:seed3"),
+               kind="fail", n_failed=nf)
+        for nf in FAIL_COUNTS
+    ]
+    out.append(S.make(SUITE, "probe/concurrent", topology="hx2-4x4",
+                      kind="probe"))
+    return out
+
+
+def _simulate(sc: S.Scenario) -> tuple[NS.SimReport, float]:
+    parsed = sc.parsed()
+    net = parsed.network()
+    t0 = time.time()
+    report = NS.simulate_schedule(
+        net, parsed.schedule(net), link_bw=C.LINK_BW, record_timeline=False)
+    return report, time.time() - t0
+
+
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    kind = sc.opts["kind"]
+    if kind == "probe":
+        return _compute_probe(sc)
+    parsed = sc.parsed()
+    report, wall = _simulate(sc)
+    p = parsed.topology.num_accelerators
+    model = parsed.collective.model_time(p)
+    row = {
+        "kind": kind,
+        "algo": parsed.collective.algo,
+        "endpoints": p,
+        "sim_ms": round(report.time * 1e3, 4),
+        "model_ms": round(model * 1e3, 4) if model is not None else None,
+        "ratio": (round(report.time / model, 4)
+                  if model is not None else None),
+        "conservation_err": float(report.conservation_error()),
+        "events": report.n_events,
+        "waterfills": report.n_waterfills,
+        "wall_ms": round(wall * 1e3, 1),
+    }
+    if kind == "fail":
+        healthy = R.simulated_time(
+            f"{sc.topology}/coll={parsed.collective.algo}:{SIM_SIZE}")
+        row["n_failed"] = sc.opts["n_failed"]
+        row["degradation"] = round(report.time / healthy, 4)
+    return [row]
+
+
+def _compute_probe(sc: S.Scenario) -> list[dict]:
+    """Two co-scheduled jobs on one shared fabric: concurrent collectives
+    through the merged schedule, per-group mean achieved fractions."""
+    net = R.parse(sc.topology).network()
+    half = net.n_endpoints // 2
+    jobs = {"a": list(range(half)), "b": list(range(half, net.n_endpoints))}
+    parts = [
+        NS.schedule_for_endpoints("ring:s16MiB", net, eps, group=g)
+        for g, eps in jobs.items()
+    ]
+    report = NS.simulate_schedule(net, NS.merge_schedules(parts),
+                                  link_bw=1.0)
+    lpe = net.meta.get("links_per_endpoint", 1)
+    rows = []
+    for g, eps in jobs.items():
+        mean = report.group_mean_rate(g) / (len(eps) * lpe)
+        rows.append({
+            "kind": "probe",
+            "group": g,
+            "endpoints": len(eps),
+            "mean_fraction": round(mean, 4),
+            "end_s": round(report.group_end.get(g, 0.0), 6),
+        })
+    return rows
+
+
+def summarize(results: list[tuple[S.Scenario, list[dict]]],
+              ctx: S.RunContext) -> list[dict]:
+    sims = [row for sc, out in results for row in out
+            if row["kind"] in ("sim", "fail")]
+    ring_hx2 = next(
+        (r for sc, out in results for r in out
+         if sc.name == "sim/hx2-8x8/ring"), None)
+    torus_ring = next(
+        (r for sc, out in results for r in out
+         if sc.name == "sim/torus-16x16/torus"), None)
+    rows = []
+    if sims:
+        rows.append({
+            "kind": "sim",
+            "conservation_ok": all(
+                r["conservation_err"] <= 1e-6 for r in sims),
+            "max_conservation_err": max(
+                r["conservation_err"] for r in sims),
+        })
+    if ring_hx2 is not None and ring_hx2["ratio"] is not None:
+        rows.append({
+            "kind": "sim",
+            "ring_within_5pct": abs(ring_hx2["ratio"] - 1.0) <= 0.05,
+            "ring_ratio": ring_hx2["ratio"],
+        })
+    if torus_ring is not None and torus_ring["ratio"] is not None:
+        # the measured fluid-vs-simulated gap on the torus fabric
+        rows.append({
+            "kind": "sim",
+            "torus_gap": torus_ring["ratio"],
+        })
+    return rows

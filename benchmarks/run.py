@@ -39,7 +39,8 @@ def _suite_registry(args):
 
     from benchmarks import (cluster_sched, fig8_utilization, fig10_failures,
                             fig13_allreduce, fig15_workloads, flowsim_micro,
-                            roofline, table2_bandwidth, table2_cost)
+                            netsim_bench, roofline, table2_bandwidth,
+                            table2_cost)
 
     suites = {
         "table2_cost": table2_cost,
@@ -51,6 +52,7 @@ def _suite_registry(args):
         "roofline": roofline,
         "flowsim_micro": flowsim_micro,
         "cluster_sched": cluster_sched,
+        "netsim": netsim_bench,
     }
     if args.quick:
         del suites["flowsim_micro"]  # times the slow scalar oracle
@@ -76,6 +78,10 @@ def _parse_only(ap, only_arg: str, suites) -> tuple:
     for tok in only_arg.split(","):
         if tok in suites:
             suite_names.add(tok)
+            continue
+        by_prefix = [name for name in suites if name.startswith(tok)]
+        if len(by_prefix) == 1:  # unambiguous suite prefix (--only fig13)
+            suite_names.add(by_prefix[0])
             continue
         try:
             R.parse_scenario(tok)

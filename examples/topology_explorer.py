@@ -38,7 +38,8 @@ def describe(spec: str) -> str:
 
 def describe_scenario(token: str) -> str:
     """Measured achievable fraction of a full scenario vs its healthy
-    baseline (same topology + traffic, failure leg dropped)."""
+    baseline (same topology + traffic, failure leg dropped); a ``coll=``
+    leg additionally reports the time-domain simulated completion."""
     sc = parse_scenario(token)
     frac = sc.fraction()
     line = f"{sc}: measured {sc.traffic} = {frac:.4f}"
@@ -48,6 +49,17 @@ def describe_scenario(token: str) -> str:
         loss = 0.0 if healthy == 0 else (healthy - frac) / healthy
         line += (f"  (healthy {healthy:.4f}, degradation {loss:+.1%} "
                  f"under {sc.failures})")
+    if sc.collective is not None:
+        t = sc.completion_time()
+        line += f"\n  {sc.collective}: simulated completion {t * 1e3:.3f} ms"
+        if sc.failures:
+            healthy_t = parse_scenario(
+                f"{sc.topology}/{sc.collective}").completion_time()
+            line += (f" (healthy {healthy_t * 1e3:.3f} ms, "
+                     f"{t / healthy_t:.2f}x)")
+        model = sc.collective.model_time(sc.topology.num_accelerators)
+        if model is not None:
+            line += f"; alpha-beta model {model * 1e3:.3f} ms"
     return line
 
 

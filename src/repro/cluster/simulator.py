@@ -44,6 +44,8 @@ from repro.cluster.traces import TraceJob
 from repro.core import flowsim as F
 from repro.core import registry
 from repro.core.allocation import HxMeshAllocator
+from repro.netsim import engine as NE
+from repro.netsim import schedule as NSch
 
 EV_ARRIVAL, EV_FINISH, EV_FAIL, EV_REPAIR, EV_PROBE = range(5)
 
@@ -75,6 +77,10 @@ class JobRecord:
     # observed this job (topology / traffic / current failure set) — the
     # reproducible address of the measurement
     probe_scenario: str | None = None
+    # time-domain probes (SimConfig.probe_collective): one (probe time,
+    # time-weighted mean achieved fraction of injection bandwidth while
+    # this job's collective ran) per probe that observed the job
+    bw_timeline: list = dataclasses.field(default_factory=list)
     token: int = 0  # placement version; stale FINISH events are dropped
     finish_t: float = 0.0  # scheduled completion of the current placement
 
@@ -109,6 +115,12 @@ class SimConfig:
     # fire only up to the last arrival, like the failure churn)
     seed: int = 0
     topology: str | None = None  # registry spec string
+    # collective token ("ring:s16MiB", netsim grammar): when set, every
+    # bandwidth probe additionally plays one such collective per running
+    # job *concurrently* through the shared fabric with the time-domain
+    # engine, recording per-job achieved-bandwidth timelines
+    # (JobRecord.bw_timeline, SimResult.probe_timelines)
+    probe_collective: str | None = None
 
     @classmethod
     def for_topology(cls, spec: str, **kw) -> "SimConfig":
@@ -137,6 +149,10 @@ class SimResult:
     # one (time, scenario string) per bandwidth probe: the fabric each
     # probe measured, addressable via registry.parse_scenario
     probe_log: list = dataclasses.field(default_factory=list)
+    # one (time, {jid: [(t0, t1, fraction), ...]}) per time-domain probe
+    # (probe_collective set): each co-scheduled job's achieved-bandwidth
+    # timeline while every job's collective loaded the shared fabric
+    probe_timelines: list = dataclasses.field(default_factory=list)
 
     def utilization(self, t_end: float | None = None) -> float:
         """Mean time-weighted utilization over the arrival window by
@@ -180,11 +196,15 @@ class ClusterSimulator:
         self.samples: list[M.Sample] = []
         self.frag_samples: list[tuple[float, float]] = []
         self.probe_log: list[tuple[float, str]] = []
+        self.probe_timelines: list[tuple[float, dict]] = []
         self._heap: list = []
         self._seq = 0
         self._counts = {"fail": 0, "repair": 0, "probe": 0}
         # flow-level fabric, built lazily on the first probe
         self._base_net: F.Network | None = None
+        # netsim footprint cache, reused across probes while the failure
+        # set is unchanged (BFS work amortizes over a probe series)
+        self._foot_cache: tuple[frozenset, NE.FootprintCache] | None = None
 
     # -- event plumbing ------------------------------------------------------
 
@@ -232,6 +252,7 @@ class ClusterSimulator:
             n_repairs=self._counts["repair"],
             n_probes=self._counts["probe"],
             probe_log=self.probe_log,
+            probe_timelines=self.probe_timelines,
         )
 
     # -- event handlers ------------------------------------------------------
@@ -466,10 +487,47 @@ class ClusterSimulator:
                 rec.allocated_token = rec.token
             rec.achieved_bw.append(frac)
             rec.probe_scenario = scenario
+        if self.cfg.probe_collective:
+            self._probe_collective_timelines(t, net, jobs_eps)
         self.frag_samples.append((t, M.fragmentation(self.alloc)))
         nxt = t + self.cfg.probe_interval
         if nxt <= self.last_arrival:
             self._push(nxt, EV_PROBE, None)
+
+    def _probe_collective_timelines(self, t: float, net: F.Network,
+                                    jobs_eps: dict) -> None:
+        """Time-domain probe: lower one ``probe_collective`` per running
+        job over its own endpoints, play them *concurrently* through the
+        shared fabric with :mod:`repro.netsim`, and record each job's
+        achieved-bandwidth timeline (fractions of injection bandwidth)."""
+        parts = [
+            NSch.schedule_for_endpoints(
+                self.cfg.probe_collective, net, eps, group=str(jid))
+            for jid, eps in sorted(jobs_eps.items()) if len(eps) >= 2
+        ]
+        parts = [s for s in parts if s.phases]
+        if not parts:
+            return
+        merged = NSch.merge_schedules(parts, name=f"probe@{t:g}")
+        failed = frozenset(self.alloc.failed)
+        if self._foot_cache is None or self._foot_cache[0] != failed:
+            self._foot_cache = (failed, NE.FootprintCache(net))
+        report = NE.simulate_schedule(net, merged, link_bw=1.0,
+                                      cache=self._foot_cache[1])
+        lpe = net.meta.get("links_per_endpoint", 1)
+        per_job: dict[int, list[tuple[float, float, float]]] = {}
+        for t0, t1, rates in report.timeline:
+            for group, rate in rates.items():
+                jid = int(group)
+                k = len(jobs_eps[jid])
+                per_job.setdefault(jid, []).append(
+                    (t0, t1, rate / (k * lpe)))
+        self.probe_timelines.append((t, per_job))
+        for jid, segs in per_job.items():
+            dur = sum(t1 - t0 for t0, t1, _ in segs)
+            mean = (sum((t1 - t0) * fr for t0, t1, fr in segs) / dur
+                    if dur > 0 else 0.0)
+            self.records[jid].bw_timeline.append((t, mean))
 
 
 def simulate(

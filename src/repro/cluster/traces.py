@@ -34,7 +34,14 @@ from repro.core.allocation import JOB_SIZE_DISTRIBUTION, Job, _divisors
 @dataclasses.dataclass(frozen=True)
 class TraceJob:
     """One job of a trace: a ``u × v``-board request arriving at ``arrival``
-    with ``duration`` seconds of service time."""
+    with ``duration`` seconds of service time.
+
+    ``scenario`` is the canonical registry scenario string of the fabric
+    the job's duration was calibrated for (``"hx2-16x16/alltoall"``; empty
+    when the generator was given a paper profile name with no registry
+    spec) — so trace files are replayable against the exact topology that
+    priced them, the same one-string addressing the probe logs use.
+    """
 
     jid: int
     arrival: float
@@ -43,6 +50,7 @@ class TraceJob:
     duration: float
     workload: str = "GPT-3"
     iterations: int = 0
+    scenario: str = ""
 
     @property
     def size(self) -> int:
@@ -116,13 +124,27 @@ def _generate(
         raw.append((u, v, wl, iters, dur))
     mean_bs = sum(u * v * dur for u, v, _, _, dur in raw) / len(raw)
     mean_gap = mean_bs / (load * x * y)
+    scenario = _scenario_for(topology)
     jobs: list[TraceJob] = []
     t = 0.0
     for jid, (u, v, wl, iters, dur) in enumerate(raw):
         t += rng.expovariate(1.0 / mean_gap)
         jobs.append(TraceJob(jid=jid, arrival=t, u=u, v=v, duration=dur,
-                             workload=wl, iterations=iters))
+                             workload=wl, iterations=iters,
+                             scenario=scenario))
     return jobs
+
+
+def _scenario_for(topology: str) -> str:
+    """Canonical scenario string of a generator's ``topology`` argument,
+    or ``""`` for paper profile names ("Hx2Mesh") that are not registry
+    specs."""
+    from repro.core import registry  # lazy: registry is a heavy import
+
+    try:
+        return str(registry.parse_scenario(topology))
+    except ValueError:
+        return ""
 
 
 def poisson_trace(

@@ -354,7 +354,7 @@ def demand_max_link_load(
     sparse pass over every source."""
     if demand.n_sources == 0:
         return 0.0
-    if demand.symmetric:
+    if demand.symmetric or getattr(demand, "half_cut", None) is not None:
         sym = symmetric_max_link_load(net, demand)
         if sym is not None:
             return sym
@@ -377,10 +377,22 @@ def symmetric_max_link_load(net: Network, demand) -> float | None:
     the automorphism mapping ``r`` to ``s``; it permutes ``O``).  One BFS
     per class replaces one per endpoint: hx2-64x64 (16,384 endpoints)
     needs 4 representatives instead of 16,384 sources.
+
+    Demands invariant only under *half-preserving* automorphisms (the
+    bisection pattern — ``demand.half_cut`` names the cut's grid row) use
+    the subgroup that permutes board rows within each side of the cut:
+    twice the classes, still exact, still a handful of BFS runs at 65k
+    endpoints.
     """
-    classes = endpoint_classes(net)
-    orbits = edge_orbit_ids(net)
-    if classes is None or orbits is None or not demand.symmetric:
+    if demand.symmetric:
+        half_cut = None
+    else:
+        half_cut = getattr(demand, "half_cut", None)
+        if half_cut is None:
+            return None
+    classes = endpoint_classes(net, half_cut=half_cut)
+    orbits = edge_orbit_ids(net, half_cut=half_cut)
+    if classes is None or orbits is None:
         return None
     if len(demand.sources) != net.n_endpoints:
         return None  # demand must cover every endpoint of the healthy fabric
@@ -400,7 +412,8 @@ def symmetric_max_link_load(net: Network, demand) -> float | None:
     return float(loads.max()) if len(loads) else 0.0
 
 
-def endpoint_classes(net: Network) -> np.ndarray | None:
+def endpoint_classes(net: Network,
+                     half_cut: int | None = None) -> np.ndarray | None:
     """Endpoint symmetry-class ids under the builder's declared automorphism
     subgroup, or ``None`` (no declared symmetry, or failures applied).
 
@@ -409,6 +422,13 @@ def endpoint_classes(net: Network) -> np.ndarray | None:
       automorphism): endpoints are equivalent iff they share an on-board
       position ``(i, j)`` -> ``a*b`` classes.
     * ``torus`` — translations: one class.
+
+    ``half_cut`` (a grid-row index on a board boundary) restricts to the
+    *half-preserving* subgroup — board-row permutations within each side
+    of the cut, board-column permutations unrestricted: hxmesh endpoints
+    are then equivalent iff they share an on-board position *and* a side
+    (``2*a*b`` classes); the torus has no half-preserving translation
+    subgroup declared -> ``None``.
 
     Class ids are chosen so that the *first* endpoint of each class (the
     lowest id) is its representative.
@@ -422,13 +442,22 @@ def endpoint_classes(net: Network) -> np.ndarray | None:
         e = np.arange(net.n_endpoints)
         j = e % a
         i = (e // a) % b
-        return (i * a + j).astype(np.int64)
+        if half_cut is None:
+            return (i * a + j).astype(np.int64)
+        if not _hx_half_cut_ok(meta, half_cut):
+            return None
+        by = e // (a * b * meta["x"])
+        side = (by * b + i) >= half_cut
+        return (side * (a * b) + i * a + j).astype(np.int64)
     if kind == "torus":
+        if half_cut is not None:
+            return None
         return np.zeros(net.n_endpoints, dtype=np.int64)
     return None
 
 
-def edge_orbit_ids(net: Network) -> np.ndarray | None:
+def edge_orbit_ids(net: Network,
+                   half_cut: int | None = None) -> np.ndarray | None:
     """Orbit ids of the directed edges (aligned with
     :meth:`Network.directed_edges`) under the same subgroup as
     :func:`endpoint_classes`, or ``None``."""
@@ -438,9 +467,13 @@ def edge_orbit_ids(net: Network) -> np.ndarray | None:
     kind = meta.get("kind")
     U, V, _ = net.directed_edges()
     if kind == "hxmesh":
-        inv = _hxmesh_node_invariants(net)
+        if half_cut is not None and not _hx_half_cut_ok(meta, half_cut):
+            return None
+        inv = _hxmesh_node_invariants(net, half_cut)
         keys = [(inv[int(u)], inv[int(v)]) for u, v in zip(U, V)]
     elif kind == "torus":
+        if half_cut is not None:
+            return None
         sx, sy = meta["side_x"], meta["side_y"]
         iu, ju = U // sx, U % sx
         iv, jv = V // sx, V % sx
@@ -452,18 +485,40 @@ def edge_orbit_ids(net: Network) -> np.ndarray | None:
                     dtype=np.int64)
 
 
-def _hxmesh_node_invariants(net: Network) -> list[tuple]:
+def _hx_half_cut_ok(meta: dict, half_cut: int) -> bool:
+    """A half-preserving cut is valid only on a board boundary strictly
+    inside the grid — the single eligibility rule both
+    :func:`endpoint_classes` and :func:`edge_orbit_ids` consult (they
+    must agree, or classes and orbits would come from different
+    subgroups)."""
+    b = meta["b"]
+    return half_cut % b == 0 and 0 < half_cut < b * meta["y"]
+
+
+def _hxmesh_node_invariants(net: Network,
+                            half_cut: int | None = None) -> list[tuple]:
     """Per-node invariants under board-row/column permutations: on-board
     position for accelerators, on-board row for row switches, on-board
-    column for column switches."""
+    column for column switches.  With ``half_cut``, accelerators and row
+    switches also carry which side of the cut their grid row is on (board
+    rows only permute within a side; column switches span both sides and
+    stay side-free)."""
     a, b, x, y = (net.meta[k] for k in ("a", "b", "x", "y"))
     n = a * b * x * y
     inv: list[tuple] = []
     for v in range(net.n_nodes):
         if v < n:
-            inv.append(("a", (v // a) % b, v % a))
+            i = (v // a) % b
+            if half_cut is None:
+                inv.append(("a", i, v % a))
+            else:
+                by = v // (a * b * x)
+                inv.append(("a", (by * b + i) >= half_cut, i, v % a))
         elif v < n + y * b:
-            inv.append(("r", (v - n) % b))
+            if half_cut is None:
+                inv.append(("r", (v - n) % b))
+            else:
+                inv.append(("r", (v - n) >= half_cut, (v - n) % b))
         else:
             inv.append(("c", (v - n - y * b) % a))
     return inv

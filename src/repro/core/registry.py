@@ -70,6 +70,8 @@ from repro.core import flowsim as F
 from repro.core import topology as T
 from repro.core import traffic as TR
 from repro.core.allocation import HxMeshAllocator, TorusAllocator
+from repro.netsim import engine as NE
+from repro.netsim import schedule as NS
 
 # bump to invalidate cached measured fractions when the engine or the
 # builders change behaviour.  v2: entries are keyed by the full canonical
@@ -210,8 +212,11 @@ def measured_fraction(scenario) -> float:
 
     Results are cached in ``MEASURED_CACHE`` keyed by the canonical
     scenario string — deterministic (every random leg is seeded), so the
-    cache is purely a time saver."""
+    cache is purely a time saver.  A ``coll=`` leg does not change the
+    steady-state fraction, so it is stripped from the cache key."""
     sc = parse_scenario(scenario)
+    if sc.collective is not None:
+        sc = dataclasses.replace(sc, collective=None)
     key = str(sc)
     if key in _measured_mem:
         return _measured_mem[key]
@@ -225,6 +230,30 @@ def measured_fraction(scenario) -> float:
         _store_cache(cache)
     _measured_mem[key] = entries[key]
     return entries[key]
+
+
+_simulated_mem: dict[str, float] = {}
+
+
+def simulated_time(scenario) -> float:
+    """Simulated completion time (seconds) of one collective scenario:
+    build the (possibly degraded) fabric, lower the ``coll=`` leg onto it
+    (:mod:`repro.netsim.schedule`), and play the schedule through the
+    time-domain engine (:mod:`repro.netsim.engine`) at the paper's link
+    bandwidth.  Deterministic; memory-cached by the scenario string."""
+    sc = parse_scenario(scenario)
+    if sc.collective is None:
+        raise ValueError(
+            f"scenario {sc} has no collective leg; grammar: "
+            f"{NS.collective_grammar()}")
+    key = str(sc)
+    if key not in _simulated_mem:
+        net = sc.network()
+        report = NE.simulate_schedule(
+            net, sc.schedule(net), link_bw=commodel.LINK_BW,
+            record_timeline=False)
+        _simulated_mem[key] = report.time
+    return _simulated_mem[key]
 
 
 def _load_cache() -> dict:
@@ -427,21 +456,33 @@ TABLE2_SPECS: dict[str, dict[str, str]] = {
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One experiment scenario: a topology under a traffic pattern with a
-    failure set — the unit every paper claim quantifies over (Table II
-    fractions, Fig 10 fail-in-place, §V global traffic).
+    """One experiment scenario: a topology under a traffic pattern with an
+    optional collective schedule and a failure set — the unit every paper
+    claim quantifies over (Table II fractions, Fig 10 fail-in-place, §V
+    global traffic and time-domain collective runs).
 
-    The canonical string is ``<topology>/<traffic>[/<failures>]``; the
-    failure leg is omitted when empty, and ``parse_scenario(str(s)) == s``
+    The canonical string is
+    ``<topology>[/<traffic>][/<collective>][/<failures>]``; the failure
+    leg is omitted when empty, the traffic leg is omitted when it is the
+    default ``alltoall`` *and* a collective leg is present (a collective
+    scenario is a completion-time experiment — the traffic leg only
+    matters when explicitly pinned), and ``parse_scenario(str(s)) == s``
     round-trips for every registered grammar combination.
     """
 
     topology: Topology
     traffic: TR.TrafficSpec
     failures: F.FailureSpec = F.FailureSpec()
+    collective: NS.CollectiveSpec | None = None
 
     def __str__(self) -> str:
-        parts = [self.topology.spec, str(self.traffic)]
+        parts = [self.topology.spec]
+        default_traffic = (self.traffic.name == "alltoall"
+                           and not self.traffic.params)
+        if self.collective is None or not default_traffic:
+            parts.append(str(self.traffic))
+        if self.collective is not None:
+            parts.append(str(self.collective))
         if self.failures:
             parts.append(str(self.failures))
         return "/".join(parts)
@@ -463,14 +504,31 @@ class Scenario:
         scenario string; see :func:`measured_fraction`)."""
         return measured_fraction(self)
 
+    def schedule(self, net: F.Network | None = None) -> NS.CommSchedule:
+        """The collective leg lowered onto this scenario's (possibly
+        degraded) fabric — requires a ``coll=`` leg."""
+        if self.collective is None:
+            raise ValueError(
+                f"scenario {self} has no collective leg; grammar: "
+                f"{NS.collective_grammar()}")
+        return self.collective.schedule(self.network() if net is None
+                                        else net)
+
+    def completion_time(self) -> float:
+        """Simulated completion time (seconds) of the collective leg on
+        this scenario's fabric (memory-cached by the scenario string; see
+        :func:`simulated_time`)."""
+        return simulated_time(self)
+
 
 def scenario_grammar() -> str:
     """Human-readable summary of every registered scenario leg (used by
     parse error messages and ``--help`` style listings)."""
     topo = ", ".join(f.grammar for f in FAMILIES.values())
     return (
-        "scenario := <topology>[/<traffic>][/<failures>] with topology in "
-        f"[{topo}], traffic in [{TR.traffic_grammars()}], failures "
+        "scenario := <topology>[/<traffic>][/<collective>][/<failures>] "
+        f"with topology in [{topo}], traffic in [{TR.traffic_grammars()}], "
+        f"collective {NS.collective_grammar()}, failures "
         f"{F.FAILURE_GRAMMAR}"
     )
 
@@ -480,9 +538,11 @@ def parse_scenario(token) -> Scenario:
 
     Each leg normalizes through its registered grammar table: topology
     aliases canonicalize (``hx1-8x8/uniform`` -> ``hyperx-8x8/alltoall``),
-    default traffic params drop, ``seed0`` drops from failure clauses, and
-    an omitted traffic leg means ``alltoall``.  Raises ``ValueError`` with
-    the full grammar for malformed tokens."""
+    default traffic params drop, collective sizes canonicalize to the
+    largest binary unit (``coll=ring:s1024MiB`` -> ``coll=ring:s1GiB``),
+    ``seed0`` drops from failure clauses, and an omitted traffic leg means
+    ``alltoall``.  Raises ``ValueError`` with the full grammar for
+    malformed tokens."""
     if isinstance(token, Scenario):
         return token
     if isinstance(token, Topology):
@@ -495,16 +555,27 @@ def parse_scenario(token) -> Scenario:
     except ValueError as e:
         raise ValueError(f"bad scenario topology leg: {e}") from None
     traffic_tok: str | None = None
+    coll_tok: str | None = None
     failure_tok: str | None = None
     for part in parts[1:]:
         if part.startswith("fail="):
             if failure_tok is not None:
                 raise ValueError(f"duplicate failure leg in {token!r}")
             failure_tok = part
-        elif failure_tok is not None:
+        elif part.startswith("coll="):
+            if coll_tok is not None:
+                raise ValueError(f"duplicate collective leg in {token!r}")
+            if failure_tok is not None:
+                raise ValueError(
+                    f"collective leg {part!r} after the failure leg in "
+                    f"{token!r}; grammar: {scenario_grammar()}"
+                )
+            coll_tok = part
+        elif failure_tok is not None or coll_tok is not None:
             raise ValueError(
-                f"traffic leg {part!r} after the failure leg in {token!r}; "
-                f"grammar: {scenario_grammar()}"
+                f"traffic leg {part!r} after the "
+                f"{'failure' if failure_tok is not None else 'collective'} "
+                f"leg in {token!r}; grammar: {scenario_grammar()}"
             )
         elif traffic_tok is not None:
             raise ValueError(f"duplicate traffic leg in {token!r}")
@@ -514,15 +585,17 @@ def parse_scenario(token) -> Scenario:
             traffic_tok = part
     traffic = TR.parse_traffic(traffic_tok or "alltoall")
     failures = F.parse_failures(failure_tok or "")
-    return Scenario(topology=topo, traffic=traffic, failures=failures)
+    collective = NS.parse_collective(coll_tok) if coll_tok else None
+    return Scenario(topology=topo, traffic=traffic, failures=failures,
+                    collective=collective)
 
 
 def match_scenario(token: str, scenario) -> bool:
     """True when a (possibly partial) scenario token addresses ``scenario``.
 
     Only the legs the token *specifies* are compared — ``hx2-16x16``
-    matches every traffic/failure combination on that topology, while
-    ``hx2-16x16/alltoall`` pins the traffic leg too.  Legs normalize
+    matches every traffic/collective/failure combination on that topology,
+    while ``hx2-16x16/alltoall`` pins the traffic leg too.  Legs normalize
     before comparison, so aliases match their canonical forms."""
     sc = parse_scenario(scenario)
     parts = token.strip().strip("/").split("/")
@@ -531,6 +604,9 @@ def match_scenario(token: str, scenario) -> bool:
     for part in parts[1:]:
         if part.startswith("fail="):
             if F.parse_failures(part) != sc.failures:
+                return False
+        elif part.startswith("coll="):
+            if NS.parse_collective(part) != sc.collective:
                 return False
         elif TR.parse_traffic(part) != sc.traffic:
             return False

@@ -73,6 +73,14 @@ class Demand:
     vols: np.ndarray  # explicit volumes (aggregated: no duplicate (s, t))
     groups: tuple[SpreadGroup, ...] = ()
     symmetric: bool = False
+    # grid-row index of a bisection cut the demand is invariant under: the
+    # demand only commutes with *half-preserving* fabric automorphisms
+    # (board-row permutations within each side of the cut).  Set by the
+    # bisection builder on healthy hxmesh fabrics; the flow engine then
+    # takes the half-symmetry fast path (one BFS per side x on-board
+    # position) instead of one BFS per endpoint — what keeps 65k+-endpoint
+    # bisection sweeps tractable.  ``None`` everywhere else.
+    half_cut: int | None = None
 
     @property
     def n_sources(self) -> int:
@@ -305,6 +313,7 @@ def _bisection_demand(net: F.Network) -> Demand:
     if len(act) < 2:
         return _empty_demand(net)
     geo = F._grid_geometry(net)
+    half_cut = None
     if geo is not None:
         r, c, gid = geo
         cut = r // 2
@@ -313,6 +322,9 @@ def _bisection_demand(net: F.Network) -> Demand:
             aligned = (cut // b) * b
             if 0 < aligned < r:
                 cut = aligned
+            if len(act) == net.n_endpoints and 0 < cut < r and cut % b == 0:
+                half_cut = cut  # healthy fabric, board-aligned cut:
+                # eligible for the half-symmetry fast path
         top = {gid(rr, cc) for rr in range(cut) for cc in range(c)}
         left = np.array([e for e in act if e in top], dtype=np.int64)
         right = np.array([e for e in act if e not in top], dtype=np.int64)
@@ -336,7 +348,7 @@ def _bisection_demand(net: F.Network) -> Demand:
     return Demand(net=net, sources=sources,
                   indptr=np.zeros(len(sources) + 1, dtype=np.int64),
                   dsts=np.zeros(0, dtype=np.int64), vols=np.zeros(0),
-                  groups=groups)
+                  groups=groups, half_cut=half_cut)
 
 
 # ---------------------------------------------------------------------------

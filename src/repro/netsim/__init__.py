@@ -1,0 +1,40 @@
+"""Time-domain collective-schedule simulator (paper §V time-domain sims).
+
+``netsim`` plays concrete collective schedules — phase DAGs of flows with
+byte sizes — through the flow-level fabric graphs of
+:mod:`repro.core.flowsim`, recomputing max-min fair link shares at every
+flow start/finish.  See :mod:`repro.netsim.engine` for the event engine
+and :mod:`repro.netsim.schedule` for the §V-A2 algorithm lowerings and
+the ``coll=`` scenario-grammar leg.
+"""
+
+from repro.netsim.engine import (FootprintCache, SimReport, flow_footprints,
+                                 simulate_schedule, steady_state_fraction,
+                                 waterfill)
+from repro.netsim.schedule import (COLLECTIVE_FAMILIES, CollectiveFamily,
+                                   CollectiveSpec, CommSchedule, Phase,
+                                   collective_grammar, lower,
+                                   merge_schedules, parse_collective,
+                                   register_collective, ring_order,
+                                   schedule_for_endpoints)
+
+__all__ = [
+    "COLLECTIVE_FAMILIES",
+    "CollectiveFamily",
+    "CollectiveSpec",
+    "CommSchedule",
+    "FootprintCache",
+    "Phase",
+    "SimReport",
+    "collective_grammar",
+    "flow_footprints",
+    "lower",
+    "merge_schedules",
+    "parse_collective",
+    "register_collective",
+    "ring_order",
+    "schedule_for_endpoints",
+    "simulate_schedule",
+    "steady_state_fraction",
+    "waterfill",
+]

@@ -1,0 +1,637 @@
+"""Event-driven fluid simulator: collective schedules through the fabric.
+
+The steady-state engine (:mod:`repro.core.flowsim`) answers "what fraction
+of injection bandwidth can this traffic *pattern* sustain forever?".  The
+paper's §V evaluation also asks a *time-domain* question: how long does a
+concrete collective **schedule** — flows with byte sizes, phase barriers,
+per-step latencies — take to complete on a concrete (possibly degraded)
+fabric?  This module is that engine, in the fluid limit:
+
+* every flow routes over the same ideal-ECMP shortest-path split the
+  steady-state engine uses — its per-link **footprint** ``w_f(e)`` (the
+  fraction of the flow's rate carried by directed link ``e``) comes from
+  the classic path-counting identity ``N_p(s,u)·N_p(v,t)/N_p(s,t)`` over
+  the CSR fabric arrays flowsim already builds (:func:`flow_footprints`);
+* at any instant the active flows share links **max-min fairly**:
+  :func:`waterfill` runs vectorized progressive filling over the sparse
+  flow x link footprint matrix (freeze whole bottleneck levels at a time
+  — one sparse matvec per distinct level, never per flow);
+* rates are recomputed only when the active flow set changes — at each
+  flow start or finish event (:func:`simulate_schedule`).  Identical
+  active sets (e.g. the 2(p-1) repeats of a ring step) hit a rate cache
+  keyed by the packed active-flow bitmap, so a 16k-endpoint ring
+  allreduce costs one waterfill, not thirty thousand.
+
+Time is in seconds once ``link_bw`` is given in bytes/s (default 1.0:
+time == bytes through a unit link).  Phase activation latency (the α of
+the α-β models) is charged once per phase repeat.
+
+The engine is deliberately *fluid*: no packets, no queues — it upper-
+bounds the packet-level simulations of the paper the same way flowsim's
+steady-state fractions do, but resolves contention **over time** between
+phases, jobs and failure-degraded routes.  The cross-checks in
+``tests/test_netsim.py`` pin both ends: a single long-lived demand
+reproduces flowsim's max-min fraction to ~1e-9, and an empty-fabric ring
+allreduce lands within 5% of the α-β ``commodel`` prediction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.core import flowsim as F
+
+try:
+    import scipy.sparse as _sp
+except ImportError:  # pragma: no cover - scipy ships with the toolchain
+    _sp = None
+
+
+# ---------------------------------------------------------------------------
+# Per-flow ECMP footprints
+# ---------------------------------------------------------------------------
+
+
+class FootprintCache:
+    """Per-network cache of (src, dst) -> sparse ECMP footprint.
+
+    A footprint is ``(edge_indices, weights)`` aligned with
+    ``net.directed_edges()``: ``weights[k]`` is the fraction of the flow's
+    rate carried by *one* link of the bundle ``edge_indices[k]`` (parallel
+    links split evenly, matching flowsim's per-link load convention).
+    Collective schedules reuse the same neighbor pairs across phases and
+    repeats, so caching by pair makes lowering + simulation one BFS sweep
+    per unique endpoint, not per phase.
+    """
+
+    def __init__(self, net: F.Network, chunk: int = 256):
+        self.net = net
+        self.chunk = max(1, chunk)
+        self.U, self.V, self.M = net.directed_edges()
+        self.n_edges = len(self.U)
+        self._edge_index = {
+            (int(u), int(v)): k
+            for k, (u, v) in enumerate(zip(self.U, self.V))
+        }
+        self._cache: dict[tuple[int, int], tuple[np.ndarray, np.ndarray]] = {}
+
+    def ensure(self, pairs) -> None:
+        """Compute and cache footprints for every missing (s, t) pair.
+
+        Collective flows are overwhelmingly *local* (ring neighbors are
+        1-2 fabric hops apart), so each pair first tries a bidirectional
+        ball-growing BFS with exact path counts (:meth:`_local` — work
+        proportional to the pair's shortest-path neighborhood, not the
+        fabric).  Pairs whose balls blow past the node budget fall back
+        to the batched whole-graph BFS (:meth:`_compute`)."""
+        missing = [p for p in dict.fromkeys(map(tuple, pairs))
+                   if p not in self._cache]
+        hard: list[tuple[int, int]] = []
+        for s, t in missing:
+            fp = self._local(s, t)
+            if fp is None:
+                hard.append((s, t))
+            else:
+                self._cache[(s, t)] = fp
+        for lo in range(0, len(hard), self.chunk):
+            self._compute(hard[lo:lo + self.chunk])
+
+    def _local(self, s: int, t: int, budget: int = 8192):
+        """Exact ECMP footprint of one pair via bidirectional level-BFS
+        with path counting, or ``None`` when the explored balls exceed
+        ``budget`` nodes (caller falls back to the batched path).
+
+        Both balls are grown to radius ``dist - 1`` so every DAG node has
+        exact ``Np(s, u)`` / ``Np(v, t)`` counts; the total path count
+        comes from the cut-level identity
+        ``N(s,t) = Σ_{ds(v)=dist-1} N(s,v)·N(v,t)``."""
+        if s == t:
+            return np.zeros(0, dtype=np.int64), np.zeros(0)
+        adj = self.net.adj
+        ds = {s: 0}
+        nps = {s: 1.0}
+        dt_ = {t: 0}
+        npt = {t: 1.0}
+        fs, ft = [s], [t]
+        rs = rt = 0
+        best = np.inf  # min ds[v] + dt[v] over nodes in both balls
+
+        def _expand(front, dist_map, count_map, radius, other):
+            nonlocal best
+            nxt: list[int] = []
+            lev = radius + 1
+            for u in front:
+                cu = count_map[u]
+                for v in adj.get(u, ()):
+                    d = dist_map.get(v)
+                    if d is None:
+                        dist_map[v] = lev
+                        count_map[v] = cu
+                        nxt.append(v)
+                        if v in other:
+                            best = min(best, lev + other[v])
+                    elif d == lev:
+                        count_map[v] += cu
+            return nxt
+
+        # phase 1: certify the shortest distance (dist is final once
+        # rs + rt >= best — any shorter path would already have met)
+        while best > rs + rt:
+            if not fs and not ft:
+                return np.zeros(0, dtype=np.int64), np.zeros(0)  # split
+            if ft and (not fs or len(ft) <= len(fs)):
+                ft = _expand(ft, dt_, npt, rt, ds)
+                rt += 1
+            else:
+                fs = _expand(fs, ds, nps, rs, dt_)
+                rs += 1
+            if len(ds) + len(dt_) > budget:
+                return None
+        dist = int(best)
+        if dist == 1:  # direct neighbors: split over the parallel bundle
+            m = sum(1 for v in adj.get(s, ()) if v == t)
+            e = self._edge_index[(s, t)]
+            return (np.array([e], dtype=np.int64), np.array([1.0 / m]))
+        # phase 2: grow both balls to radius dist-1 (exact counts on the
+        # whole DAG)
+        while rs < dist - 1:
+            fs = _expand(fs, ds, nps, rs, dt_)
+            rs += 1
+            if len(ds) + len(dt_) > budget:
+                return None
+        while rt < dist - 1:
+            ft = _expand(ft, dt_, npt, rt, ds)
+            rt += 1
+            if len(ds) + len(dt_) > budget:
+                return None
+        total = sum(nps[v] * npt[v] for v, d in ds.items()
+                    if d == dist - 1 and dt_.get(v) == 1)
+        if total <= 0:  # pragma: no cover - dist certified above
+            return np.zeros(0, dtype=np.int64), np.zeros(0)
+        found: dict[int, float] = {}
+        for u, du in ds.items():
+            if du >= dist:
+                continue
+            cu = nps[u]
+            for v in adj.get(u, ()):
+                dv = dt_.get(v)
+                if dv is not None and du + 1 + dv == dist:
+                    e = self._edge_index[(u, v)]
+                    if e not in found:
+                        found[e] = cu * npt[v] / total
+        idx = np.fromiter(found, dtype=np.int64, count=len(found))
+        w = np.fromiter(found.values(), dtype=np.float64, count=len(found))
+        keep = w > 1e-15
+        return idx[keep], w[keep]
+
+    def _compute(self, pairs: list[tuple[int, int]]) -> None:
+        if not pairs:
+            return
+        eps = sorted({e for p in pairs for e in p})
+        index = {e: i for i, e in enumerate(eps)}
+        D, Np = F.shortest_paths(self.net, np.asarray(eps, dtype=np.int64))
+        adj = self.net.adj
+        empty = (np.zeros(0, dtype=np.int64), np.zeros(0))
+        for s, t in pairs:
+            ds, nps = D[index[s]], Np[index[s]]
+            npt = Np[index[t]]
+            dist = int(ds[t])
+            if s == t or dist < 0:  # self-flow or disconnected: no edges
+                self._cache[(s, t)] = empty
+                continue
+            # Walk the shortest-path DAG backwards from t: an edge (u, v)
+            # lies on an s->t shortest path iff d(s,u) + 1 == d(s,v) with v
+            # on the DAG; the flow share of ONE link of the bundle is
+            # Np(s,u)·Np(v,t)/Np(s,t).  Work is O(DAG), not O(all edges) —
+            # neighbor transfers on mesh fabrics touch a handful of links.
+            total = nps[t]
+            found: dict[int, float] = {}
+            frontier = {t}
+            for lev in range(dist, 0, -1):
+                prev: set[int] = set()
+                for v in frontier:
+                    for u in adj.get(v, ()):
+                        if ds[u] == lev - 1:
+                            e = self._edge_index[(u, v)]
+                            if e not in found:
+                                found[e] = nps[u] * npt[v] / total
+                                prev.add(u)
+                            else:
+                                prev.add(u)
+                frontier = prev
+            if found:
+                idx = np.fromiter(found, dtype=np.int64, count=len(found))
+                w = np.fromiter(found.values(), dtype=np.float64,
+                                count=len(found))
+                keep = w > 1e-15
+                self._cache[(s, t)] = (idx[keep], w[keep])
+            else:
+                self._cache[(s, t)] = empty
+
+    def get(self, s: int, t: int) -> tuple[np.ndarray, np.ndarray]:
+        if (s, t) not in self._cache:
+            self.ensure([(s, t)])
+        return self._cache[(s, t)]
+
+    def matrix(self, pairs):
+        """Sparse (n_flows x n_edges) footprint matrix for an ordered flow
+        list (scipy CSR, or a dense ndarray fallback without scipy)."""
+        self.ensure(pairs)
+        rows, cols, vals = [], [], []
+        for k, (s, t) in enumerate(pairs):
+            idx, w = self._cache[(s, t)]
+            rows.append(np.full(len(idx), k, dtype=np.int64))
+            cols.append(idx)
+            vals.append(w)
+        rows = np.concatenate(rows) if rows else np.zeros(0, dtype=np.int64)
+        cols = np.concatenate(cols) if cols else np.zeros(0, dtype=np.int64)
+        vals = np.concatenate(vals) if vals else np.zeros(0)
+        shape = (len(pairs), self.n_edges)
+        if _sp is not None:
+            return _sp.csr_matrix((vals, (rows, cols)), shape=shape)
+        W = np.zeros(shape)
+        np.add.at(W, (rows, cols), vals)
+        return W
+
+
+def flow_footprints(net: F.Network, pairs):
+    """One-shot footprint matrix for a list of (src, dst) pairs."""
+    return FootprintCache(net).matrix(pairs)
+
+
+# ---------------------------------------------------------------------------
+# Max-min fair rates: vectorized progressive filling
+# ---------------------------------------------------------------------------
+
+
+def waterfill(W, cap=None, weights=None) -> np.ndarray:
+    """Weighted max-min fair rates over shared links.
+
+    ``W`` is the (n_flows x n_edges) footprint matrix (``W[f, e]`` =
+    fraction of flow ``f``'s rate on link ``e``), ``cap`` the per-link
+    capacities (default 1.0), ``weights`` the per-flow fair-share weights
+    (default 1.0; rates satisfy ``r_f = weights_f * level_f`` with a
+    common level per bottleneck class).  Classic progressive filling,
+    vectorized: each iteration finds the next saturating level with one
+    sparse matvec and freezes *every* flow crossing a bottleneck link, so
+    the loop runs once per distinct level, not once per flow.
+
+    Flows with an empty footprint (disconnected / self flows) get
+    ``np.inf`` — the event loop completes them instantly.
+    """
+    dense = not (_sp is not None and _sp.issparse(W))
+    n_flows, n_edges = W.shape
+    w = np.ones(n_flows) if weights is None else np.asarray(
+        weights, dtype=np.float64)
+    cap = np.ones(n_edges) if cap is None else np.asarray(
+        cap, dtype=np.float64)
+    Ww = (W * w[:, None]) if dense else W.multiply(w[:, None]).tocsr()
+    rates = np.zeros(n_flows)
+    touches = np.asarray((W != 0).sum(axis=1)).ravel()
+    active = touches > 0
+    rates[~active] = np.inf  # footprint-less flows are unconstrained
+    frozen_load = np.zeros(n_edges)
+    guard = 0
+    while active.any():
+        guard += 1
+        if guard > n_flows + n_edges + 2:  # pragma: no cover - safety net
+            raise RuntimeError("waterfill failed to converge")
+        edge_w = np.asarray(Ww[active].sum(axis=0)).ravel()
+        relevant = edge_w > 1e-15
+        avail = np.maximum(cap - frozen_load, 0.0)
+        level = np.full(n_edges, np.inf)
+        level[relevant] = avail[relevant] / edge_w[relevant]
+        lstar = level.min()
+        if not np.isfinite(lstar):  # pragma: no cover - cap>0 everywhere
+            rates[active] = np.inf
+            break
+        bottleneck = relevant & (level <= lstar * (1 + 1e-12) + 1e-300)
+        ind = bottleneck.astype(np.float64)
+        touch = np.asarray(W @ ind).ravel() > 0
+        freeze = active & touch
+        if not freeze.any():  # pragma: no cover - numeric corner
+            freeze = active
+        rates[freeze] = w[freeze] * lstar
+        frozen_load += np.asarray(Ww[freeze].sum(axis=0)).ravel() * lstar
+        active = active & ~freeze
+    return rates
+
+
+def steady_state_fraction(net: F.Network, demand,
+                          links_per_endpoint: int = 1) -> float:
+    """Achievable fraction of a long-lived Demand under the netsim rate
+    model: one flow per nonzero (s, t) entry, fair-share weights equal to
+    the demand volumes.  The first (minimum) fill level is exactly
+    ``1 / max_link_load``, so this must agree with
+    :func:`repro.core.flowsim.achievable_fraction` — the equivalence test
+    that anchors the time-domain engine to the steady-state one."""
+    pairs: list[tuple[int, int]] = []
+    vols: list[float] = []
+    chunk = 512
+    for lo in range(0, demand.n_sources, chunk):
+        hi = min(lo + chunk, demand.n_sources)
+        rows = demand.rows(lo, hi)
+        for k, s in enumerate(demand.sources[lo:hi]):
+            nz = np.nonzero(rows[k])[0]
+            pairs.extend((int(s), int(t)) for t in nz)
+            vols.extend(float(v) for v in rows[k][nz])
+    if not pairs:
+        return 1.0
+    W = flow_footprints(net, pairs)
+    rates = waterfill(W, weights=np.asarray(vols))
+    level = np.min(rates / np.asarray(vols))
+    if not np.isfinite(level) or level <= 0:
+        return 1.0
+    return min(1.0, float(level) / links_per_endpoint)
+
+
+# ---------------------------------------------------------------------------
+# Event-driven schedule simulation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Outcome of one :func:`simulate_schedule` run.
+
+    ``time`` is the completion time of the whole schedule (seconds given
+    ``link_bw`` in bytes/s).  ``flow_bytes``/``delivered`` are per *flow
+    slot* (phase flow x all its repeats) — byte conservation means the two
+    agree.  ``timeline`` holds ``(t0, t1, {group: aggregate bytes/s})``
+    segments for every interval with active flows — the per-job
+    achieved-bandwidth timelines the cluster probes record.
+    """
+
+    time: float
+    phase_spans: list[tuple[str, float, float]]
+    flow_bytes: np.ndarray
+    delivered: np.ndarray
+    timeline: list[tuple[float, float, dict[str, float]]]
+    group_end: dict[str, float]
+    n_events: int = 0
+    n_waterfills: int = 0
+    n_unroutable: int = 0
+
+    def conservation_error(self) -> float:
+        """Max relative per-flow |delivered - expected| (0 when exact)."""
+        if not len(self.flow_bytes):
+            return 0.0
+        scale = np.maximum(self.flow_bytes, 1e-30)
+        return float((np.abs(self.delivered - self.flow_bytes) / scale).max())
+
+    def group_mean_rate(self, group: str) -> float:
+        """Time-weighted mean aggregate rate of one group over its own
+        active intervals (bytes/s)."""
+        num = dur = 0.0
+        for t0, t1, rates in self.timeline:
+            r = rates.get(group, 0.0)
+            if r > 0:
+                num += r * (t1 - t0)
+                dur += t1 - t0
+        return num / dur if dur > 0 else 0.0
+
+
+def simulate_schedule(
+    net: F.Network,
+    schedule,
+    link_bw: float = 1.0,
+    cache: FootprintCache | None = None,
+    record_timeline: bool = True,
+) -> SimReport:
+    """Play a :class:`repro.netsim.schedule.CommSchedule` through the
+    fabric and return its :class:`SimReport`.
+
+    Each phase activates ``alpha`` seconds after its dependencies finish
+    (charged per repeat — the per-step latency of the α-β models), runs
+    its flows under max-min fair sharing with every other active phase,
+    and completes when all its flows have moved their bytes.  Rates are
+    recomputed at every activation/finish event; identical active sets
+    hit the rate cache.
+    """
+    phases = schedule.phases
+    alpha = schedule.alpha
+    foot = cache if cache is not None else FootprintCache(net)
+
+    # flatten flows: global slot ids per phase
+    pairs: list[tuple[int, int]] = []
+    fbytes: list[float] = []
+    phase_slots: list[np.ndarray] = []
+    for ph in phases:
+        slots = []
+        for (s, t, b) in ph.flows:
+            slots.append(len(pairs))
+            pairs.append((int(s), int(t)))
+            fbytes.append(float(b))
+        phase_slots.append(np.asarray(slots, dtype=np.int64))
+    n_flows = len(pairs)
+    fbytes = np.asarray(fbytes)
+    W = foot.matrix(pairs) if n_flows else None
+    routable = (np.asarray((W != 0).sum(axis=1)).ravel() > 0
+                if n_flows else np.zeros(0, dtype=bool))
+
+    n_ph = len(phases)
+    deps_left = np.array([len(ph.deps) for ph in phases], dtype=np.int64)
+    children: list[list[int]] = [[] for _ in range(n_ph)]
+    for i, ph in enumerate(phases):
+        for d in ph.deps:
+            if not 0 <= d < n_ph:
+                raise ValueError(f"phase {i} depends on unknown phase {d}")
+            children[d].append(i)
+    repeat_left = np.array([max(1, ph.repeat) for ph in phases],
+                           dtype=np.int64)
+    total_repeats = repeat_left.copy()
+    flows_left = np.zeros(n_ph, dtype=np.int64)
+    started = np.full(n_ph, np.nan)
+    ended = np.full(n_ph, np.nan)
+    groups = [ph.group for ph in phases]
+    group_names = sorted(set(groups))
+    group_code = {g: k for k, g in enumerate(group_names)}
+    slot_phase = np.zeros(n_flows, dtype=np.int64)
+    for i, slots in enumerate(phase_slots):
+        slot_phase[slots] = i
+    slot_group = np.array([group_code[groups[i]] for i in slot_phase],
+                          dtype=np.int64) if n_flows else np.zeros(0, np.int64)
+    expected = fbytes * total_repeats[slot_phase] if n_flows else fbytes
+
+    remaining = np.zeros(n_flows)
+    delivered = np.zeros(n_flows)
+    active = np.zeros(n_flows, dtype=bool)
+    rate_cache: dict[bytes, np.ndarray] = {}
+    timeline: list[tuple[float, float, dict[str, float]]] = []
+    heap: list[tuple[float, int]] = []  # (activation time, phase)
+    for i in range(n_ph):
+        if deps_left[i] == 0:
+            heapq.heappush(heap, (alpha, i))
+    n_events = n_waterfills = 0
+    n_unroutable = int(n_flows - routable.sum()) if n_flows else 0
+    t = 0.0
+    rates = np.zeros(n_flows)
+
+    def _activate(i: int, now: float) -> None:
+        if np.isnan(started[i]):
+            started[i] = now
+        slots = phase_slots[i]
+        remaining[slots] = fbytes[slots]
+        # unroutable flows (self / disconnected) complete instantly
+        dead = slots[~routable[slots]] if len(slots) else slots
+        if len(dead):
+            delivered[dead] += remaining[dead]
+            remaining[dead] = 0.0
+        live = slots[routable[slots]] if len(slots) else slots
+        zero = live[fbytes[live] <= 0] if len(live) else live
+        if len(zero):
+            remaining[zero] = 0.0
+        active[slots] = remaining[slots] > 0
+        flows_left[i] = int((remaining[slots] > 0).sum())
+        if flows_left[i] == 0:
+            _phase_repeat_done(i, now)
+
+    def _phase_repeat_done(i: int, now: float) -> None:
+        repeat_left[i] -= 1
+        if repeat_left[i] > 0:
+            heapq.heappush(heap, (now + alpha, i))
+            return
+        ended[i] = now
+        for c in children[i]:
+            deps_left[c] -= 1
+            if deps_left[c] == 0:
+                heapq.heappush(heap, (now + alpha, c))
+
+    guard = 0
+    # every loop iteration reaches an activation or retires >= 1 flow:
+    # bound by total activations + total per-flow completions (x2 slack)
+    n_slots_x_repeats = sum(
+        len(ph.flows) * max(1, ph.repeat) for ph in phases)
+    max_events = 2 * (int(total_repeats.sum()) + n_slots_x_repeats) \
+        + 8 * n_ph + 64
+    # Lockstep-repeat fast forward: when the pending phase set recurs with
+    # every member's repeat count down by exactly one (a full cycle of the
+    # deterministic dynamics), the remaining repeats are periodic — jump
+    # them in one step instead of simulating 2(p-1) identical ring steps.
+    cycle_mark: tuple | None = None  # (ids, offsets, t, repeats snapshot)
+    while heap or active.any():
+        guard += 1
+        if guard > max_events:
+            raise RuntimeError(
+                f"netsim event loop did not terminate (> {max_events} "
+                f"events) — schedule {schedule.name!r}")
+        has_active = bool(active.any())
+        if not has_active and heap:
+            ids = tuple(sorted(i for _, i in heap))
+            offs = tuple(ti - t for ti, i in sorted(heap, key=lambda e: e[1]))
+            if cycle_mark is not None:
+                m_ids, m_offs, m_t, m_rl = cycle_mark
+                periodic = (
+                    m_ids == ids
+                    and len(m_offs) == len(offs)
+                    and all(abs(a - b) <= 1e-9 * max(abs(a), abs(b), alpha, 1e-30)
+                            for a, b in zip(m_offs, offs))
+                    and all(repeat_left[i] == m_rl[i] - 1 for i in ids)
+                )
+                k = min(int(repeat_left[i]) for i in ids) - 1 if ids else 0
+                if periodic and k > 0:
+                    dt_cycle = t - m_t
+                    if record_timeline and dt_cycle > 0:
+                        agg: dict[str, float] = {}
+                        for i in ids:
+                            moved = float(fbytes[phase_slots[i]].sum())
+                            g = groups[i]
+                            agg[g] = agg.get(g, 0.0) + moved / dt_cycle
+                        timeline.append((t, t + k * dt_cycle, agg))
+                    for i in ids:
+                        slots = phase_slots[i]
+                        delivered[slots] += k * fbytes[slots]
+                    repeat_left[list(ids)] -= k
+                    heap = [(ti + k * dt_cycle, i) for ti, i in heap]
+                    heapq.heapify(heap)
+                    t += k * dt_cycle
+                    cycle_mark = None
+                else:
+                    cycle_mark = (ids, offs, t,
+                                  {i: int(repeat_left[i]) for i in ids})
+            else:
+                cycle_mark = (ids, offs, t,
+                              {i: int(repeat_left[i]) for i in ids})
+        if has_active:
+            sig = np.packbits(active).tobytes()
+            cached = rate_cache.get(sig)
+            if cached is None:
+                n_waterfills += 1
+                cached = np.zeros(n_flows)
+                idx = np.nonzero(active)[0]
+                cached[idx] = waterfill(W[idx])
+                rate_cache[sig] = cached
+            rates = cached
+        t_act = heap[0][0] if heap else np.inf
+        if has_active:
+            r = rates[active] * link_bw
+            with np.errstate(divide="ignore"):
+                dts = np.where(r > 0, remaining[active] / np.maximum(r, 1e-300),
+                               np.inf)
+            dt_fin = float(dts.min()) if len(dts) else np.inf
+            if not np.isfinite(dt_fin) and not np.isfinite(t_act):
+                raise RuntimeError(
+                    "netsim deadlock: active flows with zero rate and no "
+                    "pending activations")
+            t_next = min(t + dt_fin, t_act)
+        else:
+            if not heap:
+                break
+            t_next = t_act
+        if has_active and t_next > t:
+            if record_timeline:
+                agg = np.bincount(slot_group[active],
+                                  weights=rates[active] * link_bw,
+                                  minlength=len(group_names))
+                seg = {g: float(agg[k]) for g, k in group_code.items()
+                       if agg[k] > 0}
+                if timeline and timeline[-1][2] == seg and \
+                        abs(timeline[-1][1] - t) <= 1e-15 * max(1.0, t):
+                    timeline[-1] = (timeline[-1][0], t_next, seg)
+                else:
+                    timeline.append((t, t_next, seg))
+            adv = rates[active] * link_bw * (t_next - t)
+            delivered[active] += adv
+            remaining[active] -= adv
+        t = t_next
+        n_events += 1
+        # completions (snap residual bytes so conservation is exact)
+        if has_active:
+            tol = 1e-9 * np.maximum(fbytes[active], 1.0)
+            fin_mask = np.zeros(n_flows, dtype=bool)
+            fin_mask[np.nonzero(active)[0]] = remaining[active] <= tol
+            fin = np.nonzero(fin_mask)[0]
+            if len(fin):
+                delivered[fin] += remaining[fin]
+                remaining[fin] = 0.0
+                active[fin] = False
+                for i in np.unique(slot_phase[fin]):
+                    done = int((slot_phase[fin] == i).sum())
+                    flows_left[i] -= done
+                    if flows_left[i] == 0:
+                        _phase_repeat_done(int(i), t)
+        while heap and heap[0][0] <= t + 1e-18:
+            _, i = heapq.heappop(heap)
+            _activate(i, t)
+
+    spans = [(ph.name, float(started[i]) if not np.isnan(started[i]) else 0.0,
+              float(ended[i]) if not np.isnan(ended[i]) else t)
+             for i, ph in enumerate(phases)]
+    group_end: dict[str, float] = {}
+    for i, g in enumerate(groups):
+        e = float(ended[i]) if not np.isnan(ended[i]) else t
+        group_end[g] = max(group_end.get(g, 0.0), e)
+    return SimReport(
+        time=t,
+        phase_spans=spans,
+        flow_bytes=expected,
+        delivered=delivered,
+        timeline=timeline,
+        group_end=group_end,
+        n_events=n_events,
+        n_waterfills=n_waterfills,
+        n_unroutable=n_unroutable,
+    )

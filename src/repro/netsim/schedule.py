@@ -1,0 +1,497 @@
+"""Collective schedules: phase-DAGs + lowerings of the §V-A2 algorithms.
+
+:mod:`repro.core.collectives` implements the paper's allreduce algorithms
+as JAX programs and :mod:`repro.core.commodel` models them as α-β closed
+forms.  This module is the third representation — the one the time-domain
+engine (:mod:`repro.netsim.engine`) consumes: a :class:`CommSchedule` is
+a DAG of :class:`Phase` records, each a set of concrete ``(src, dst,
+bytes)`` flows with dependencies, a repeat count (the pipelined steps of
+a ring — same neighbor flows every step, so the fluid engine simulates
+one step per distinct rate state) and a group label (for per-job
+timelines).
+
+Lowerings map an algorithm onto a *concrete* fabric — healthy or failed:
+
+* ``ring`` — pipelined unidirectional ring over a Hamiltonian order of
+  the active endpoints (boustrophedon on the virtual grid when healthy,
+  id order otherwise); one phase, repeat ``2(p-1)``.
+* ``bidir`` — two opposite rings on half the data each, concurrent.
+* ``hamiltonian`` — two *edge-disjoint* Hamiltonian cycles of the
+  virtual torus (:mod:`repro.core.hamiltonian`), each bidirectional:
+  four concurrent rings on a quarter of the data, all four per-plane
+  ports busy; falls back to ``bidir`` when the dual construction's
+  conditions fail (failed fabric, unsupported dims).
+* ``torus`` — the §V-A2c 2D algorithm: row reduce-scatter → column
+  bidirectional allreduce → row allgather, two transposed instances on
+  half the data each (the 4-NIC variant).
+* ``hierarchical`` — bidirectional ring allreduce along rows, then along
+  columns (the 2-axis ``ring``/``bidir`` dispatch of
+  ``core.collectives.allreduce``).
+
+All payloads are the **full** allreduce size S; lowering divides by the
+``planes`` count (the fabric graph models one plane, all planes run the
+same schedule independently), which is what makes the simulated times
+line up with the α-β models' ``β = 1/INJECTION_BW`` normalization.
+
+The ``coll=`` scenario leg (:class:`CollectiveSpec`,
+:func:`parse_collective`) addresses a lowering + payload in one token —
+``coll=hamiltonian:s1GiB`` — registered per family like traffic and
+topology grammars, canonical and round-tripping through
+``registry.parse_scenario``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable
+
+import numpy as np
+
+from repro.core import commodel as C
+from repro.core import flowsim as F
+from repro.core import hamiltonian as ham
+
+PLANES = C.PLANES  # the fabric graph is one of these planes
+DEFAULT_SIZE = 100 * 2 ** 20  # canonical forms omit the default payload
+
+
+# ---------------------------------------------------------------------------
+# Phase DAG
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One barrier-delimited step group of a collective schedule.
+
+    ``flows`` are concrete ``(src, dst, bytes)`` transfers that all run
+    concurrently; the phase completes when every flow has moved its
+    bytes.  ``repeat`` runs the same flow set that many times back to
+    back (each repeat re-pays the schedule's α) — the pipelined steps of
+    a ring, whose (src, dst) pairs are identical every step.  ``deps``
+    are indices of phases that must complete first; ``group`` labels the
+    job/instance for per-group timelines.
+    """
+
+    name: str
+    flows: tuple[tuple[int, int, float], ...]
+    deps: tuple[int, ...] = ()
+    repeat: int = 1
+    group: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSchedule:
+    """A named DAG of phases plus the per-step activation latency α."""
+
+    name: str
+    phases: tuple[Phase, ...]
+    alpha: float = 0.0  # seconds charged at each phase repeat activation
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(b * max(1, ph.repeat)
+                   for ph in self.phases for (_, _, b) in ph.flows)
+
+    @property
+    def n_flows(self) -> int:
+        return sum(len(ph.flows) for ph in self.phases)
+
+
+def merge_schedules(schedules, name: str = "merged",
+                    alpha: float | None = None) -> CommSchedule:
+    """Concatenate independent schedules (dep indices re-based) into one —
+    how concurrent per-job collectives share the fabric in a cluster
+    probe.  ``alpha`` defaults to the max of the parts'."""
+    phases: list[Phase] = []
+    alphas = [s.alpha for s in schedules] or [0.0]
+    for s in schedules:
+        off = len(phases)
+        for ph in s.phases:
+            phases.append(dataclasses.replace(
+                ph, deps=tuple(d + off for d in ph.deps)))
+    return CommSchedule(
+        name=name, phases=tuple(phases),
+        alpha=max(alphas) if alpha is None else alpha)
+
+
+# ---------------------------------------------------------------------------
+# Grid / ring helpers over a (possibly degraded) fabric
+# ---------------------------------------------------------------------------
+
+
+def _virtual_grid(net: F.Network):
+    """(rows, cols, gid) of the grid a lowering folds over: the builder
+    grid when every endpoint is alive, else the squarest factorization of
+    the surviving endpoints (gid indexes into the active list)."""
+    act = net.active_endpoints()
+    geo = F._grid_geometry(net)
+    if geo is not None and len(act) == net.n_endpoints:
+        return geo
+    r, c = F._squarest_grid(len(act))
+    return r, c, (lambda rr, cc: int(act[rr * c + cc]))
+
+
+def ring_order(net: F.Network) -> list[int]:
+    """A cyclic order of the active endpoints: a Hamiltonian cycle of the
+    virtual grid when one exists (neighbor transfers only), else the grid
+    rows in boustrophedon order (still mostly-neighbor on mesh fabrics),
+    else plain id order."""
+    act = net.active_endpoints().tolist()
+    if len(act) < 2:
+        return act
+    r, c, gid = _virtual_grid(net)
+    if r * c == len(act):
+        try:
+            return [gid(i, j) for i, j in ham.single_cycle(r, c)]
+        except ValueError:
+            order = []
+            for i in range(r):
+                cols = range(c) if i % 2 == 0 else range(c - 1, -1, -1)
+                order.extend(gid(i, j) for j in cols)
+            return order
+    return act
+
+
+def _ring_phase(order, step_bytes: float, repeat: int, name: str,
+                deps=(), reverse: bool = False, group: str = "") -> Phase:
+    p = len(order)
+    seq = list(reversed(order)) if reverse else list(order)
+    flows = tuple((seq[k], seq[(k + 1) % p], step_bytes) for k in range(p))
+    return Phase(name=name, flows=flows, deps=tuple(deps),
+                 repeat=max(1, repeat), group=group)
+
+
+# ---------------------------------------------------------------------------
+# Lowerings (one per registered collective family)
+# ---------------------------------------------------------------------------
+
+
+def lower_ring(net: F.Network, size_pl: float,
+               group: str = "") -> tuple[Phase, ...]:
+    """Pipelined unidirectional ring: 2(p-1) steps of S/p (§V-A2b)."""
+    order = ring_order(net)
+    p = len(order)
+    if p < 2:
+        return ()
+    return (_ring_phase(order, size_pl / p, 2 * (p - 1), "ring",
+                        group=group),)
+
+
+def lower_bidir(net: F.Network, size_pl: float,
+                group: str = "") -> tuple[Phase, ...]:
+    """Bidirectional ring: halves travel in opposite directions (§V-A2b),
+    two concurrent phases on the two link directions."""
+    order = ring_order(net)
+    p = len(order)
+    if p < 2:
+        return ()
+    step = size_pl / (2 * p)
+    return (
+        _ring_phase(order, step, 2 * (p - 1), "bidir/fwd", group=group),
+        _ring_phase(order, step, 2 * (p - 1), "bidir/rev", reverse=True,
+                    group=group),
+    )
+
+
+def lower_hamiltonian(net: F.Network, size_pl: float,
+                      group: str = "") -> tuple[Phase, ...]:
+    """Dual edge-disjoint Hamiltonian cycles, each bidirectional: four
+    concurrent quarter-size rings driving all four per-plane ports
+    (§V-A2b, App. D).  Falls back to ``bidir`` when the construction's
+    conditions fail (degraded fabric, unsupported grid dims)."""
+    act = net.active_endpoints()
+    if len(act) < 2:
+        return ()
+    geo = F._grid_geometry(net)
+    if geo is None or len(act) != net.n_endpoints:
+        return lower_bidir(net, size_pl, group)
+    r, c, gid = geo
+    try:
+        red, green = ham.dual_cycles(r, c)
+    except ValueError:
+        return lower_bidir(net, size_pl, group)
+    p = r * c
+    step = size_pl / (4 * p)
+    phases = []
+    for cyc, tag in ((red, "red"), (green, "green")):
+        order = [gid(i, j) for i, j in cyc]
+        phases.append(_ring_phase(order, step, 2 * (p - 1),
+                                  f"ham/{tag}/fwd", group=group))
+        phases.append(_ring_phase(order, step, 2 * (p - 1),
+                                  f"ham/{tag}/rev", reverse=True,
+                                  group=group))
+    return tuple(phases)
+
+
+def _torus_instance(rows_of, n_rows: int, n_cols: int, data: float,
+                    base: int, tag: str, group: str) -> tuple[Phase, ...]:
+    """One torus-algorithm instance: row reduce-scatter → column bidir
+    allreduce → row allgather.  ``rows_of(i, j)`` maps instance-local grid
+    coordinates to endpoint ids (the transposed instance swaps axes);
+    ``base`` is the phase-index offset of this instance in the schedule."""
+    r, c = n_rows, n_cols
+    row_flows = tuple(
+        (rows_of(i, j), rows_of(i, (j + 1) % c), data / c)
+        for i in range(r) for j in range(c)
+    )
+    col_step = (data / c) / (2 * r)
+    col_fwd = tuple(
+        (rows_of(i, j), rows_of((i + 1) % r, j), col_step)
+        for i in range(r) for j in range(c)
+    )
+    col_rev = tuple(
+        (rows_of((i + 1) % r, j), rows_of(i, j), col_step)
+        for i in range(r) for j in range(c)
+    )
+    phases: list[Phase] = []
+    if c > 1:
+        phases.append(Phase(name=f"torus/{tag}/rs", flows=row_flows,
+                            repeat=c - 1, group=group))
+    rs_dep = (base,) if c > 1 else ()
+    if r > 1:
+        phases.append(Phase(name=f"torus/{tag}/col-fwd", flows=col_fwd,
+                            deps=rs_dep, repeat=2 * (r - 1), group=group))
+        phases.append(Phase(name=f"torus/{tag}/col-rev", flows=col_rev,
+                            deps=rs_dep, repeat=2 * (r - 1), group=group))
+    if c > 1:
+        ag_deps = tuple(base + k for k in range(1, len(phases)))
+        phases.append(Phase(name=f"torus/{tag}/ag", flows=row_flows,
+                            deps=ag_deps or rs_dep, repeat=c - 1,
+                            group=group))
+    return tuple(phases)
+
+
+def lower_torus(net: F.Network, size_pl: float,
+                group: str = "") -> tuple[Phase, ...]:
+    """2D-torus allreduce (§V-A2c): row reduce-scatter → column
+    bidirectional allreduce → row allgather, with two transposed
+    instances on half the data each (the 4-NIC variant of
+    ``core.collectives.torus_allreduce``)."""
+    act = net.active_endpoints()
+    if len(act) < 2:
+        return ()
+    r, c, gid = _virtual_grid(net)
+    if r < 2 or c < 2:
+        return lower_bidir(net, size_pl, group)
+    half = size_pl / 2
+    inst_a = _torus_instance(lambda i, j: gid(i, j), r, c, half, 0, "a",
+                             group)
+    inst_b = _torus_instance(lambda i, j: gid(j, i), c, r, half,
+                             len(inst_a), "b", group)
+    return inst_a + inst_b
+
+
+def lower_hierarchical(net: F.Network, size_pl: float,
+                       group: str = "") -> tuple[Phase, ...]:
+    """Hierarchical 2-axis allreduce: bidirectional rings along every
+    grid row, then along every column (the 2-axis ``bidir`` dispatch of
+    ``core.collectives.allreduce`` — full payload in both stages)."""
+    act = net.active_endpoints()
+    if len(act) < 2:
+        return ()
+    r, c, gid = _virtual_grid(net)
+    if r < 2 or c < 2:
+        return lower_bidir(net, size_pl, group)
+    row_step = size_pl / (2 * c)
+    col_step = size_pl / (2 * r)
+    rows_fwd = tuple((gid(i, j), gid(i, (j + 1) % c), row_step)
+                     for i in range(r) for j in range(c))
+    rows_rev = tuple((gid(i, (j + 1) % c), gid(i, j), row_step)
+                     for i in range(r) for j in range(c))
+    cols_fwd = tuple((gid(i, j), gid((i + 1) % r, j), col_step)
+                     for i in range(r) for j in range(c))
+    cols_rev = tuple((gid((i + 1) % r, j), gid(i, j), col_step)
+                     for i in range(r) for j in range(c))
+    return (
+        Phase(name="hier/rows-fwd", flows=rows_fwd, repeat=2 * (c - 1),
+              group=group),
+        Phase(name="hier/rows-rev", flows=rows_rev, repeat=2 * (c - 1),
+              group=group),
+        Phase(name="hier/cols-fwd", flows=cols_fwd, deps=(0, 1),
+              repeat=2 * (r - 1), group=group),
+        Phase(name="hier/cols-rev", flows=cols_rev, deps=(0, 1),
+              repeat=2 * (r - 1), group=group),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Collective family registry (mirrors traffic.register_traffic)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveFamily:
+    """One collective-leg family: a name, a lowering, an α-β model."""
+
+    name: str
+    lower: Callable[..., tuple[Phase, ...]]  # lower(net, size_pl, group="")
+    model: Callable[..., float] | None = None  # model(p, size) -> seconds
+    doc: str = ""
+
+
+COLLECTIVE_FAMILIES: dict[str, CollectiveFamily] = {}
+
+
+def register_collective(family: CollectiveFamily) -> None:
+    """Register a collective family (last registration wins, like
+    ``registry.register_family`` / ``traffic.register_traffic``)."""
+    COLLECTIVE_FAMILIES[family.name] = family
+
+
+def collective_grammar() -> str:
+    """One-line grammar of the ``coll=`` scenario leg."""
+    names = "|".join(COLLECTIVE_FAMILIES)
+    return (f"coll=<algo>[:s<size>] with algo in [{names}] and size "
+            "an integer byte count with optional KiB|MiB|GiB suffix "
+            "(default "
+            f"{_fmt_size(DEFAULT_SIZE)})")
+
+
+# ---------------------------------------------------------------------------
+# CollectiveSpec: the coll= leg of the scenario grammar
+# ---------------------------------------------------------------------------
+
+_UNITS = (("GiB", 2 ** 30), ("MiB", 2 ** 20), ("KiB", 2 ** 10), ("B", 1))
+
+
+def _fmt_size(n: int) -> str:
+    for unit, mult in _UNITS:
+        if n % mult == 0 and n >= mult:
+            return f"{n // mult}{unit}"
+    return f"{n}B"
+
+
+_SIZE_RE = re.compile(r"s(\d+)(GiB|MiB|KiB|B)?")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSpec:
+    """A parsed ``coll=`` leg: registered algorithm + payload bytes.
+
+    The canonical string is ``coll=<algo>[:s<size>]`` with the size in
+    the largest binary unit that divides it and the default payload
+    omitted, so ``parse_collective(str(c)) == c``.
+    """
+
+    algo: str
+    size: int = DEFAULT_SIZE  # full allreduce payload, bytes
+
+    def __str__(self) -> str:
+        tail = f":s{_fmt_size(self.size)}" if self.size != DEFAULT_SIZE else ""
+        return f"coll={self.algo}{tail}"
+
+    @property
+    def family(self) -> CollectiveFamily:
+        return COLLECTIVE_FAMILIES[self.algo]
+
+    def schedule(self, net: F.Network, planes: int = PLANES,
+                 alpha: float = C.ALPHA, group: str = "") -> CommSchedule:
+        """Lower onto a concrete fabric: one plane's share of the payload
+        (all ``planes`` run the same schedule independently)."""
+        phases = self.family.lower(net, self.size / planes, group=group)
+        return CommSchedule(name=str(self), phases=phases, alpha=alpha)
+
+    def model_time(self, p: int) -> float | None:
+        """α-β predicted completion (seconds) for ``p`` endpoints, or
+        ``None`` for families without a closed form."""
+        if self.family.model is None:
+            return None
+        return self.family.model(p, float(self.size))
+
+
+def parse_collective(token) -> CollectiveSpec:
+    """Parse a collective leg (with or without the ``coll=`` prefix) into
+    its canonical :class:`CollectiveSpec`; raises ``ValueError`` listing
+    the registered grammar on malformed or unknown tokens."""
+    if isinstance(token, CollectiveSpec):
+        return token
+    if not isinstance(token, str):
+        raise ValueError(
+            f"collective spec must be a string, got {type(token)}; "
+            f"grammar: {collective_grammar()}")
+    body = token.strip()
+    if body.startswith("coll="):
+        body = body[len("coll="):]
+    parts = body.split(":")
+    algo = parts[0]
+    if algo not in COLLECTIVE_FAMILIES:
+        raise ValueError(
+            f"unknown collective algorithm {algo!r}; grammar: "
+            f"{collective_grammar()}")
+    size = DEFAULT_SIZE
+    seen_size = False
+    for part in parts[1:]:
+        m = _SIZE_RE.fullmatch(part)
+        if m is None:
+            raise ValueError(
+                f"bad collective param {part!r}; grammar: "
+                f"{collective_grammar()}")
+        if seen_size:
+            raise ValueError(f"duplicate size param in {token!r}")
+        seen_size = True
+        size = int(m[1]) * dict(_UNITS)[m[2] or "B"]
+        if size <= 0:
+            raise ValueError(f"collective size must be positive: {part!r}")
+    return CollectiveSpec(algo=algo, size=size)
+
+
+def lower(spec, net: F.Network, planes: int = PLANES,
+          alpha: float = C.ALPHA, group: str = "") -> CommSchedule:
+    """One-shot: parse a collective token and lower it onto ``net``."""
+    return parse_collective(spec).schedule(net, planes, alpha, group)
+
+
+def schedule_for_endpoints(spec, net: F.Network, endpoints,
+                           planes: int = PLANES, alpha: float = C.ALPHA,
+                           group: str = "") -> CommSchedule:
+    """Lower a collective over a *subset* of endpoints (a placed job's
+    boards): ring/bidir run over the sorted endpoint list; every other
+    family falls back to ``bidir`` (a sub-job has no private grid to fold
+    a 2D algorithm over)."""
+    cs = parse_collective(spec)
+    order = sorted(int(e) for e in np.asarray(endpoints).ravel())
+    p = len(order)
+    if p < 2:
+        return CommSchedule(name=f"{cs}@{group or 'job'}", phases=(),
+                            alpha=alpha)
+    size_pl = cs.size / planes
+    if cs.algo == "ring":
+        phases = (_ring_phase(order, size_pl / p, 2 * (p - 1), "ring",
+                              group=group),)
+    else:
+        step = size_pl / (2 * p)
+        phases = (
+            _ring_phase(order, step, 2 * (p - 1), "bidir/fwd", group=group),
+            _ring_phase(order, step, 2 * (p - 1), "bidir/rev", reverse=True,
+                        group=group),
+        )
+    return CommSchedule(name=f"{cs}@{group or 'job'}", phases=phases,
+                        alpha=alpha)
+
+
+# ---------------------------------------------------------------------------
+# The registered families (paper §V-A2; models from core.commodel)
+# ---------------------------------------------------------------------------
+
+register_collective(CollectiveFamily(
+    name="ring", lower=lower_ring, model=C.t_ring,
+    doc="pipelined unidirectional ring allreduce, 2(p-1) steps of S/p",
+))
+register_collective(CollectiveFamily(
+    name="bidir", lower=lower_bidir, model=C.t_bidir_ring,
+    doc="bidirectional ring: opposite half-size rings on both directions",
+))
+register_collective(CollectiveFamily(
+    name="hamiltonian", lower=lower_hamiltonian, model=C.t_dual_hamiltonian,
+    doc="dual edge-disjoint Hamiltonian cycles, bidirectional (4 ports)",
+))
+register_collective(CollectiveFamily(
+    name="torus", lower=lower_torus, model=C.t_torus2d,
+    doc="2D torus: row reduce-scatter, column allreduce, row allgather",
+))
+register_collective(CollectiveFamily(
+    name="hierarchical", lower=lower_hierarchical,
+    doc="bidirectional rings along rows then columns (2-axis dispatch)",
+))

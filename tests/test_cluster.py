@@ -74,6 +74,31 @@ def test_trace_jsonl_roundtrip(tmp_path):
     assert load_trace(str(path)) == trace
 
 
+def test_trace_jobs_carry_scenario_strings(tmp_path):
+    """Trace files speak the scenario grammar: jobs generated against a
+    registry spec carry its canonical scenario string through the JSONL
+    round-trip; paper profile names (no registry spec) leave it empty,
+    and pre-scenario trace lines still load."""
+    from repro.core import registry as R
+
+    trace = poisson_trace(12, 8, 8, seed=1, topology="hx2-8x8")
+    assert all(j.scenario == "hx2-8x8/alltoall" for j in trace)
+    for j in trace:  # every carried string is canonical
+        assert str(R.parse_scenario(j.scenario)) == j.scenario
+    path = tmp_path / "trace.jsonl"
+    save_trace(trace, str(path))
+    assert load_trace(str(path)) == trace
+    # paper-name topologies have no registry spec to address
+    assert all(j.scenario == ""
+               for j in poisson_trace(3, 8, 8, seed=0, topology="Hx2Mesh"))
+    # a legacy line without the scenario key loads with the default
+    with open(path, "a") as fh:
+        fh.write('{"jid": 99, "arrival": 1.0, "u": 1, "v": 1, '
+                 '"duration": 5.0, "workload": "DLRM", "iterations": 3}\n')
+    legacy = [j for j in load_trace(str(path)) if j.jid == 99]
+    assert legacy and legacy[0].scenario == ""
+
+
 def test_trace_determinism_and_shape_fit():
     a = poisson_trace(60, 16, 16, seed=5)
     b = poisson_trace(60, 16, 16, seed=5)

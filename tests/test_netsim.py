@@ -1,0 +1,340 @@
+"""netsim invariants: the time-domain engine against its three anchors.
+
+* **byte conservation** — every flow delivers exactly its bytes x repeats
+  on every fabric, healthy or failed;
+* **termination** — every registered topology x collective combination
+  lowers and completes (finite time, no deadlock);
+* **steady-state agreement** — a single long-lived demand reproduces the
+  flow-level engine's max-min fraction to ~1e-9 (the two engines share
+  routing but compute rates independently);
+* **α-β agreement** — an empty-fabric ring allreduce lands within 5% of
+  the ``commodel`` closed form (the paper's §V-A2 model).
+
+Plus the ``coll=`` scenario-grammar leg: round-trip, normalization,
+malformed rejection, matching, and the cluster probe timelines.
+"""
+
+import numpy as np
+import pytest
+
+from repro import netsim as NS
+from repro.core import commodel as C
+from repro.core import flowsim as F
+from repro.core import registry as R
+from repro.core import traffic as TR
+
+TOPOLOGY_SPECS = ["hx2-4x4", "hx4x2-4x4", "hyperx-8x8", "ft64", "ft64-t50",
+                  "df-2x2x9-a4", "torus-8x8"]
+ALGOS = sorted(NS.COLLECTIVE_FAMILIES)
+
+
+def _sim(spec: str, coll: str, failures: str = "", size: str = "s64MiB"):
+    token = f"{spec}/coll={coll}:{size}" + (f"/{failures}" if failures else "")
+    sc = R.parse_scenario(token)
+    net = sc.network()
+    return NS.simulate_schedule(net, sc.schedule(net), link_bw=C.LINK_BW)
+
+
+# ---------------------------------------------------------------------------
+# Engine invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", TOPOLOGY_SPECS)
+@pytest.mark.parametrize("algo", ALGOS)
+def test_terminates_and_conserves_bytes(spec, algo):
+    """Every registered topology x collective lowers, completes in finite
+    time, and delivers exactly bytes x repeats per flow."""
+    report = _sim(spec, algo)
+    assert np.isfinite(report.time) and report.time > 0
+    assert report.conservation_error() <= 1e-9
+    np.testing.assert_allclose(report.delivered, report.flow_bytes,
+                               rtol=1e-9)
+
+
+@pytest.mark.parametrize("failures", ["fail=boards:2:seed3",
+                                      "fail=nodes:5:seed1"])
+def test_failed_fabric_ring_completes(failures):
+    """Lowerings onto degraded fabrics still terminate and conserve; the
+    heavily-degraded run is no faster than lightly-degraded contention
+    would allow (sanity, not a tight bound)."""
+    report = _sim("hx2-4x4", "ring", failures)
+    assert np.isfinite(report.time) and report.time > 0
+    assert report.conservation_error() <= 1e-9
+
+
+def test_waterfill_matches_flowsim_single_bottleneck():
+    """Unweighted waterfill on uniform flows: the first fill level is
+    1/max_link_load by construction."""
+    net = F.build_hxmesh(2, 2, 2, 2)
+    n = net.n_endpoints
+    pairs = [(s, t) for s in range(n) for t in range(n) if s != t]
+    W = NS.flow_footprints(net, pairs)
+    rates = NS.waterfill(W)
+    T = np.full((n, n), 1.0)
+    np.fill_diagonal(T, 0.0)
+    mx = F.max_link_load(net, T)
+    assert rates.min() == pytest.approx(1.0 / mx, rel=1e-12)
+
+
+@pytest.mark.parametrize("spec", ["hx2-4x4", "torus-8x8", "ft64"])
+@pytest.mark.parametrize("traffic", ["alltoall", "bisection",
+                                     "skewed-alltoall:h2:seed7",
+                                     "ring-allreduce"])
+def test_steady_state_agreement(spec, traffic):
+    """A long-lived demand's netsim max-min fraction matches the
+    steady-state engine to ~1e-9."""
+    topo = R.parse(spec)
+    net = topo.network()
+    dem = TR.parse_traffic(traffic).demand(net)
+    lpe = topo.links_per_endpoint
+    assert NS.steady_state_fraction(net, dem, lpe) == pytest.approx(
+        F.achievable_fraction(net, dem, lpe), abs=1e-9)
+
+
+def test_footprint_local_equals_batched():
+    """The bidirectional-ball footprint path is exactly the batched-BFS
+    path (same DAG, same per-link shares)."""
+    net = F.build_hxmesh(2, 2, 4, 4)
+    rng = np.random.default_rng(7)
+    pairs = [(int(a), int(b))
+             for a, b in rng.integers(0, net.n_endpoints, (60, 2)) if a != b]
+    local, batched = NS.FootprintCache(net), NS.FootprintCache(net)
+    batched._compute(pairs)
+    for s, t in pairs:
+        got = local._local(s, t)
+        assert got is not None
+        want = batched._cache[(s, t)]
+        o1, o2 = np.argsort(got[0]), np.argsort(want[0])
+        np.testing.assert_array_equal(got[0][o1], want[0][o2])
+        np.testing.assert_allclose(got[1][o1], want[1][o2], atol=1e-14)
+
+
+def test_footprint_outflow_is_one():
+    """Each flow's footprint pushes exactly unit rate out of its source
+    (per-link shares x bundle multiplicities sum to 1)."""
+    net = F.build_hxmesh(2, 2, 4, 4)
+    U, V, M = net.directed_edges()
+    cache = NS.FootprintCache(net)
+    for s, t in [(0, 1), (0, 37), (5, 60), (63, 0)]:
+        idx, w = cache.get(s, t)
+        out = sum(w[k] * M[e] for k, e in enumerate(idx) if U[e] == s)
+        assert out == pytest.approx(1.0, rel=1e-12)
+
+
+@pytest.mark.parametrize("algo,model", [
+    ("ring", C.t_ring), ("bidir", C.t_bidir_ring),
+    ("hamiltonian", C.t_dual_hamiltonian),
+])
+def test_empty_fabric_matches_alpha_beta(algo, model):
+    """Healthy hx2-4x4: simulated completion within 5% of the §V-A2 α-β
+    closed form (the acceptance bar; the residual is the (p-1)/p
+    finite-size factor the closed forms round away)."""
+    report = _sim("hx2-4x4", algo, size="s256MiB")
+    p = 64
+    predicted = model(p, 256 * 2 ** 20)
+    assert report.time == pytest.approx(predicted, rel=0.05)
+
+
+def test_dependencies_sequence_phases():
+    """A two-phase chain runs strictly after its dependency (spans do not
+    overlap), and independent phases do overlap."""
+    net = F.build_hxmesh(2, 2, 4, 4)
+    sched = R.parse_scenario("hx2-4x4/coll=hierarchical:s64MiB").schedule(net)
+    report = NS.simulate_schedule(net, sched, link_bw=C.LINK_BW)
+    spans = {name: (s, e) for name, s, e in report.phase_spans}
+    assert spans["hier/cols-fwd"][0] >= spans["hier/rows-fwd"][1]
+    # the two row phases run concurrently
+    a, b = spans["hier/rows-fwd"], spans["hier/rows-rev"]
+    assert a[0] < b[1] and b[0] < a[1]
+
+
+def test_contention_halves_shared_link_rate():
+    """Two flows forced onto one link get half rate each; completion time
+    doubles vs a lone flow — the engine's raison d'être."""
+    net = F.build_hxmesh(2, 2, 1, 1)  # a single 2x2 board
+    one = NS.CommSchedule("one", (NS.Phase("p", ((0, 1, 100.0),)),))
+    two = NS.CommSchedule("two", (NS.Phase("p", ((0, 1, 100.0),
+                                                 (0, 1, 100.0),)),))
+    t1 = NS.simulate_schedule(net, one).time
+    t2 = NS.simulate_schedule(net, two).time
+    assert t2 == pytest.approx(2 * t1, rel=1e-9)
+
+
+def test_alpha_charged_per_repeat():
+    """Phase latency α is paid once per repeat (the per-step latency of
+    the α-β models)."""
+    net = F.build_hxmesh(2, 2, 1, 1)
+    ph = NS.Phase("p", ((0, 1, 100.0),), repeat=5)
+    t0 = NS.simulate_schedule(net, NS.CommSchedule("s", (ph,), alpha=0.0))
+    t1 = NS.simulate_schedule(net, NS.CommSchedule("s", (ph,), alpha=2.0))
+    assert t1.time - t0.time == pytest.approx(10.0, rel=1e-9)
+
+
+def test_fast_forward_equals_step_by_step():
+    """The lockstep-repeat fast forward is exact: same completion time as
+    a schedule whose repeats are unrolled into dependent phases."""
+    net = F.build_hxmesh(2, 2, 2, 2)
+    order = NS.ring_order(net)
+    p = len(order)
+    flows = tuple((order[k], order[(k + 1) % p], 64.0) for k in range(p))
+    rolled = NS.CommSchedule(
+        "rolled", (NS.Phase("r", flows, repeat=6),), alpha=0.5)
+    unrolled = NS.CommSchedule(
+        "unrolled",
+        tuple(NS.Phase(f"u{i}", flows, deps=(i - 1,) if i else ())
+              for i in range(6)),
+        alpha=0.5)
+    a = NS.simulate_schedule(net, rolled)
+    b = NS.simulate_schedule(net, unrolled)
+    assert a.time == pytest.approx(b.time, rel=1e-9)
+    assert a.n_events < b.n_events  # the fast path actually engaged
+
+
+def test_timeline_records_group_rates():
+    net = F.build_hxmesh(2, 2, 4, 4)
+    half = net.n_endpoints // 2
+    parts = [
+        NS.schedule_for_endpoints("ring:s1MiB", net,
+                                  list(range(half)), group="a"),
+        NS.schedule_for_endpoints("ring:s1MiB", net,
+                                  list(range(half, 2 * half)), group="b"),
+    ]
+    report = NS.simulate_schedule(net, NS.merge_schedules(parts))
+    assert report.timeline
+    seen = {g for _, _, rates in report.timeline for g in rates}
+    assert seen == {"a", "b"}
+    assert report.group_mean_rate("a") > 0
+
+
+# ---------------------------------------------------------------------------
+# The coll= scenario-grammar leg
+# ---------------------------------------------------------------------------
+
+
+COLL_TOKENS = ["coll=ring", "coll=bidir:s1GiB", "coll=hamiltonian:s1GiB",
+               "coll=torus:s512KiB", "coll=hierarchical:s12345B"]
+
+
+@pytest.mark.parametrize("topo", TOPOLOGY_SPECS)
+@pytest.mark.parametrize("coll", COLL_TOKENS)
+def test_collective_scenarios_round_trip(topo, coll):
+    s = R.parse_scenario(f"{topo}/{coll}")
+    assert R.parse_scenario(str(s)) == s
+    # canonical up to topology normalization (df-2x2x9-a4 -> df-2x2x9)
+    assert str(s) == f"{R.parse(topo).spec}/{coll}"
+
+
+def test_issue_headline_token_round_trips():
+    tok = "hx2-8x8/coll=hamiltonian:s1GiB/fail=boards:1%:seed7"
+    s = R.parse_scenario(tok)
+    assert str(s) == tok
+    assert R.parse_scenario(str(s)) == s
+    assert s.collective == NS.CollectiveSpec("hamiltonian", 2 ** 30)
+
+
+def test_collective_leg_normalization():
+    # sizes canonicalize to the largest binary unit; default size drops
+    assert str(R.parse_scenario("hx2-4x4/coll=ring:s1024MiB")) == \
+        "hx2-4x4/coll=ring:s1GiB"
+    assert str(R.parse_scenario("hx2-4x4/coll=ring:s104857600B")) == \
+        "hx2-4x4/coll=ring"
+    # default traffic is omitted when a collective leg is present ...
+    assert str(R.parse_scenario("hx2-4x4/alltoall/coll=ring:s1GiB")) == \
+        "hx2-4x4/coll=ring:s1GiB"
+    # ... but an explicit non-default traffic leg survives
+    assert str(R.parse_scenario("hx2-4x4/bisection/coll=ring:s1GiB")) == \
+        "hx2-4x4/bisection/coll=ring:s1GiB"
+
+
+@pytest.mark.parametrize("token", [
+    "hx2-4x4/coll=nope",                 # unknown algorithm
+    "hx2-4x4/coll=ring:sx",              # malformed size
+    "hx2-4x4/coll=ring:s1TiB",           # unknown unit
+    "hx2-4x4/coll=ring:s1GiB:s2GiB",     # duplicate size
+    "hx2-4x4/coll=ring/coll=bidir",      # duplicate leg
+    "hx2-4x4/fail=node:1/coll=ring",     # collective after failures
+    "hx2-4x4/coll=ring/alltoall",        # traffic after collective
+])
+def test_malformed_collective_legs_rejected(token):
+    with pytest.raises(ValueError):
+        R.parse_scenario(token)
+
+
+def test_collective_errors_list_grammar():
+    with pytest.raises(ValueError, match="coll=<algo>"):
+        R.parse_scenario("hx2-4x4/coll=nope")
+    with pytest.raises(ValueError, match="hamiltonian"):
+        NS.parse_collective("coll=wat")
+
+
+def test_match_scenario_pins_collective_leg():
+    full = "hx2-8x8/coll=ring:s1GiB/fail=boards:2:seed3"
+    assert R.match_scenario("hx2-8x8", full)
+    assert R.match_scenario("hx2-8x8/coll=ring:s1GiB", full)
+    assert R.match_scenario("hx2-8x8/fail=boards:2:seed3", full)
+    assert not R.match_scenario("hx2-8x8/coll=ring", full)  # size pinned
+    assert not R.match_scenario("hx2-8x8/coll=bidir:s1GiB", full)
+    assert not R.match_scenario("hx2-8x8/coll=ring:s1GiB",
+                                "hx2-8x8/alltoall")  # no collective leg
+
+
+def test_simulated_time_cached_and_deterministic():
+    tok = "hx2-4x4/coll=ring:s64MiB"
+    t1 = R.simulated_time(tok)
+    assert R.simulated_time(tok) == t1
+    assert R.parse_scenario(tok).completion_time() == t1
+    with pytest.raises(ValueError, match="no collective leg"):
+        R.simulated_time("hx2-4x4/alltoall")
+    with pytest.raises(ValueError, match="no collective leg"):
+        R.parse_scenario("hx2-4x4").schedule()
+
+
+def test_fraction_cache_key_strips_collective(tmp_path, monkeypatch):
+    """A coll= leg does not change the steady-state fraction, so both
+    tokens share one cache entry."""
+    monkeypatch.setattr(R, "MEASURED_CACHE",
+                        str(tmp_path / "profile_cache.json"))
+    monkeypatch.setattr(R, "_measured_mem", {})
+    a = R.measured_fraction("hx2-4x4/alltoall")
+    b = R.measured_fraction("hx2-4x4/coll=ring:s64MiB")
+    assert a == b
+    import json
+    data = json.load(open(R.MEASURED_CACHE))
+    assert set(data["entries"]) == {"hx2-4x4/alltoall"}
+
+
+def test_degraded_fabric_slower_beyond_light_failures():
+    """Completion-time degradation: enough board failures slow the ring
+    allreduce down (the fig10 coll story)."""
+    healthy = R.simulated_time("hx2-4x4/coll=ring:s64MiB")
+    degraded = R.simulated_time(
+        "hx2-4x4/coll=ring:s64MiB/fail=boards:4:seed3")
+    assert degraded > healthy
+
+
+# ---------------------------------------------------------------------------
+# Cluster probe timelines (netsim through the scheduler)
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_probe_timelines():
+    from repro.cluster import FIG8_LADDER, SimConfig, poisson_trace, simulate
+
+    cfg = SimConfig.for_topology(
+        "hx2-4x4", fail_rate=0.001, repair_time=50.0, probe_interval=2.0,
+        seed=1, probe_collective="ring:s16MiB")
+    trace = poisson_trace(12, cfg.x, cfg.y, load=1.2, seed=1)
+    res = simulate(trace, cfg, FIG8_LADDER[-1][1])
+    assert res.n_probes > 0 and res.probe_timelines
+    observed = [r for r in res.records.values() if r.bw_timeline]
+    assert observed
+    for rec in observed:
+        for t, mean in rec.bw_timeline:
+            assert 0.0 < mean <= 1.0 + 1e-9
+    # the timeline segments per probe address running jobs
+    for t, per_job in res.probe_timelines:
+        for jid, segs in per_job.items():
+            assert jid in res.records
+            for t0, t1, frac in segs:
+                assert t1 >= t0 and frac >= 0

@@ -187,6 +187,62 @@ def test_edge_orbits_are_load_invariant():
             assert grp.max() - grp.min() < 1e-9, (fabric, int(o))
 
 
+HALF_SYMMETRIC_FABRICS = ["hx2-4x4", "hx2-8x8", "hx4x2-4x4", "hx4-4x4",
+                          "hyperx-8x8"]
+
+
+@pytest.mark.parametrize("fabric", HALF_SYMMETRIC_FABRICS)
+def test_half_symmetry_path_matches_chunked_bisection(fabric):
+    """Bisection rides the half-preserving symmetry path on healthy
+    hxmesh fabrics: one BFS per (side x on-board position) class equals
+    the full chunked pass (~1e-12 in practice)."""
+    net = FABRICS[fabric]() if fabric in FABRICS else \
+        R.parse(fabric).network()
+    dem = TR.parse_traffic("bisection").demand(net)
+    assert dem.half_cut is not None, f"{fabric} should set half_cut"
+    sym = F.symmetric_max_link_load(net, dem)
+    assert sym is not None, f"{fabric} should take the half-symmetry path"
+    chunked = float(F.demand_edge_loads(net, dem).max())
+    assert sym == pytest.approx(chunked, rel=1e-9)
+
+
+def test_half_symmetry_class_counts():
+    """Half-preserving classes double the full count (side x position);
+    row switches split by side, column switches do not."""
+    net = F.build_hxmesh(2, 2, 4, 4)
+    full = F.endpoint_classes(net)
+    half = F.endpoint_classes(net, half_cut=4)
+    assert len(np.unique(half)) == 2 * len(np.unique(full))
+    # a cut off the board boundary is refused (b=2, so cut=3 straddles)
+    assert F.endpoint_classes(net, half_cut=3) is None
+    assert F.edge_orbit_ids(net, half_cut=3) is None
+    # the torus declares no half-preserving subgroup
+    assert F.endpoint_classes(F.build_torus(8, 8), half_cut=4) is None
+
+
+def test_half_edge_orbits_are_load_invariant():
+    """Under the bisection demand, per-edge loads are constant within
+    each half-preserving orbit (the property the fast path relies on)."""
+    net = F.build_hxmesh(2, 2, 4, 4)
+    dem = TR.parse_traffic("bisection").demand(net)
+    orbits = F.edge_orbit_ids(net, half_cut=dem.half_cut)
+    loads = F.edge_loads(net, dem.dense_full())
+    for o in np.unique(orbits):
+        grp = loads[orbits == o]
+        assert grp.max() - grp.min() < 1e-9, int(o)
+
+
+def test_bisection_no_half_cut_off_grid():
+    """Fabrics without an aligned cut (or degraded ones) keep
+    half_cut=None and ride the chunked path."""
+    assert TR.parse_traffic("bisection").demand(
+        R.parse("torus-8x8").network()).half_cut is None
+    degraded = R.parse("hx2-4x4").network(failures="fail=boards:1:seed2")
+    dem = TR.parse_traffic("bisection").demand(degraded)
+    assert dem.half_cut is None
+    assert F.symmetric_max_link_load(degraded, dem) is None
+
+
 def test_symmetry_disabled_under_failures():
     """A degraded fabric must never take the symmetry shortcut."""
     from repro.core import topology as T
