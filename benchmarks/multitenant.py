@@ -1,0 +1,158 @@
+"""multitenant quick suite: contention as a measured quantity (§III-E).
+
+Two scenario groups on the unified time core:
+
+* ``stripe/*`` — the adversarial co-placement experiment: two tenants
+  interleaved by even/odd board columns, each looping a ring allreduce,
+  priced in one joint steady-state waterfill (``netsim.replay``).  On
+  HammingMesh both stripes are legal virtual sub-meshes with disjoint
+  link sets, so each tenant's contention fraction (isolated / contended
+  iteration time) stays ≈ 1.0; the same striping on a torus shares row
+  links and the fraction collapses.  The summary asserts the acceptance
+  bar ``hx2_isolation_holds``: every hx2 tenant ≥ 0.98, every torus
+  tenant < 1.0.
+* ``sched/*`` — the cluster scheduler with continuous replay on
+  (contention series per job, Jain fairness over per-job fractions) and
+  a priority/deadline trace under a preemption-enabled policy
+  (preemptions, deadline miss rate, utilization).
+
+Rows carry wall-clock timings so ``BENCH_multitenant.json`` can track
+replay cost alongside the isolation result.
+"""
+
+import time
+
+from repro import netsim as NS
+from repro.cluster import POLICIES, SimConfig, poisson_trace, simulate
+from repro.cluster.policies import GreedyPolicy
+from repro.core import flowsim as F
+from repro.core import registry as R
+
+from benchmarks import scenarios as S
+
+SUITE = "multitenant"
+
+# (spec, board rows/cols the two stripes interleave over)
+STRIPE_SPECS = (("hx2-16x16", 4, 8), ("torus-32x32", 4, 8))
+STRIPE_COLL = "ring:s4MiB"
+SCHED_SPEC = "hx2-8x8"
+REPLAY_COLL = "ring:s1MiB"
+
+
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    out = [
+        S.make(SUITE, f"stripe/{spec}",
+               scenario=f"{spec}/coll={STRIPE_COLL}", kind="stripe",
+               rows=rows, cols=cols)
+        for spec, rows, cols in STRIPE_SPECS
+    ]
+    out.append(S.make(SUITE, "sched/replay", topology=SCHED_SPEC,
+                      kind="replay", seed=3))
+    out.append(S.make(SUITE, "sched/preempt", topology=SCHED_SPEC,
+                      kind="preempt", seed=3))
+    return out
+
+
+def _striped_schedules(net, rows: int, cols: int) -> tuple[dict, dict]:
+    """Two tenants interleaved by even/odd board columns — adversarial for
+    any fabric whose rows share links, harmless for HammingMesh."""
+    scheds, sizes = {}, {}
+    for tenant in (0, 1):
+        boards = [(r, c) for r in range(rows)
+                  for c in range(tenant, cols, 2)]
+        eps = F.placement_endpoints(net, boards)
+        scheds[tenant] = NS.schedule_for_endpoints(
+            STRIPE_COLL, net, eps, group=str(tenant))
+        sizes[tenant] = len(eps)
+    return scheds, sizes
+
+
+def _compute_stripe(sc: S.Scenario) -> list[dict]:
+    net = sc.parsed().network()
+    scheds, sizes = _striped_schedules(net, sc.opts["rows"], sc.opts["cols"])
+    t0 = time.time()
+    fr = NS.contention_fractions(net, scheds)
+    wall = time.time() - t0
+    return [
+        {
+            "kind": "stripe",
+            "tenant": tenant,
+            "endpoints": sizes[tenant],
+            "contended_s": round(cont, 6),
+            "isolated_s": round(iso, 6),
+            "fraction": round(frac, 4),
+            "wall_ms": round(wall * 1e3 / len(scheds), 1),
+        }
+        for tenant, (cont, iso, frac) in sorted(fr.items())
+    ]
+
+
+def _compute_replay(sc: S.Scenario) -> list[dict]:
+    cfg = SimConfig.for_topology(sc.topology, seed=sc.seed,
+                                 replay_collective=REPLAY_COLL)
+    trace = poisson_trace(30, cfg.x, cfg.y, load=1.2, seed=sc.seed)
+    t0 = time.time()
+    res = simulate(trace, cfg, POLICIES["greedy"])
+    wall = time.time() - t0
+    s = res.summary()
+    return [{
+        "kind": "replay",
+        "n_jobs": len(trace),
+        "n_epochs": int(s["n_epochs"]),
+        "contention_mean": round(s["contention_mean"], 4),
+        "contention_min": round(s["contention_min"], 4),
+        "jain_fairness": round(s["jain_fairness"], 4),
+        "utilization": round(res.utilization(), 4),
+        "wall_ms": round(wall * 1e3, 1),
+    }]
+
+
+def _compute_preempt(sc: S.Scenario) -> list[dict]:
+    cfg = SimConfig.for_topology(sc.topology, seed=sc.seed)
+    trace = poisson_trace(120, cfg.x, cfg.y, load=1.6, seed=sc.seed,
+                          priorities=[(0, 0.8), (2, 0.2)],
+                          deadline_slack=6.0)
+    pol = GreedyPolicy(name="greedy-preempt", transpose=True,
+                       sort_queue=True, backfill=True, preempt=True)
+    t0 = time.time()
+    res = simulate(trace, cfg, pol)
+    wall = time.time() - t0
+    s = res.summary()
+    return [{
+        "kind": "preempt",
+        "n_jobs": len(trace),
+        "n_preemptions": res.n_preemptions,
+        "preempted_jobs": int(s["preempted_jobs"]),
+        "deadline_miss_rate": round(s.get("deadline_miss_rate", 0.0), 4),
+        "utilization": round(res.utilization(), 4),
+        "wall_ms": round(wall * 1e3, 1),
+    }]
+
+
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    kind = sc.opts["kind"]
+    if kind == "stripe":
+        return _compute_stripe(sc)
+    if kind == "replay":
+        return _compute_replay(sc)
+    return _compute_preempt(sc)
+
+
+def summarize(results: list[tuple[S.Scenario, list[dict]]],
+              ctx: S.RunContext) -> list[dict]:
+    hx2 = [r["fraction"] for sc, out in results for r in out
+           if r["kind"] == "stripe" and sc.topology.startswith("hx2")]
+    torus = [r["fraction"] for sc, out in results for r in out
+             if r["kind"] == "stripe" and sc.topology.startswith("torus")]
+    rows = []
+    if hx2 and torus:
+        rows.append({
+            "kind": "stripe",
+            # the §III-E acceptance bar: sub-mesh tenants within 2% of
+            # full isolation, the torus co-placement measurably below it
+            "hx2_isolation_holds": (min(hx2) >= 0.98
+                                    and max(torus) < 1.0),
+            "hx2_min_fraction": min(hx2),
+            "torus_max_fraction": max(torus),
+        })
+    return rows

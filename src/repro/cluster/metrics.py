@@ -64,29 +64,61 @@ def time_weighted_utilization(
 
 
 def job_stats(records: Iterable["JobRecord"]) -> dict[str, float]:
-    """Wait / slowdown aggregates over *finished* jobs.
+    """Wait / slowdown aggregates over *finished* jobs, plus preemption
+    and deadline accounting.
 
     Slowdown is (completion − arrival) / service-time, the standard queueing
-    metric; wait is time-to-first-placement.
+    metric; wait is time-to-first-placement.  A job with a deadline counts
+    as *missed* when it finished late or never finished at all (still
+    queued, running, or rejected at the horizon) — the deadline keys appear
+    only when the trace carries deadlines.
     """
     waits, slowdowns = [], []
-    n_finished = n_evicted = 0
+    n_finished = n_evicted = n_preempted = 0
+    n_deadline = n_missed = 0
     for rec in records:
         if rec.start is not None:
             waits.append(rec.start - rec.job.arrival)
+        n_preempted += 1 if getattr(rec, "n_preemptions", 0) else 0
+        deadline = getattr(rec.job, "deadline", None)
+        if deadline is not None:
+            n_deadline += 1
+            if rec.end is None or rec.end > deadline:
+                n_missed += 1
         if rec.end is None:
             continue
         n_finished += 1
         n_evicted += 1 if rec.n_evictions else 0
         slowdowns.append((rec.end - rec.job.arrival) / max(rec.job.duration, 1e-9))
-    out = {"finished": float(n_finished), "evicted_jobs": float(n_evicted)}
+    out = {
+        "finished": float(n_finished),
+        "evicted_jobs": float(n_evicted),
+        "preempted_jobs": float(n_preempted),
+    }
     if waits:
         out["mean_wait_s"] = statistics.mean(waits)
         out["p95_wait_s"] = float(np.percentile(waits, 95))
     if slowdowns:
         out["mean_slowdown"] = statistics.mean(slowdowns)
         out["p95_slowdown"] = float(np.percentile(slowdowns, 95))
+    if n_deadline:
+        out["deadline_jobs"] = float(n_deadline)
+        out["deadline_missed"] = float(n_missed)
+        out["deadline_miss_rate"] = n_missed / n_deadline
     return out
+
+
+def jain_index(values: Iterable[float]) -> float:
+    """Jain's fairness index ``(Σx)² / (n · Σx²)`` — 1.0 when every tenant
+    gets the same share, → 1/n when one tenant takes everything.  Applied
+    to per-job contention fractions it summarizes how evenly co-tenants
+    split the shared fabric."""
+    xs = [float(v) for v in values]
+    if not xs:
+        return 1.0
+    s = sum(xs)
+    s2 = sum(x * x for x in xs)
+    return 1.0 if s2 <= 0 else (s * s) / (len(xs) * s2)
 
 
 def fragmentation(alloc: HxMeshAllocator) -> float:

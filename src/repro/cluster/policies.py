@@ -10,6 +10,11 @@ A :class:`Policy` makes two decisions the event loop delegates:
   via the allocator's candidate-enumeration interface
   (:meth:`repro.core.allocation.HxMeshAllocator.iter_blocks`).
 
+:attr:`Policy.preempt` additionally lets a queued job evict
+strictly-lower-priority running jobs when it cannot place (the victims
+requeue with their remaining work — the simulator plans the minimal
+victim set and emits an ``EV_PREEMPT`` event).
+
 :class:`GreedyPolicy` is the paper's greedy first-fit with the §IV-A
 heuristic flags (transpose / aspect / locality); the Fig-8 ladder of
 configurations is :data:`FIG8_LADDER`.  :class:`BestFitPolicy` scores every
@@ -40,17 +45,26 @@ class Policy:
     sort_queue: bool = False
     backfill: bool = False
     max_aspect: int = 8
+    # allow a queued job to evict strictly-lower-priority running jobs
+    # (they requeue with their remaining work) when it cannot place
+    preempt: bool = False
 
     # -- queue discipline ----------------------------------------------------
 
     def order_queue(self, queue: list["QueueEntry"]) -> list["QueueEntry"]:
-        """Rank waiting jobs for one scheduling pass (FIFO or largest-first —
-        the dynamic analogue of Fig 8's job sorting)."""
+        """Rank waiting jobs for one scheduling pass: higher priority
+        strictly first, then FIFO or largest-first within a class (the
+        dynamic analogue of Fig 8's job sorting).  Both sorts are stable,
+        so an all-default-priority queue orders exactly as before the
+        priority field existed."""
         if self.sort_queue:
-            return sorted(
+            ranked = sorted(
                 queue, key=lambda e: (-e.job.size, e.job.arrival, e.job.jid)
             )
-        return list(queue)
+        else:
+            ranked = list(queue)
+        ranked.sort(key=lambda e: -getattr(e.job, "priority", 0))
+        return ranked
 
     # -- placement -----------------------------------------------------------
 
@@ -60,8 +74,10 @@ class Policy:
 
     def can_ever_fit(self, alloc: HxMeshAllocator, job: Job) -> bool:
         """True if some allowed shape fits an *empty* working grid — jobs
-        failing this are rejected instead of queueing forever."""
-        return any(u <= alloc.y and v <= alloc.x for u, v in self.shapes(job))
+        failing this are rejected instead of queueing forever.  Delegated
+        to the allocator so shape-free pools (``ft``/``df``) answer by
+        capacity, not geometry."""
+        return any(alloc.fits_empty(u, v) for u, v in self.shapes(job))
 
     def place(self, alloc: HxMeshAllocator, job: Job) -> Placement | None:
         """Greedy first-fit over the allowed shapes (the paper's allocator)."""

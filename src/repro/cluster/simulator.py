@@ -2,30 +2,44 @@
 
 The paper's scheduling-flexibility claim (Figs 8–10) is argued over a fleet
 *in time*: jobs arrive, run, finish; boards fail and are repaired; evicted
-jobs are remapped in place (§IV-B).  This module is that event loop:
+jobs are remapped in place (§IV-B).  This module is that event loop, run
+on the shared time core (:mod:`repro.core.timecore` — the same event
+queue/clock the netsim engine uses):
 
 * **events** — job arrivals (from a :mod:`repro.cluster.traces` trace), job
-  completions, Poisson board fail/repair churn, and optional flow-level
-  bandwidth probes;
-* **queue** — a waiting line ordered by the policy each pass, with optional
-  EASY-style backfill (jobs behind a blocked head may still start);
+  completions, Poisson board fail/repair churn, priority preemptions, and
+  optional flow-level bandwidth probes;
+* **queue** — a waiting line ordered by the policy each pass (priority
+  classes strictly first), with optional EASY-style backfill (jobs behind
+  a blocked head may still start) and optional preemption (a job that
+  cannot place may evict strictly-lower-priority tenants, which requeue
+  with their remaining work);
 * **placement** — delegated to a :class:`repro.cluster.policies.Policy`
-  over the :class:`repro.core.allocation.HxMeshAllocator` board state;
+  over the :class:`repro.core.allocation.HxMeshAllocator` board state
+  (or the shape-free pool for ``ft``/``df`` specs);
 * **failure churn** — a random working board fails at rate ``fail_rate``
   per board-second; the evicted job is remapped to a fresh virtual
   sub-HxMesh immediately (fail-in-place) or requeued at the front; repairs
   return boards after an exponential delay;
 * **bandwidth probes** — every ``probe_interval`` simulated seconds *while
   jobs are still arriving* (like failure churn, probing stops at the last
-  arrival; jobs only running during the drain phase go unobserved) the
-  shared fabric (with its current failures) is loaded with every running
-  job's alltoall at once via :mod:`repro.core.flowsim`, recording each job's
-  *achieved* bandwidth next to the *allocated* (isolated sub-HxMesh)
-  bandwidth of §III-E.  Every probe also logs the registry *scenario
-  string* of the fabric it measured (``hx2-8x8/alltoall/fail=board:3,1``)
-  — per probe in ``SimResult.probe_log`` and per job in
-  ``JobRecord.probe_scenario`` — so any in-simulation measurement can be
-  reproduced offline with ``registry.parse_scenario(...).fraction()``.
+  arrival; a job that would otherwise go unobserved gets one sample at
+  completion) the shared fabric (with its current failures) is loaded
+  with every running job's alltoall at once via :mod:`repro.core.flowsim`,
+  recording each job's *achieved* bandwidth next to the *allocated*
+  (isolated sub-HxMesh) bandwidth of §III-E.  Every probe also logs the
+  registry *scenario string* of the fabric it measured
+  (``hx2-8x8/alltoall/fail=board:3,1``) — per probe in
+  ``SimResult.probe_log`` and per job in ``JobRecord.probe_scenario`` —
+  so any in-simulation measurement can be reproduced offline with
+  ``registry.parse_scenario(...).fraction()``;
+* **continuous replay** — with ``replay_collective`` set, every interval
+  between state-changing events (a fabric *epoch*) prices each running
+  job's looping collective in one shared steady-state waterfill
+  (:mod:`repro.netsim.replay`): ``JobRecord.iter_samples`` covers the
+  job's whole lifetime with contended vs isolated iteration times, and
+  ``JobRecord.contention_fraction()`` turns the §III-E isolation claim
+  into a measured quantity.
 
 Every state change is appended to an audit log so tests can replay the run
 and assert conservation invariants (no placement on failed/occupied boards;
@@ -34,8 +48,8 @@ every arrival finished, running, queued, or explicitly rejected).
 
 from __future__ import annotations
 
+import copy
 import dataclasses
-import heapq
 import random
 
 from repro.cluster import metrics as M
@@ -43,11 +57,17 @@ from repro.cluster.policies import Policy
 from repro.cluster.traces import TraceJob
 from repro.core import flowsim as F
 from repro.core import registry
+from repro.core import timecore as TC
 from repro.core.allocation import HxMeshAllocator
 from repro.netsim import engine as NE
+from repro.netsim import replay as NR
 from repro.netsim import schedule as NSch
 
-EV_ARRIVAL, EV_FINISH, EV_FAIL, EV_REPAIR, EV_PROBE = range(5)
+# Event taxonomy on the shared time core (core.timecore): job arrival /
+# completion, board fail / repair churn, point-in-time bandwidth probes,
+# and priority preemption.  netsim contributes the flow-level kinds
+# (phase activation; flow finishes emerge from the continuous dynamics).
+EV_ARRIVAL, EV_FINISH, EV_FAIL, EV_REPAIR, EV_PROBE, EV_PREEMPT = range(6)
 
 
 @dataclasses.dataclass(eq=False)
@@ -79,10 +99,33 @@ class JobRecord:
     probe_scenario: str | None = None
     # time-domain probes (SimConfig.probe_collective): one (probe time,
     # time-weighted mean achieved fraction of injection bandwidth while
-    # this job's collective ran) per probe that observed the job
+    # this job's collective ran) per probe that observed the job; a job
+    # that would otherwise go unobserved gets one sample at completion
     bw_timeline: list = dataclasses.field(default_factory=list)
+    # continuous replay (SimConfig.replay_collective): one (t0, dt,
+    # contended_iter_s, isolated_iter_s) per fabric epoch the job ran
+    # through — together they cover the job's whole placed lifetime
+    iter_samples: list = dataclasses.field(default_factory=list)
+    n_preemptions: int = 0
     token: int = 0  # placement version; stale FINISH events are dropped
     finish_t: float = 0.0  # scheduled completion of the current placement
+
+    def iteration_times(self) -> list[tuple[float, float]]:
+        """Measured iteration-time series: one ``(epoch start, contended
+        iteration seconds)`` point per fabric epoch the job ran through."""
+        return [(t0, cont) for (t0, _dt, cont, _iso) in self.iter_samples]
+
+    def contention_fraction(self) -> float | None:
+        """Duration-weighted mean of ``isolated / contended`` iteration
+        time over the job's epochs — 1.0 means co-tenants never slowed
+        this job (the sub-mesh isolation claim), < 1.0 measures how much
+        shared-fabric contention cost it.  ``None`` without replay data."""
+        num = den = 0.0
+        for (_t0, dt, cont, iso) in self.iter_samples:
+            if cont > 0 and dt > 0:
+                num += dt * (iso / cont)
+                den += dt
+        return float(num / den) if den > 0 else None
 
 
 @dataclasses.dataclass
@@ -121,6 +164,13 @@ class SimConfig:
     # engine, recording per-job achieved-bandwidth timelines
     # (JobRecord.bw_timeline, SimResult.probe_timelines)
     probe_collective: str | None = None
+    # collective token for *continuous* replay: between any two events
+    # that change the running set or the failure set (a fabric epoch),
+    # every running job loops this collective and all of them share links
+    # in one steady-state waterfill (netsim.replay) — JobRecord gains an
+    # iteration-time series and a contention fraction covering its whole
+    # lifetime, not just probe instants
+    replay_collective: str | None = None
 
     @classmethod
     def for_topology(cls, spec: str, **kw) -> "SimConfig":
@@ -146,6 +196,8 @@ class SimResult:
     n_failures: int = 0
     n_repairs: int = 0
     n_probes: int = 0
+    n_preemptions: int = 0
+    n_epochs: int = 0  # fabric epochs measured by continuous replay
     # one (time, scenario string) per bandwidth probe: the fabric each
     # probe measured, addressable via registry.parse_scenario
     probe_log: list = dataclasses.field(default_factory=list)
@@ -178,6 +230,16 @@ class SimResult:
             out["mean_fragmentation"] = sum(
                 f for _, f in self.fragmentation_samples
             ) / len(self.fragmentation_samples)
+        fracs = [float(f) for rec in self.records.values()
+                 if (f := rec.contention_fraction()) is not None]
+        if fracs:
+            out["n_preemptions"] = float(self.n_preemptions)
+            out["n_epochs"] = float(self.n_epochs)
+            out["contention_mean"] = sum(fracs) / len(fracs)
+            out["contention_min"] = min(fracs)
+            out["jain_fairness"] = M.jain_index(fracs)
+        elif self.n_preemptions:
+            out["n_preemptions"] = float(self.n_preemptions)
         return out
 
 
@@ -197,20 +259,39 @@ class ClusterSimulator:
         self.frag_samples: list[tuple[float, float]] = []
         self.probe_log: list[tuple[float, str]] = []
         self.probe_timelines: list[tuple[float, dict]] = []
-        self._heap: list = []
-        self._seq = 0
-        self._counts = {"fail": 0, "repair": 0, "probe": 0}
-        # flow-level fabric, built lazily on the first probe
+        self._counts = {"fail": 0, "repair": 0, "probe": 0, "preempt": 0}
+        # the shared time core: one queue, one clock, per-kind handlers
+        self.loop = TC.EventLoop()
+        self.loop.on(EV_ARRIVAL, self._on_arrival)
+        self.loop.on(EV_FINISH, lambda t, d: self._on_finish(t, *d))
+        self.loop.on(EV_FAIL, lambda t, _d: self._on_fail(t))
+        self.loop.on(EV_REPAIR, lambda t, d: self._on_repair(t, *d))
+        self.loop.on(EV_PROBE, lambda t, _d: self._on_probe(t))
+        self.loop.on(EV_PREEMPT, self._on_preempt)
+        # flow-level fabric, built lazily on the first probe/replay; the
+        # degraded variant is cached by failure set
         self._base_net: F.Network | None = None
+        self._net_cache: tuple[frozenset, F.Network] | None = None
         # netsim footprint cache, reused across probes while the failure
         # set is unchanged (BFS work amortizes over a probe series)
         self._foot_cache: tuple[frozenset, NE.FootprintCache] | None = None
+        # continuous replay: a fabric *epoch* runs between two events that
+        # change the running set or the failure set; per-epoch iteration
+        # times are cached by the state signature (epochs recur)
+        self._epoch_sig: tuple | None = None
+        self._epoch_t0 = 0.0
+        self._epoch_rates: dict[int, tuple[float, float]] = {}
+        self._joint_cache: dict[tuple, dict] = {}
+        self._iso_cache: dict[tuple, float] = {}
+        self._n_epochs = 0
+        if config.replay_collective:
+            self.loop.after_event = self._roll_epoch
+        self._preempt_pending: set[int] = set()
 
     # -- event plumbing ------------------------------------------------------
 
     def _push(self, t: float, kind: int, data) -> None:
-        self._seq += 1
-        heapq.heappush(self._heap, (t, self._seq, kind, data))
+        self.loop.push(t, kind, data)
 
     def _sample(self, t: float) -> None:
         working = self.alloc.x * self.alloc.y - len(self.alloc.failed)
@@ -228,19 +309,9 @@ class ClusterSimulator:
         if self.cfg.probe_interval and self.cfg.probe_interval <= self.last_arrival:
             self._push(self.cfg.probe_interval, EV_PROBE, None)
         self._sample(0.0)
-        t = 0.0
-        while self._heap:
-            t, _seq, kind, data = heapq.heappop(self._heap)
-            if kind == EV_ARRIVAL:
-                self._on_arrival(t, data)
-            elif kind == EV_FINISH:
-                self._on_finish(t, *data)
-            elif kind == EV_FAIL:
-                self._on_fail(t)
-            elif kind == EV_REPAIR:
-                self._on_repair(t, *data)
-            elif kind == EV_PROBE:
-                self._on_probe(t)
+        t = self.loop.run()
+        if self.cfg.replay_collective:
+            self._close_epoch(t)  # flush the final epoch's samples
         return SimResult(
             records=self.records,
             samples=self.samples,
@@ -251,6 +322,8 @@ class ClusterSimulator:
             n_failures=self._counts["fail"],
             n_repairs=self._counts["repair"],
             n_probes=self._counts["probe"],
+            n_preemptions=self._counts["preempt"],
+            n_epochs=self._n_epochs,
             probe_log=self.probe_log,
             probe_timelines=self.probe_timelines,
         )
@@ -281,6 +354,10 @@ class ClusterSimulator:
         rec = self.records[jid]
         if rec.token != token or rec.status != "running":
             return  # stale completion from before an eviction
+        if self.cfg.probe_collective and not rec.bw_timeline:
+            # no probe instant fell inside this job's run — record one
+            # sample at completion so every placed job has ≥ 1 point
+            self._completion_sample(t, jid)
         pl = self.alloc.placements[jid]
         boards = tuple(pl.boards)
         self.alloc.release(jid)
@@ -289,6 +366,53 @@ class ClusterSimulator:
         self.audit.append(AuditEvent(t, "release", jid, boards))
         self._schedule_pass(t)
         self._sample(t)
+
+    def _on_preempt(self, t: float, data) -> None:
+        """Evict the planned victims (they requeue at the front with their
+        remaining work) and rerun the scheduling pass — the preemptor
+        outranks them in priority order, so it places onto the freed
+        boards at this same instant."""
+        jid_pre, victims = data
+        self._preempt_pending.discard(jid_pre)
+        for vjid in victims:
+            rec = self.records[vjid]
+            if rec.status != "running" or vjid not in self.alloc.placements:
+                continue  # finished or evicted at this same instant
+            boards = tuple(self.alloc.placements[vjid].boards)
+            self.alloc.release(vjid)
+            self.busy -= rec.job.size
+            rec.status = "queued"
+            rec.token += 1  # the in-flight EV_FINISH becomes stale
+            rec.n_preemptions += 1
+            self._counts["preempt"] += 1
+            self.audit.append(AuditEvent(t, "preempt", vjid, boards))
+            self.queue.insert(0, QueueEntry(
+                job=rec.job, remaining=max(0.0, rec.finish_t - t)))
+        self._schedule_pass(t)
+        self._sample(t)
+
+    def _preemption_plan(self, job: TraceJob) -> list[int] | None:
+        """Smallest lowest-priority-first victim set whose release provably
+        makes ``job`` fit, or ``None``.  Planned on a deep copy of the
+        allocator so nothing is evicted unless the preemption succeeds."""
+        cand = sorted(
+            (rec for jid, rec in self.records.items()
+             if rec.status == "running" and jid in self.alloc.placements
+             and rec.job.priority < job.priority),
+            key=lambda r: (r.job.priority, -r.job.size, r.job.jid),
+        )
+        if not cand:
+            return None
+        probe = copy.deepcopy(self.alloc)
+        chosen: list[int] = []
+        shapes = self.policy.shapes(job.to_alloc_job())
+        for rec in cand:
+            probe.release(rec.job.jid)
+            chosen.append(rec.job.jid)
+            if any(next(probe.iter_blocks(u, v), None) is not None
+                   for u, v in shapes):
+                return chosen
+        return None
 
     def _on_fail(self, t: float) -> None:
         working = sorted(
@@ -361,10 +485,6 @@ class ClusterSimulator:
         """A fresh, empty allocator of the configured topology family."""
         if self.cfg.topology:
             alloc = registry.parse(self.cfg.topology).allocator()
-            if alloc is None:
-                raise ValueError(
-                    f"{self.cfg.topology} has no board grid to schedule over"
-                )
             if (alloc.x, alloc.y) != (self.cfg.x, self.cfg.y):
                 raise ValueError(
                     f"{self.cfg.topology} board grid {alloc.x}x{alloc.y} "
@@ -407,6 +527,14 @@ class ClusterSimulator:
         for entry in self.policy.order_queue(self.queue):
             pl = self.policy.place(self.alloc, entry.job.to_alloc_job())
             if pl is None:
+                if (self.policy.preempt
+                        and entry.job.jid not in self._preempt_pending):
+                    victims = self._preemption_plan(entry.job)
+                    if victims is not None:
+                        self._preempt_pending.add(entry.job.jid)
+                        self._push(t, EV_PREEMPT,
+                                   (entry.job.jid, tuple(victims)))
+                        break  # victims release at t; the pass reruns then
                 if not self.policy.backfill:
                     break
                 continue
@@ -427,6 +555,77 @@ class ClusterSimulator:
         rec.finish_t = t + remaining
         self._push(t + remaining, EV_FINISH, (rec.job.jid, rec.token))
 
+    # -- continuous replay (fabric epochs) -----------------------------------
+
+    def _state_sig(self) -> tuple:
+        """Fabric-epoch signature: the failure set plus the placed jobs at
+        their current placement tokens.  While this is unchanged, the
+        steady-state rates of every running collective are constant."""
+        return (
+            frozenset(self.alloc.failed),
+            frozenset((jid, self.records[jid].token)
+                      for jid in self.alloc.placements),
+        )
+
+    def _roll_epoch(self, _ev: TC.Event) -> None:
+        """After-event hook on the time core: when the dispatched event
+        changed the fabric state, close the finished epoch (crediting its
+        iteration samples) and price the new one."""
+        sig = self._state_sig()
+        if sig == self._epoch_sig:
+            return
+        t = self.loop.now
+        self._close_epoch(t)
+        self._epoch_sig = sig
+        self._epoch_t0 = t
+        self._epoch_rates = self._replay_rates(sig)
+        if self._epoch_rates:
+            self._n_epochs += 1
+
+    def _close_epoch(self, t: float) -> None:
+        dt = t - self._epoch_t0
+        if dt <= 0:
+            return
+        for jid, (cont, iso) in self._epoch_rates.items():
+            self.records[jid].iter_samples.append(
+                (self._epoch_t0, dt, cont, iso))
+
+    def _replay_rates(self, sig: tuple) -> dict[int, tuple[float, float]]:
+        """(contended, isolated) steady-state iteration seconds per placed
+        job under the current fabric state — one joint waterfill over every
+        tenant's looping collective (netsim.replay), cached by signature."""
+        if not self.alloc.placements:
+            return {}
+        cached = self._joint_cache.get(sig)
+        if cached is not None:
+            return cached
+        net = self._net_now()
+        failed = sig[0]
+        if self._foot_cache is None or self._foot_cache[0] != failed:
+            self._foot_cache = (failed, NE.FootprintCache(net))
+        foot = self._foot_cache[1]
+        scheds: dict[int, NSch.CommSchedule] = {}
+        for jid, pl in sorted(self.alloc.placements.items()):
+            eps = F.placement_endpoints(net, pl.boards)
+            if len(eps) < 2:
+                continue
+            s = NSch.schedule_for_endpoints(
+                self.cfg.replay_collective, net, eps, group=str(jid))
+            if s.phases:
+                scheds[jid] = s
+        joint = NR.steady_iteration_times(net, scheds, cache=foot)
+        out: dict[int, tuple[float, float]] = {}
+        for jid, sched in scheds.items():
+            key = (jid, self.records[jid].token, failed)
+            iso = self._iso_cache.get(key)
+            if iso is None:
+                iso = NR.steady_iteration_times(
+                    net, {jid: sched}, cache=foot)[jid]
+                self._iso_cache[key] = iso
+            out[jid] = (joint[jid], iso)
+        self._joint_cache[sig] = out
+        return out
+
     # -- failure churn & probes ----------------------------------------------
 
     def _next_fail_time(self, t: float) -> float:
@@ -446,10 +645,13 @@ class ClusterSimulator:
                 )
         if not self.alloc.failed:
             return self._base_net
-        return F.build_network(
-            self._base_net,
-            failures=[("board", c, r) for (r, c) in sorted(self.alloc.failed)],
-        )
+        failed = frozenset(self.alloc.failed)
+        if self._net_cache is None or self._net_cache[0] != failed:
+            self._net_cache = (failed, F.build_network(
+                self._base_net,
+                failures=[("board", c, r) for (r, c) in sorted(failed)],
+            ))
+        return self._net_cache[1]
 
     def _probe_scenario(self) -> str:
         """The registry scenario string of the fabric the probe measures:
@@ -495,11 +697,16 @@ class ClusterSimulator:
             self._push(nxt, EV_PROBE, None)
 
     def _probe_collective_timelines(self, t: float, net: F.Network,
-                                    jobs_eps: dict) -> None:
+                                    jobs_eps: dict,
+                                    only: set[int] | None = None) -> None:
         """Time-domain probe: lower one ``probe_collective`` per running
         job over its own endpoints, play them *concurrently* through the
         shared fabric with :mod:`repro.netsim`, and record each job's
-        achieved-bandwidth timeline (fractions of injection bandwidth)."""
+        achieved-bandwidth timeline (fractions of injection bandwidth).
+
+        ``only`` restricts which jobs get samples *recorded* (completion
+        samples observe one finishing job); every running job still loads
+        the fabric, so the measurement sees the true co-tenant traffic."""
         parts = [
             NSch.schedule_for_endpoints(
                 self.cfg.probe_collective, net, eps, group=str(jid))
@@ -519,15 +726,33 @@ class ClusterSimulator:
         for t0, t1, rates in report.timeline:
             for group, rate in rates.items():
                 jid = int(group)
+                if only is not None and jid not in only:
+                    continue
                 k = len(jobs_eps[jid])
                 per_job.setdefault(jid, []).append(
                     (t0, t1, rate / (k * lpe)))
+        if not per_job:
+            return
         self.probe_timelines.append((t, per_job))
         for jid, segs in per_job.items():
             dur = sum(t1 - t0 for t0, t1, _ in segs)
             mean = (sum((t1 - t0) * fr for t0, t1, fr in segs) / dur
                     if dur > 0 else 0.0)
             self.records[jid].bw_timeline.append((t, mean))
+
+    def _completion_sample(self, t: float, jid: int) -> None:
+        """One time-domain sample for a finishing job no probe instant ever
+        observed (it started and completed between probes, or during the
+        post-arrival drain) — the job is still placed, so the probe sees
+        its real co-tenants."""
+        net = self._net_now()
+        jobs_eps = {
+            j: F.placement_endpoints(net, pl.boards)
+            for j, pl in self.alloc.placements.items()
+        }
+        if len(jobs_eps.get(jid, ())) < 2:
+            return
+        self._probe_collective_timelines(t, net, jobs_eps, only={jid})
 
 
 def simulate(

@@ -19,6 +19,8 @@ Two synthetic generators:
 Traces round-trip through a replayable JSONL format (:func:`save_trace` /
 :func:`load_trace`): one JSON object per line with keys ``jid, arrival, u,
 v, duration, workload, iterations`` — times in (simulated) seconds.
+``priority``/``deadline`` appear only when set, so legacy files stay
+byte-identical through a load/save cycle.
 """
 
 from __future__ import annotations
@@ -41,6 +43,14 @@ class TraceJob:
     when the generator was given a paper profile name with no registry
     spec) — so trace files are replayable against the exact topology that
     priced them, the same one-string addressing the probe logs use.
+
+    ``priority`` ranks jobs for scheduling (higher first; a
+    preemption-enabled policy may evict strictly-lower-priority tenants to
+    start a job).  ``deadline`` is an absolute completion deadline in
+    simulated seconds (``None`` = best-effort); the simulator *accounts*
+    for misses, it does not kill late jobs.  Both fields are omitted from
+    the JSONL serialization when left at their defaults, so legacy trace
+    files round-trip byte-identically.
     """
 
     jid: int
@@ -51,6 +61,8 @@ class TraceJob:
     workload: str = "GPT-3"
     iterations: int = 0
     scenario: str = ""
+    priority: int = 0
+    deadline: float | None = None
 
     @property
     def size(self) -> int:
@@ -105,11 +117,19 @@ def _generate(
     sigma_iterations: float,
     topology: str,
     max_aspect: int,
+    priorities: list[tuple[int, float]] | None = None,
+    deadline_slack: float | None = None,
 ) -> list[TraceJob]:
     """Shared generation loop: draw (size → shape → workload → iterations)
     per job, then assign Poisson arrivals calibrated so that offered load —
     mean board-seconds per wall-clock second over the cluster's boards —
-    equals ``load``."""
+    equals ``load``.
+
+    ``priorities`` is an optional weighted class mix (``[(priority,
+    weight), ...]``) sampled per job; ``deadline_slack`` (> 1) gives every
+    job the deadline ``arrival + slack · duration``.  Both default off, in
+    which case the RNG stream — and therefore every legacy trace — is
+    unchanged."""
     mu = _log_mu(mean_iterations, sigma_iterations)
     raw: list[tuple[int, int, str, int, float]] = []
     while len(raw) < n_jobs:
@@ -125,13 +145,22 @@ def _generate(
     mean_bs = sum(u * v * dur for u, v, _, _, dur in raw) / len(raw)
     mean_gap = mean_bs / (load * x * y)
     scenario = _scenario_for(topology)
+    prio_classes = prio_weights = None
+    if priorities:
+        prio_classes = [p for p, _ in priorities]
+        prio_weights = [w for _, w in priorities]
     jobs: list[TraceJob] = []
     t = 0.0
     for jid, (u, v, wl, iters, dur) in enumerate(raw):
         t += rng.expovariate(1.0 / mean_gap)
+        prio = (rng.choices(prio_classes, prio_weights)[0]
+                if prio_classes else 0)
+        deadline = (t + deadline_slack * dur
+                    if deadline_slack is not None else None)
         jobs.append(TraceJob(jid=jid, arrival=t, u=u, v=v, duration=dur,
                              workload=wl, iterations=iters,
-                             scenario=scenario))
+                             scenario=scenario, priority=prio,
+                             deadline=deadline))
     return jobs
 
 
@@ -157,6 +186,8 @@ def poisson_trace(
     mean_iterations: float = 300.0,
     sigma_iterations: float = 1.0,
     max_aspect: int = 8,
+    priorities: list[tuple[int, float]] | None = None,
+    deadline_slack: float | None = None,
 ) -> list[TraceJob]:
     """Poisson arrivals over the paper's job-size distribution.
 
@@ -171,6 +202,7 @@ def poisson_trace(
         mean_iterations=mean_iterations,
         sigma_iterations=sigma_iterations,
         topology=topology, max_aspect=max_aspect,
+        priorities=priorities, deadline_slack=deadline_slack,
     )
 
 
@@ -183,6 +215,8 @@ def philly_trace(
     topology: str = "Hx2Mesh",
     sigma_iterations: float = 1.8,
     max_aspect: int = 8,
+    priorities: list[tuple[int, float]] | None = None,
+    deadline_slack: float | None = None,
 ) -> list[TraceJob]:
     """Philly/Helios-style heavy-tailed mix: ~90% of jobs are 1–4 boards and
     short, but a fat lognormal tail of iterations (σ≈1.8) plus occasional
@@ -195,6 +229,7 @@ def philly_trace(
         mean_iterations=100.0,
         sigma_iterations=sigma_iterations,
         topology=topology, max_aspect=max_aspect,
+        priorities=priorities, deadline_slack=deadline_slack,
     )
 
 
@@ -209,10 +244,17 @@ def _log_mu(mean: float, sigma: float) -> float:
 
 
 def save_trace(jobs: list[TraceJob], path: str) -> None:
-    """One JSON object per line; key order fixed for diff-stable files."""
+    """One JSON object per line; key order fixed for diff-stable files.
+    ``priority``/``deadline`` are dropped at their defaults so traces from
+    before those fields existed re-serialize byte-identically."""
     with open(path, "w") as fh:
         for j in jobs:
-            fh.write(json.dumps(dataclasses.asdict(j), sort_keys=True) + "\n")
+            d = dataclasses.asdict(j)
+            if j.priority == 0:
+                del d["priority"]
+            if j.deadline is None:
+                del d["deadline"]
+            fh.write(json.dumps(d, sort_keys=True) + "\n")
 
 
 def load_trace(path: str) -> list[TraceJob]:

@@ -65,6 +65,12 @@ class HxMeshAllocator:
     def num_free(self) -> int:
         return sum(len(s) for s in self.free)
 
+    def fits_empty(self, u: int, v: int) -> bool:
+        """Could a ``u × v`` request *ever* fit this grid if every board
+        were free and working?  (Policies reject jobs failing this for
+        every allowed shape rather than queueing them forever.)"""
+        return u <= self.y and v <= self.x
+
     def victim_of(self, row: int, col: int) -> int | None:
         """jid of the job whose placement covers board ``(row, col)``."""
         for jid, pl in self.placements.items():
@@ -206,6 +212,35 @@ class TorusAllocator(HxMeshAllocator):
                 cols = [(c0 + j) % self.x for j in range(v)]
                 if all(c in self.free[r] for r in rows for c in cols):
                     yield Placement(jid=-1, rows=rows, cols=cols)
+
+
+class PoolAllocator(HxMeshAllocator):
+    """Slot pool for indirect topologies (fat tree, dragonfly).
+
+    Full-bisection fabrics make placement shape-free: a ``u × v`` board
+    request just needs ``u·v`` free *slots*, and any slots will do — there
+    is no grid geometry for the §IV-A shape heuristics to exploit.  The
+    pool is modeled as a one-row grid (``y = 1``, ``x = n_slots``) whose
+    candidate enumeration ignores the requested shape; free/failed
+    bookkeeping, commit/release, fail/repair and the policy interface are
+    inherited unchanged, so the cluster scheduler runs ``ft``/``df``
+    specs with no special cases."""
+
+    def __init__(self, slots: int):
+        super().__init__(slots, 1)
+
+    def fits_empty(self, u: int, v: int) -> bool:
+        return u * v <= self.x
+
+    def iter_blocks(
+        self, u: int, v: int, locality: bool = False
+    ) -> Iterator[Placement]:
+        """One candidate: the ``u·v`` lowest-numbered free slots (any
+        choice is bandwidth-equivalent under full bisection)."""
+        need = u * v
+        free = sorted(self.free[0])
+        if len(free) >= need:
+            yield Placement(jid=-1, rows=[0], cols=free[:need])
 
 
 def job_shapes(

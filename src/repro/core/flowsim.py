@@ -819,17 +819,17 @@ def _clause_str(c: tuple) -> str:
 
 
 def _board_grid(net: Network) -> tuple[int, int]:
-    """Board grid (bx, by) dimensions, or raise for gridless fabrics."""
+    """Board grid (bx, by) dimensions; gridless fabrics (fat tree,
+    dragonfly) present as a 1-row pool of ``board_size``-endpoint slots
+    (matching :func:`board_nodes`)."""
     meta = net.meta
     if meta.get("kind") == "hxmesh":
         return meta["x"], meta["y"]
     if meta.get("kind") == "torus":
         bd = meta.get("board", 2)
         return meta["side_x"] // bd, meta["side_y"] // bd
-    raise ValueError(
-        "board failures need hxmesh/torus geometry in net.meta "
-        f"(got kind={meta.get('kind')!r})"
-    )
+    bs = meta.get("board_size", 4)
+    return net.n_endpoints // bs, 1
 
 
 def _sample_failures(net: Network, kind: str, amount: tuple, seed: int):
@@ -1013,7 +1013,12 @@ def placement_endpoints(net: Network, boards) -> np.ndarray:
 
 def board_nodes(net: Network, bx: int, by: int) -> list[int]:
     """Accelerator node ids of board ``(bx, by)`` (HxMesh board-major ids;
-    for a plain torus, the 2x2-board tiling of the paper's comparison)."""
+    for a plain torus, the 2x2-board tiling of the paper's comparison).
+
+    Shapeless fabrics (fat tree, dragonfly) have no board grid, but the
+    scheduler's pool allocator still hands out *slots* of ``board_size``
+    consecutive endpoints — board ``(bx, 0)`` is slot ``bx``.  Full
+    bisection makes the mapping choice immaterial to bandwidth."""
     meta = net.meta
     if meta.get("kind") == "hxmesh":
         a, b, x = meta["a"], meta["b"], meta["x"]
@@ -1026,7 +1031,13 @@ def board_nodes(net: Network, bx: int, by: int) -> list[int]:
             (by * bd + i) * side_x + (bx * bd + j)
             for i in range(bd) for j in range(bd)
         ]
-    raise ValueError("board failures need hxmesh/torus geometry in net.meta")
+    bs = meta.get("board_size", 4)
+    n_slots = net.n_endpoints // bs
+    slot = by * n_slots + bx
+    if not 0 <= slot < n_slots:
+        raise ValueError(
+            f"slot ({bx}, {by}) out of range for a {n_slots}-slot pool")
+    return list(range(slot * bs, (slot + 1) * bs))
 
 
 # ---------------------------------------------------------------------------

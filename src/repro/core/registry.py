@@ -13,7 +13,8 @@ string* and derives every view from the same geometry:
 * :meth:`Topology.allocator`  -> a board allocator
   (:class:`repro.core.allocation.HxMeshAllocator` for HammingMesh /
   HyperX, :class:`~repro.core.allocation.TorusAllocator` for the torus,
-  ``None`` for indirect topologies with no board grid);
+  a shape-free :class:`~repro.core.allocation.PoolAllocator` of
+  4-endpoint slots for indirect topologies with no board grid);
 * :meth:`Topology.profile`    -> :class:`repro.core.commodel.TopologyProfile`
   with alltoall / allreduce / bisection fractions **measured** from the
   flow-level graph (the paper table stays a cross-check, not the source
@@ -69,7 +70,8 @@ from repro.core import commodel
 from repro.core import flowsim as F
 from repro.core import topology as T
 from repro.core import traffic as TR
-from repro.core.allocation import HxMeshAllocator, TorusAllocator
+from repro.core.allocation import (HxMeshAllocator, PoolAllocator,
+                                   TorusAllocator)
 from repro.netsim import engine as NE
 from repro.netsim import schedule as NS
 
@@ -120,25 +122,31 @@ class Topology:
 
     # -- view 3: board allocator (Figs 8-10) ---------------------------------
 
-    def allocator(self) -> HxMeshAllocator | None:
-        """Board allocator for the topology's board grid, or ``None`` where
-        boards are not the allocation unit (fat trees, dragonflies)."""
+    def allocator(self) -> HxMeshAllocator:
+        """Board allocator for the topology's allocation unit: the board
+        grid for HammingMesh / HyperX / torus, and a shape-free
+        :class:`~repro.core.allocation.PoolAllocator` of
+        ``board_size``-endpoint slots for indirect topologies (fat trees,
+        dragonflies) — so every registered family schedules under
+        ``cluster.ClusterSimulator``."""
         if isinstance(self.impl, T.HxMesh):
             return HxMeshAllocator(self.impl.x, self.impl.y)
         if isinstance(self.impl, T.Torus2D):
             return TorusAllocator(self.impl.boards_x, self.impl.boards_y)
-        return None
+        return PoolAllocator(self.num_accelerators // self.board_size)
 
     @property
-    def board_dims(self) -> tuple[int, int] | None:
-        """``(a, b)`` accelerators per allocatable board along x/y
-        (``None`` without a board grid) — lets grid consumers like
-        ``cluster.SimConfig.for_topology`` stay family-agnostic."""
+    def board_dims(self) -> tuple[int, int]:
+        """``(a, b)`` accelerators per allocatable board along x/y — lets
+        grid consumers like ``cluster.SimConfig.for_topology`` stay
+        family-agnostic.  Indirect topologies have no physical board, but
+        their pool slots hold the same 2x2 = 4 accelerators so job sizes
+        mean the same boards everywhere."""
         if isinstance(self.impl, T.HxMesh):
             return self.impl.a, self.impl.b
         if isinstance(self.impl, T.Torus2D):
             return self.impl.board, self.impl.board
-        return None
+        return 2, 2
 
     @property
     def board_size(self) -> int | None:

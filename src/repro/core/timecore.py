@@ -1,0 +1,187 @@
+"""Shared time-domain core: one event queue, one clock, pluggable kinds.
+
+Two simulators in this repo advance a clock through an ordered event
+stream: the fleet scheduler (:mod:`repro.cluster.simulator` — job
+arrivals/completions, board fail/repair churn, probes, preemptions) and
+the fluid collective engine (:mod:`repro.netsim.engine` — phase
+activations interleaved with continuous flow dynamics).  Both used to
+carry their own ``heapq`` plumbing; this module is the single extracted
+core they now share:
+
+* :class:`EventQueue` — a monotonic clock plus a stable priority queue.
+  Events are ``(time, seq, kind, payload)``; ``seq`` is a global
+  insertion counter, so simultaneous events pop in push order (the
+  determinism contract both consumers' seeded reruns rely on).  Event
+  *kinds* are opaque to the queue — ints, strings, enums; consumers
+  register whatever taxonomy they need (``EV_ARRIVAL``/``EV_FINISH``/
+  ``EV_FAIL``/``EV_REPAIR``/``EV_PROBE`` in the cluster,
+  phase-activation events in netsim).
+* :meth:`EventQueue.shift` — re-base every pending event by a constant
+  offset without re-heapifying (a uniform shift preserves heap order).
+  This is the primitive behind netsim's lockstep-repeat fast forward:
+  detecting a periodic cycle and jumping ``k`` repeats is one
+  ``shift(k * dt)``.
+* :class:`EventLoop` — the pop-and-dispatch driver for purely
+  event-driven consumers: handlers register per kind, ``run()`` drains
+  the queue, and an optional ``after_event`` hook fires after every
+  dispatch (the cluster's epoch-boundary detection).  The netsim engine
+  keeps its own drive loop — it interleaves continuous flow integration
+  between events — but runs it over the same :class:`EventQueue`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One scheduled occurrence: a time, a tie-break sequence number, an
+    opaque kind tag, and a consumer payload."""
+
+    time: float
+    seq: int
+    kind: Any
+    payload: Any = None
+
+    def _key(self) -> tuple[float, int]:
+        return (self.time, self.seq)
+
+
+class EventQueue:
+    """A clock + stable min-heap of :class:`Event` records.
+
+    ``now`` only moves forward: :meth:`pop` advances it to the popped
+    event's time, and :meth:`advance` lets continuous-dynamics consumers
+    (netsim's flow integration) move the clock between events.  Pushing
+    an event into the past raises — a simulator that does so has a
+    bookkeeping bug, not a scheduling decision.
+    """
+
+    def __init__(self, t0: float = 0.0):
+        self.now = t0
+        self._heap: list[tuple[float, int, Event]] = []
+        self._seq = 0
+
+    # -- scheduling ----------------------------------------------------------
+
+    def push(self, time: float, kind: Any, payload: Any = None) -> Event:
+        """Schedule an event at ``time`` (>= now); equal times pop in push
+        order.  Sub-epsilon underflows (float dust from draining
+        near-simultaneous events) clamp to ``now``; anything larger is a
+        consumer bug and raises."""
+        if time < self.now:
+            if self.now - time <= 1e-12 * max(abs(self.now), 1.0):
+                time = self.now
+            else:
+                raise ValueError(
+                    f"cannot schedule event at t={time} before now={self.now}")
+        self._seq += 1
+        ev = Event(time=time, seq=self._seq, kind=kind, payload=payload)
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        return ev
+
+    def pop(self) -> Event:
+        """Remove and return the earliest event, advancing the clock.
+        The clock never moves backwards — a consumer that has already
+        :meth:`advance`-d past a near-simultaneous event (netsim drains
+        activations within an epsilon of the continuous clock) keeps its
+        later ``now``."""
+        _, _, ev = heapq.heappop(self._heap)
+        if ev.time > self.now:
+            self.now = ev.time
+        return ev
+
+    # -- inspection ----------------------------------------------------------
+
+    def next_time(self) -> float:
+        """Time of the earliest pending event (``inf`` when empty)."""
+        return self._heap[0][0] if self._heap else float("inf")
+
+    def pending(self) -> list[Event]:
+        """Every pending event in (time, seq) order — a sorted copy; the
+        queue itself is untouched.  Used by netsim's cycle detector to
+        fingerprint the pending phase set."""
+        return [ev for _, _, ev in sorted(self._heap, key=lambda e: e[:2])]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    # -- clock ---------------------------------------------------------------
+
+    def advance(self, t: float) -> float:
+        """Move the clock forward to ``t`` without popping (continuous
+        dynamics between events).  Never moves backwards."""
+        if t > self.now:
+            self.now = t
+        return self.now
+
+    def shift(self, dt: float) -> None:
+        """Add ``dt`` to every pending event's time *and* keep relative
+        order — a uniform shift preserves the heap invariant, so this is
+        O(n) with no re-heapify.  The fast-forward primitive: jumping a
+        periodic cycle by ``k`` repeats is ``advance(now + k*T)`` +
+        ``shift(k*T)``."""
+        self._heap = [
+            (t + dt, seq, dataclasses.replace(ev, time=ev.time + dt))
+            for (t, seq, ev) in self._heap
+        ]
+
+
+class EventLoop:
+    """Pop-and-dispatch driver over one :class:`EventQueue`.
+
+    Handlers register per event kind (``on(kind, fn)``; ``fn(time,
+    payload)``).  ``run()`` drains the queue in (time, seq) order; the
+    optional ``after_event`` hook fires after every dispatched event —
+    the natural place to detect state-change boundaries (the cluster
+    simulator closes its contention-measurement epochs there).
+    """
+
+    def __init__(self, queue: EventQueue | None = None):
+        self.queue = queue if queue is not None else EventQueue()
+        self._handlers: dict[Any, Callable[[float, Any], None]] = {}
+        self.after_event: Callable[[Event], None] | None = None
+
+    @property
+    def now(self) -> float:
+        return self.queue.now
+
+    def on(self, kind: Any, handler: Callable[[float, Any], None]) -> None:
+        """Register the handler for one event kind (last wins)."""
+        self._handlers[kind] = handler
+
+    def push(self, time: float, kind: Any, payload: Any = None) -> Event:
+        return self.queue.push(time, kind, payload)
+
+    def step(self) -> Event | None:
+        """Dispatch the next event (or return ``None`` on an empty
+        queue).  Unregistered kinds raise — silently dropping a
+        simulator event would corrupt every downstream invariant."""
+        if not self.queue:
+            return None
+        ev = self.queue.pop()
+        try:
+            handler = self._handlers[ev.kind]
+        except KeyError:
+            raise ValueError(
+                f"no handler registered for event kind {ev.kind!r}"
+            ) from None
+        handler(ev.time, ev.payload)
+        if self.after_event is not None:
+            self.after_event(ev)
+        return ev
+
+    def run(self, until: float | None = None) -> float:
+        """Drain the queue (optionally only events with ``time <=
+        until``); returns the final clock."""
+        while self.queue:
+            if until is not None and self.queue.next_time() > until:
+                break
+            self.step()
+        return self.queue.now

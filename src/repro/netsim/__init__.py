@@ -11,6 +11,7 @@ the ``coll=`` scenario-grammar leg.
 from repro.netsim.engine import (FootprintCache, SimReport, flow_footprints,
                                  simulate_schedule, steady_state_fraction,
                                  waterfill)
+from repro.netsim.replay import contention_fractions, steady_iteration_times
 from repro.netsim.schedule import (COLLECTIVE_FAMILIES, CollectiveFamily,
                                    CollectiveSpec, CommSchedule, Phase,
                                    collective_grammar, lower,
@@ -27,6 +28,7 @@ __all__ = [
     "Phase",
     "SimReport",
     "collective_grammar",
+    "contention_fractions",
     "flow_footprints",
     "lower",
     "merge_schedules",
@@ -35,6 +37,7 @@ __all__ = [
     "ring_order",
     "schedule_for_endpoints",
     "simulate_schedule",
+    "steady_iteration_times",
     "steady_state_fraction",
     "waterfill",
 ]

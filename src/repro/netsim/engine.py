@@ -38,11 +38,11 @@ allreduce lands within 5% of the α-β ``commodel`` prediction.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 
 import numpy as np
 
 from repro.core import flowsim as F
+from repro.core.timecore import EventQueue
 
 try:
     import scipy.sparse as _sp
@@ -352,6 +352,12 @@ def steady_state_fraction(net: F.Network, demand,
 # Event-driven schedule simulation
 # ---------------------------------------------------------------------------
 
+# The one netsim event kind on the shared time core: a phase (re-)activation.
+# Flow finishes are not queue events — they emerge from the continuous
+# dynamics between events (the engine integrates rates to the next
+# completion instant).
+EV_PHASE = "phase"
+
 
 @dataclasses.dataclass
 class SimReport:
@@ -461,10 +467,13 @@ def simulate_schedule(
     active = np.zeros(n_flows, dtype=bool)
     rate_cache: dict[bytes, np.ndarray] = {}
     timeline: list[tuple[float, float, dict[str, float]]] = []
-    heap: list[tuple[float, int]] = []  # (activation time, phase)
+    # shared time core: the queue holds pending phase activations
+    # (kind EV_PHASE, payload = phase index); the continuous flow
+    # dynamics advance the same clock between events
+    queue = EventQueue()
     for i in range(n_ph):
         if deps_left[i] == 0:
-            heapq.heappush(heap, (alpha, i))
+            queue.push(alpha, EV_PHASE, i)
     n_events = n_waterfills = 0
     n_unroutable = int(n_flows - routable.sum()) if n_flows else 0
     t = 0.0
@@ -492,13 +501,13 @@ def simulate_schedule(
     def _phase_repeat_done(i: int, now: float) -> None:
         repeat_left[i] -= 1
         if repeat_left[i] > 0:
-            heapq.heappush(heap, (now + alpha, i))
+            queue.push(now + alpha, EV_PHASE, i)
             return
         ended[i] = now
         for c in children[i]:
             deps_left[c] -= 1
             if deps_left[c] == 0:
-                heapq.heappush(heap, (now + alpha, c))
+                queue.push(now + alpha, EV_PHASE, c)
 
     guard = 0
     # every loop iteration reaches an activation or retires >= 1 flow:
@@ -512,16 +521,18 @@ def simulate_schedule(
     # deterministic dynamics), the remaining repeats are periodic — jump
     # them in one step instead of simulating 2(p-1) identical ring steps.
     cycle_mark: tuple | None = None  # (ids, offsets, t, repeats snapshot)
-    while heap or active.any():
+    while queue or active.any():
         guard += 1
         if guard > max_events:
             raise RuntimeError(
                 f"netsim event loop did not terminate (> {max_events} "
                 f"events) — schedule {schedule.name!r}")
         has_active = bool(active.any())
-        if not has_active and heap:
-            ids = tuple(sorted(i for _, i in heap))
-            offs = tuple(ti - t for ti, i in sorted(heap, key=lambda e: e[1]))
+        if not has_active and queue:
+            pend = queue.pending()
+            ids = tuple(sorted(ev.payload for ev in pend))
+            offs = tuple(ev.time - t
+                         for ev in sorted(pend, key=lambda e: e.payload))
             if cycle_mark is not None:
                 m_ids, m_offs, m_t, m_rl = cycle_mark
                 periodic = (
@@ -545,9 +556,9 @@ def simulate_schedule(
                         slots = phase_slots[i]
                         delivered[slots] += k * fbytes[slots]
                     repeat_left[list(ids)] -= k
-                    heap = [(ti + k * dt_cycle, i) for ti, i in heap]
-                    heapq.heapify(heap)
+                    queue.shift(k * dt_cycle)
                     t += k * dt_cycle
+                    queue.advance(t)
                     cycle_mark = None
                 else:
                     cycle_mark = (ids, offs, t,
@@ -565,7 +576,7 @@ def simulate_schedule(
                 cached[idx] = waterfill(W[idx])
                 rate_cache[sig] = cached
             rates = cached
-        t_act = heap[0][0] if heap else np.inf
+        t_act = queue.next_time()
         if has_active:
             r = rates[active] * link_bw
             with np.errstate(divide="ignore"):
@@ -578,7 +589,7 @@ def simulate_schedule(
                     "pending activations")
             t_next = min(t + dt_fin, t_act)
         else:
-            if not heap:
+            if not queue:
                 break
             t_next = t_act
         if has_active and t_next > t:
@@ -597,6 +608,7 @@ def simulate_schedule(
             delivered[active] += adv
             remaining[active] -= adv
         t = t_next
+        queue.advance(t)
         n_events += 1
         # completions (snap residual bytes so conservation is exact)
         if has_active:
@@ -613,9 +625,9 @@ def simulate_schedule(
                     flows_left[i] -= done
                     if flows_left[i] == 0:
                         _phase_repeat_done(int(i), t)
-        while heap and heap[0][0] <= t + 1e-18:
-            _, i = heapq.heappop(heap)
-            _activate(i, t)
+        while queue and queue.next_time() <= t + 1e-18:
+            ev = queue.pop()
+            _activate(ev.payload, t)
 
     spans = [(ph.name, float(started[i]) if not np.isnan(started[i]) else 0.0,
               float(ended[i]) if not np.isnan(ended[i]) else t)

@@ -1,0 +1,114 @@
+"""Continuous collective replay: steady-state sharing of looping schedules.
+
+The cluster simulator needs each running job's iteration time *at every
+instant of its lifetime*, under whatever co-tenant traffic shares the
+fabric — thousands of evaluations per run, far too many for the full
+event-driven engine.  This module computes the fluid steady state
+directly: a training job loops its collective, so in steady state every
+phase's flow set is continuously active, and the fabric settles into
+**one max-min fair waterfill over every phase flow of every co-tenant**
+(the engine's rate model, without the event machinery).
+
+From the joint rates, one iteration of a schedule costs its longest
+dependency path where each phase contributes ``repeat · (α + slowest
+flow's bytes/rate)`` — exact for single-stage ring/bidir lowerings (the
+same flow pairs repeat 2(p−1) times, so the steady active set *is* the
+per-step active set) and an upper bound on self-contention for
+multi-stage DAGs (sequential phases are treated as concurrent).
+
+The contention fraction of a tenant is ``isolated / contended`` iteration
+time — 1.0 when co-tenants share none of its links (the HammingMesh
+sub-mesh isolation claim), < 1.0 when they collide.  Cross-checks in
+``tests/test_multitenant.py`` pin this against full event-driven
+simulation of co-scheduled tenants.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import flowsim as F
+from repro.netsim.engine import FootprintCache, waterfill
+
+
+def steady_iteration_times(
+    net: F.Network,
+    schedules: dict,
+    cache: FootprintCache | None = None,
+    link_bw: float = 1.0,
+) -> dict:
+    """Per-schedule steady-state iteration time under fair sharing.
+
+    ``schedules`` maps an opaque key (job id, tenant name) to a
+    :class:`repro.netsim.schedule.CommSchedule`; every phase flow of every
+    schedule enters one waterfill, and each schedule's iteration time is
+    its longest dependency path at those rates.  Flows with no route
+    (self/disconnected) move instantly; a schedule with no flows takes
+    ``0.0``.  Pass a single-entry dict for the isolated baseline —
+    ``isolated / contended`` is the contention fraction.
+    """
+    foot = cache if cache is not None else FootprintCache(net)
+    pairs: list[tuple[int, int]] = []
+    fbytes: list[float] = []
+    slots: dict[tuple, list[int]] = {}
+    for key, sched in schedules.items():
+        for pi, ph in enumerate(sched.phases):
+            ids = []
+            for (s, t, b) in ph.flows:
+                ids.append(len(pairs))
+                pairs.append((int(s), int(t)))
+                fbytes.append(float(b))
+            slots[(key, pi)] = ids
+    if pairs:
+        W = foot.matrix(pairs)
+        rates = waterfill(W) * link_bw
+    else:
+        rates = np.zeros(0)
+    fb = np.asarray(fbytes)
+
+    out = {}
+    for key, sched in schedules.items():
+        durs: list[float] = []
+        for pi, ph in enumerate(sched.phases):
+            step = 0.0
+            for s in slots[(key, pi)]:
+                r = rates[s]
+                if fb[s] > 0 and np.isfinite(r) and r > 0:
+                    step = max(step, fb[s] / r)
+            durs.append(max(1, ph.repeat) * (sched.alpha + step))
+        # longest path over the phase DAG (memoized; deps may point anywhere)
+        finish: dict[int, float] = {}
+
+        def _finish(pi: int, _d=durs, _p=sched.phases, _f=finish) -> float:
+            if pi in _f:
+                return _f[pi]
+            _f[pi] = 0.0  # cycle guard: engine would deadlock anyway
+            start = max((_finish(d) for d in _p[pi].deps), default=0.0)
+            _f[pi] = start + _d[pi]
+            return _f[pi]
+
+        out[key] = float(max((_finish(pi) for pi in range(len(sched.phases))),
+                             default=0.0))
+    return out
+
+
+def contention_fractions(
+    net: F.Network,
+    schedules: dict,
+    cache: FootprintCache | None = None,
+    link_bw: float = 1.0,
+) -> dict:
+    """Per-tenant ``(contended, isolated, fraction)`` iteration times: one
+    joint waterfill with every tenant active, then each tenant alone on
+    the same fabric.  ``fraction = isolated / contended`` (1.0 for a
+    tenant with a zero-cost schedule)."""
+    foot = cache if cache is not None else FootprintCache(net)
+    joint = steady_iteration_times(net, schedules, cache=foot,
+                                   link_bw=link_bw)
+    out = {}
+    for key, sched in schedules.items():
+        iso = steady_iteration_times(net, {key: sched}, cache=foot,
+                                     link_bw=link_bw)[key]
+        cont = joint[key]
+        out[key] = (cont, iso, iso / cont if cont > 0 else 1.0)
+    return out

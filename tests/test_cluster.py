@@ -49,7 +49,7 @@ def _replay_audit(audit, x, y):
                 assert 0 <= b[0] < y and 0 <= b[1] < x
                 occupied[b] = ev.jid
             assert A.is_virtual_subhxmesh(ev.boards)
-        elif ev.kind == "release":
+        elif ev.kind in ("release", "preempt"):
             for b in ev.boards:
                 assert occupied.pop(b) == ev.jid
         elif ev.kind == "fail":
@@ -91,12 +91,27 @@ def test_trace_jobs_carry_scenario_strings(tmp_path):
     # paper-name topologies have no registry spec to address
     assert all(j.scenario == ""
                for j in poisson_trace(3, 8, 8, seed=0, topology="Hx2Mesh"))
-    # a legacy line without the scenario key loads with the default
+    # priority/deadline default-omit: the file never mentions the new keys
+    # at their defaults, so a pre-priority (PR-5 era) trace file
+    # re-serializes byte-identically
+    text = path.read_text()
+    assert "priority" not in text and "deadline" not in text
+    path2 = tmp_path / "roundtrip.jsonl"
+    save_trace(load_trace(str(path)), str(path2))
+    assert path2.read_text() == text
+    # non-default values do serialize and survive the round-trip
+    hot = TraceJob(jid=7, arrival=0.0, u=1, v=1, duration=1.0,
+                   priority=2, deadline=9.5)
+    save_trace([hot], str(path2))
+    assert "priority" in path2.read_text()
+    assert load_trace(str(path2)) == [hot]
+    # a legacy line without the scenario key loads with the defaults
     with open(path, "a") as fh:
         fh.write('{"jid": 99, "arrival": 1.0, "u": 1, "v": 1, '
                  '"duration": 5.0, "workload": "DLRM", "iterations": 3}\n')
     legacy = [j for j in load_trace(str(path)) if j.jid == 99]
     assert legacy and legacy[0].scenario == ""
+    assert legacy[0].priority == 0 and legacy[0].deadline is None
 
 
 def test_trace_determinism_and_shape_fit():
@@ -330,3 +345,200 @@ def test_bandwidth_probes_record_isolation():
     assert res.fragmentation_samples
     for _t, frac in res.fragmentation_samples:
         assert 0.0 <= frac <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# priorities, deadlines, preemption (unified time core)
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_requeues_victim_with_remaining_work():
+    """A high-priority arrival that cannot place evicts a strictly-lower
+    priority tenant; the victim requeues at the front with its remaining
+    service time and finishes late by exactly the preemptor's runtime."""
+    from repro.cluster.policies import GreedyPolicy
+
+    trace = [
+        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=100.0),
+        TraceJob(jid=1, arrival=5.0, u=2, v=2, duration=10.0, priority=1),
+    ]
+    pol = GreedyPolicy(name="preempt", preempt=True)
+    res = ClusterSimulator(SimConfig(4, 4, seed=0), pol).run(trace)
+    _replay_audit(res.audit, 4, 4)
+    r0, r1 = res.records[0], res.records[1]
+    assert r1.start == pytest.approx(5.0)  # preemptor runs immediately
+    assert r1.end == pytest.approx(15.0)
+    assert r0.n_preemptions == 1
+    # victim ran 5s, requeued with 95s left, resumes when the grid frees
+    assert r0.status == "finished"
+    assert r0.end == pytest.approx(110.0)
+    assert res.n_preemptions == 1
+    assert res.summary()["preempted_jobs"] == 1.0
+    assert any(ev.kind == "preempt" and ev.jid == 0 for ev in res.audit)
+
+
+def test_no_preemption_when_job_fits_or_flag_off():
+    """Preemption only fires when needed (a fitting job never evicts) and
+    never fires with the policy flag off (priority then only reorders the
+    queue)."""
+    from repro.cluster.policies import GreedyPolicy
+
+    trace = [
+        TraceJob(jid=0, arrival=0.0, u=2, v=2, duration=100.0),
+        TraceJob(jid=1, arrival=5.0, u=2, v=2, duration=10.0, priority=1),
+    ]
+    res = ClusterSimulator(
+        SimConfig(4, 4, seed=0), GreedyPolicy(name="p", preempt=True)
+    ).run(trace)
+    assert res.n_preemptions == 0  # both fit side by side
+    trace2 = [
+        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=100.0),
+        TraceJob(jid=1, arrival=5.0, u=2, v=2, duration=10.0, priority=1),
+    ]
+    res2 = ClusterSimulator(
+        SimConfig(4, 4, seed=0), GreedyPolicy(name="np", preempt=False)
+    ).run(trace2)
+    assert res2.n_preemptions == 0
+    assert res2.records[1].start == pytest.approx(100.0)  # waits its turn
+
+
+def test_preemption_never_evicts_equal_or_higher_priority():
+    """Victims must be *strictly* lower priority — an equal-priority job
+    blocks and the preemptor waits like anyone else."""
+    from repro.cluster.policies import GreedyPolicy
+
+    trace = [
+        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=50.0, priority=1),
+        TraceJob(jid=1, arrival=5.0, u=4, v=4, duration=10.0, priority=1),
+    ]
+    res = ClusterSimulator(
+        SimConfig(4, 4, seed=0), GreedyPolicy(name="p", preempt=True)
+    ).run(trace)
+    assert res.n_preemptions == 0
+    assert res.records[1].start == pytest.approx(50.0)
+
+
+def test_deadline_miss_accounting():
+    """job_stats counts deadline jobs and misses; a job that finished late
+    (or never finished) is missed, deadline keys appear only when the trace
+    carries deadlines."""
+    trace = [
+        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=10.0, deadline=100.0),
+        TraceJob(jid=1, arrival=0.1, u=4, v=4, duration=10.0, deadline=5.0),
+        TraceJob(jid=2, arrival=0.2, u=1, v=1, duration=1.0),  # no deadline
+    ]
+    res = simulate(trace, SimConfig(4, 4, seed=0), POLICIES["greedy"])
+    s = res.summary()
+    assert s["deadline_jobs"] == 2.0
+    assert s["deadline_missed"] == 1.0  # jid 1 waits for jid 0, ends ~20
+    assert s["deadline_miss_rate"] == pytest.approx(0.5)
+    # a deadline-free run has no deadline keys at all
+    s2 = simulate([trace[2]], SimConfig(4, 4, seed=0),
+                  POLICIES["greedy"]).summary()
+    assert not any(k.startswith("deadline") for k in s2)
+
+
+def test_trace_generator_priority_deadline_knobs():
+    """Generator knobs draw priorities/deadlines only when enabled, so
+    legacy seeds reproduce identical traces with the knobs off."""
+    base = poisson_trace(30, 8, 8, seed=5)
+    again = poisson_trace(30, 8, 8, seed=5, priorities=None,
+                          deadline_slack=None)
+    assert base == again
+    hot = poisson_trace(30, 8, 8, seed=5,
+                        priorities=[(0, 0.7), (1, 0.3)], deadline_slack=4.0)
+    assert {j.priority for j in hot} == {0, 1}
+    for j in hot:
+        assert j.deadline == pytest.approx(j.arrival + 4.0 * j.duration)
+
+
+def test_priority_orders_queue_ahead_of_fifo():
+    """With a backlog, a later-arriving high-priority job starts before
+    earlier low-priority peers even without preemption."""
+    trace = [
+        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=10.0),
+        TraceJob(jid=1, arrival=1.0, u=4, v=4, duration=10.0),
+        TraceJob(jid=2, arrival=2.0, u=4, v=4, duration=10.0, priority=5),
+    ]
+    res = simulate(trace, SimConfig(4, 4, seed=0), POLICIES["fifo"])
+    assert res.records[2].start < res.records[1].start
+
+
+# ---------------------------------------------------------------------------
+# pool allocator under the scheduler (ft/df specs)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_topology_runs_under_scheduler():
+    """Fat-tree specs schedule through the shape-free slot pool: shapes are
+    ignored, only capacity counts, and the audit conservation laws hold on
+    the 1-row grid."""
+    cfg = SimConfig.for_topology("ft256", seed=2)
+    assert (cfg.x, cfg.y) == (64, 1)
+    trace = poisson_trace(40, 8, 8, load=1.2, seed=2)  # shapes up to 8x8
+    res = simulate(trace, cfg, POLICIES["greedy"])
+    _replay_audit(res.audit, cfg.x, cfg.y)
+    assert all(r.status == "finished" for r in res.records.values())
+    # a 9x9=81-slot request exceeds the 64-slot pool and is rejected
+    res2 = simulate([TraceJob(jid=0, arrival=0.0, u=9, v=9, duration=1.0)],
+                    cfg, POLICIES["greedy"])
+    assert res2.records[0].status == "rejected"
+
+
+# ---------------------------------------------------------------------------
+# continuous replay (measured contention)
+# ---------------------------------------------------------------------------
+
+
+def test_probe_timeline_completion_sample_covers_short_jobs():
+    """Satellite fix: a job that starts and completes between two probe
+    instants still gets one bw_timeline point, recorded at completion."""
+    cfg = SimConfig.for_topology("hx2-4x4", probe_interval=1e6, seed=1,
+                                 probe_collective="ring:s16MiB")
+    trace = poisson_trace(10, cfg.x, cfg.y, load=1.0, seed=1)
+    res = simulate(trace, cfg, POLICIES["greedy"])
+    finished = [r for r in res.records.values() if r.status == "finished"]
+    assert finished
+    for rec in finished:
+        assert rec.bw_timeline, f"jid {rec.job.jid} went unobserved"
+
+
+def test_replay_measures_full_isolation_on_hxmesh():
+    """Continuous replay on HammingMesh: disjoint virtual sub-meshes share
+    no links, so every job's measured contention fraction is 1.0 and the
+    epoch series covers each job's placed lifetime."""
+    cfg = SimConfig.for_topology("hx2-8x8", seed=1,
+                                 replay_collective="ring:s1MiB")
+    trace = poisson_trace(15, cfg.x, cfg.y, load=1.0, seed=3)
+    res = simulate(trace, cfg, POLICIES["greedy"])
+    assert res.n_epochs > 0
+    s = res.summary()
+    assert s["contention_mean"] == pytest.approx(1.0)
+    assert s["contention_min"] == pytest.approx(1.0)
+    assert s["jain_fairness"] == pytest.approx(1.0)
+    for rec in res.records.values():
+        if rec.status != "finished" or rec.job.size < 1:
+            continue
+        assert rec.iter_samples
+        assert rec.contention_fraction() == pytest.approx(1.0)
+        # epoch series tiles the job's placed lifetime without gaps
+        total = sum(dt for (_t0, dt, _c, _i) in rec.iter_samples)
+        assert total == pytest.approx(rec.end - rec.start, rel=1e-9)
+        for (_t0, _dt, cont, iso) in rec.iter_samples:
+            assert iso <= cont + 1e-12
+
+
+def test_replay_determinism_and_ladder_unchanged_by_replay():
+    """Replay is measurement, not dynamics: switching it on changes no
+    scheduling decision (same audit log), and two replay runs agree."""
+    trace = poisson_trace(20, 8, 8, load=1.3, seed=6, topology="hx2-8x8")
+    cfg_off = SimConfig.for_topology("hx2-8x8", seed=6)
+    cfg_on = SimConfig.for_topology("hx2-8x8", seed=6,
+                                    replay_collective="ring:s1MiB")
+    res_off = simulate(trace, cfg_off, POLICIES["greedy"])
+    res_on = simulate(trace, cfg_on, POLICIES["greedy"])
+    assert res_off.audit == res_on.audit
+    assert res_off.utilization() == res_on.utilization()
+    res_on2 = simulate(trace, cfg_on, POLICIES["greedy"])
+    assert [r.iter_samples for r in res_on.records.values()] == [
+        r.iter_samples for r in res_on2.records.values()]

@@ -16,7 +16,8 @@ import pytest
 from repro.core import commodel as C
 from repro.core import registry as R
 from repro.core import topology as T
-from repro.core.allocation import HxMeshAllocator, TorusAllocator
+from repro.core.allocation import (HxMeshAllocator, PoolAllocator,
+                                   TorusAllocator)
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # benchmarks/
 
@@ -134,9 +135,9 @@ def test_four_view_invariant(spec):
     net = t.network()
     assert len(net.active_endpoints()) == n
     alloc = t.allocator()
-    if alloc is None:  # indirect topologies: no board grid to allocate
-        assert t.family in ("ft", "df")
-        assert t.board_size is None
+    if t.family in ("ft", "df"):  # indirect: shape-free slot pool
+        assert isinstance(alloc, PoolAllocator)
+        assert alloc.x * alloc.y * t.board_size == (n // t.board_size) * t.board_size
     else:
         assert alloc.x * alloc.y * t.board_size == n
 
@@ -150,7 +151,12 @@ def test_network_failures_shrink_active_set():
 def test_allocator_families():
     assert isinstance(R.parse("hx2-4x4").allocator(), HxMeshAllocator)
     assert isinstance(R.parse("torus-8x8").allocator(), TorusAllocator)
-    assert R.parse("ft64").allocator() is None
+    pool = R.parse("ft64").allocator()
+    assert isinstance(pool, PoolAllocator)
+    assert (pool.x, pool.y) == (16, 1)  # 64 endpoints / 4-endpoint slots
+    # shape-free: any u x v with u*v slots free fits, regardless of grid shape
+    assert pool.fits_empty(16, 1) and pool.fits_empty(4, 4)
+    assert not pool.fits_empty(17, 1)
 
 
 def test_torus_allocator_contiguity():
@@ -232,13 +238,17 @@ def test_measured_profile_costs_are_spec_scale():
     assert p.cost_small < C.PROFILES["Hx2Mesh"].cost_small / 2
 
 
-def test_simconfig_rejects_gridless_topology():
+def test_simconfig_schedules_pool_topologies():
+    """Indirect (gridless) topologies schedule through the shape-free slot
+    pool: ``for_topology`` derives a 1-row grid of 4-accelerator slots, and
+    a hand-built config whose grid disagrees with the spec still fails."""
     from repro.cluster import SimConfig
     from repro.cluster.simulator import ClusterSimulator
     from repro.cluster.policies import GreedyPolicy
 
-    with pytest.raises(ValueError):
-        SimConfig.for_topology("ft1024")
+    cfg = SimConfig.for_topology("ft1024")
+    assert (cfg.x, cfg.y) == (256, 1)
+    assert (cfg.board_a, cfg.board_b) == (2, 2)
     with pytest.raises(ValueError):  # field set directly, bypassing factory
         ClusterSimulator(SimConfig(4, 4, topology="ft1024"), GreedyPolicy())
 

@@ -215,9 +215,17 @@ def test_unknown_failure_descriptor_lists_grammar():
         topo.network(failures=[("bogus", 1)])
 
 
-def test_boards_clause_needs_board_grid():
-    with pytest.raises(ValueError, match="board failures"):
-        R.parse("ft64").network(failures="fail=boards:2")
+def test_boards_clause_resolves_to_pool_slots():
+    """Gridless fabrics map ``boards`` failures onto the scheduler's pool
+    slots (4 consecutive endpoints each), so churn scenarios address every
+    family; a slot coordinate past the pool still fails loudly."""
+    net = R.parse("ft64").network(failures="fail=boards:2:seed3")
+    base = R.parse("ft64").network()
+    # two failed slots = 8 endpoints with their injection links removed
+    degraded = sum(1 for e in range(base.n_endpoints) if not net.adj[e])
+    assert degraded == 8
+    with pytest.raises(ValueError, match="slot"):
+        F.board_nodes(base, 99, 0)
 
 
 def test_scenario_fraction_degrades_under_failures():

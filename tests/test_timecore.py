@@ -1,0 +1,146 @@
+"""Unit tests for the shared time-domain core (`repro.core.timecore`).
+
+Both the netsim engine and the cluster scheduler run on this one event
+queue/clock, so its contracts — (time, seq) ordering, monotone clock,
+uniform shift, handler dispatch — are what make the two simulators'
+results reproducible and mergeable.
+"""
+
+import math
+
+import pytest
+
+from repro.core.timecore import Event, EventLoop, EventQueue
+
+
+# ---------------------------------------------------------------------------
+# EventQueue
+# ---------------------------------------------------------------------------
+
+
+def test_queue_orders_by_time_then_insertion():
+    q = EventQueue()
+    q.push(2.0, "b", "late")
+    q.push(1.0, "a", "early")
+    q.push(1.0, "a", "early-second")  # same instant: insertion order wins
+    got = [q.pop().payload for _ in range(3)]
+    assert got == ["early", "early-second", "late"]
+
+
+def test_queue_clock_is_monotone():
+    q = EventQueue()
+    q.push(5.0, "x", None)
+    q.push(3.0, "x", None)
+    assert q.now == 0.0
+    assert q.pop().time == 3.0 and q.now == 3.0
+    assert q.pop().time == 5.0 and q.now == 5.0
+    assert q.next_time() == math.inf
+    assert not q
+
+
+def test_queue_rejects_past_pushes_but_clamps_float_dust():
+    q = EventQueue()
+    q.advance(10.0)
+    with pytest.raises(ValueError):
+        q.push(9.0, "x", None)
+    # sub-epsilon underflow from float accumulation clamps to `now`
+    q.push(10.0 - 1e-13, "x", "dust")
+    ev = q.pop()
+    assert ev.time == 10.0 and ev.payload == "dust"
+
+
+def test_queue_pop_never_moves_clock_backwards():
+    q = EventQueue()
+    q.push(4.0, "x", None)
+    q.advance(6.0)  # external fast-forward past the pending event
+    ev = q.pop()
+    assert ev.time == 4.0
+    assert q.now == 6.0  # clock stays at the fast-forwarded instant
+
+
+def test_queue_shift_rebases_pending_events():
+    q = EventQueue()
+    q.push(1.0, "x", "a")
+    q.push(2.5, "x", "b")
+    q.shift(10.0)
+    assert [ev.time for ev in q.pending()] == [11.0, 12.5]
+    assert [ev.payload for ev in q.pending()] == ["a", "b"]
+    # relative order (and seq tie-break) survives the shift
+    assert q.pop().payload == "a"
+
+
+def test_queue_pending_is_a_sorted_snapshot():
+    q = EventQueue()
+    q.push(3.0, "x", "c")
+    q.push(1.0, "x", "a")
+    pend = q.pending()
+    assert [ev.payload for ev in pend] == ["a", "c"]
+    pend.clear()  # mutating the snapshot must not touch the queue
+    assert len(q) == 2
+
+
+def test_event_is_immutable():
+    ev = Event(1.0, 0, "k", None)
+    with pytest.raises(AttributeError):
+        ev.time = 2.0
+
+
+# ---------------------------------------------------------------------------
+# EventLoop
+# ---------------------------------------------------------------------------
+
+
+def test_loop_dispatches_by_kind_in_time_order():
+    loop = EventLoop()
+    seen = []
+    loop.on("a", lambda t, p: seen.append(("a", t, p)))
+    loop.on("b", lambda t, p: seen.append(("b", t, p)))
+    loop.push(2.0, "b", 20)
+    loop.push(1.0, "a", 10)
+    t_end = loop.run()
+    assert seen == [("a", 1.0, 10), ("b", 2.0, 20)]
+    assert t_end == 2.0 and loop.now == 2.0
+
+
+def test_loop_handlers_may_push_future_events():
+    loop = EventLoop()
+    seen = []
+
+    def chain(t, n):
+        seen.append((t, n))
+        if n < 3:
+            loop.push(t + 1.0, "tick", n + 1)
+
+    loop.on("tick", chain)
+    loop.push(0.0, "tick", 0)
+    loop.run()
+    assert seen == [(0.0, 0), (1.0, 1), (2.0, 2), (3.0, 3)]
+
+
+def test_loop_run_until_stops_before_later_events():
+    loop = EventLoop()
+    seen = []
+    loop.on("x", lambda t, p: seen.append(t))
+    for t in (1.0, 2.0, 5.0):
+        loop.push(t, "x", None)
+    loop.run(until=3.0)
+    assert seen == [1.0, 2.0]
+    assert len(loop.queue) == 1  # the t=5 event is still pending
+
+
+def test_loop_unregistered_kind_raises():
+    loop = EventLoop()
+    loop.push(1.0, "mystery", None)
+    with pytest.raises(ValueError, match="mystery"):
+        loop.run()
+
+
+def test_loop_after_event_hook_sees_every_event():
+    loop = EventLoop()
+    loop.on("x", lambda t, p: None)
+    hooked = []
+    loop.after_event = lambda ev: hooked.append((ev.time, ev.kind))
+    loop.push(1.0, "x", None)
+    loop.push(2.0, "x", None)
+    loop.run()
+    assert hooked == [(1.0, "x"), (2.0, "x")]
