@@ -1,0 +1,137 @@
+"""packetsim quick suite: cycle-level fidelity vs the fluid tier.
+
+Three scenario groups:
+
+* ``ratio/*`` — matched fluid-vs-packet saturation fractions on small
+  torus and Hx2 fabrics, addressed through the registry's ``fidelity=``
+  scenario leg.  The ratio column is the congestion penalty the fluid
+  tier cannot see; on switched fabrics it stays near 1, on the torus it
+  grows with size (the seed of the paper's Table II ~3x gap).
+* ``incast/*`` — the k-to-1 hotspot microbenchmark (``incast:k8``): the
+  packet engine resolves the congestion tree that fluid max-min
+  fair-share abstracts away, visible as queueing latency (p99 >> mean).
+* ``calibrated/*`` — the distilled rate cap applied at paper scale:
+  the torus-32x32 alltoall row of Table II at fluid vs calibrated
+  fidelity against the paper's packet-level value.
+
+The summary asserts ``torus_gap_measured``: the calibrated fraction
+lands strictly between the paper value and the raw fluid value, and
+strictly closer to the paper than fluid is — the Table II torus gap
+explained by measurement (see ``repro/packetsim/distill.py``) instead
+of a hard-coded tolerance band.
+"""
+
+import time
+
+from repro.core import commodel as C
+from repro.core import registry as R
+from repro.packetsim import PacketConfig, saturation_fraction
+
+from benchmarks import scenarios as S
+
+SUITE = "packetsim"
+
+RATIO_SPECS = ("torus-4x4", "torus-6x6", "torus-8x8", "hx2-2x2", "hx2-4x4")
+INCAST_SPECS = ("torus-8x8", "hx2-4x4")
+CAL_SPEC = "torus-32x32"
+
+
+def scenarios(ctx: S.RunContext) -> list[S.Scenario]:
+    out = [
+        S.make(SUITE, f"ratio/{spec}",
+               scenario=f"{spec}/alltoall/fidelity=packet", kind="ratio")
+        for spec in RATIO_SPECS
+    ]
+    out += [
+        S.make(SUITE, f"incast/{spec}",
+               scenario=f"{spec}/incast/fidelity=packet", kind="incast")
+        for spec in INCAST_SPECS
+    ]
+    out.append(S.make(SUITE, f"calibrated/{CAL_SPEC}",
+                      scenario=f"{CAL_SPEC}/alltoall/fidelity=calibrated",
+                      kind="calibrated"))
+    return out
+
+
+def _config(ctx: S.RunContext) -> PacketConfig:
+    # quick mode shortens the measurement window; the ratio signal is
+    # already stable at 1k cycles on these fabric sizes
+    if ctx.quick:
+        return PacketConfig(warmup=300, measure=1000)
+    return PacketConfig()
+
+
+def compute(sc: S.Scenario, ctx: S.RunContext) -> list[dict]:
+    kind = sc.opts["kind"]
+    parsed = sc.parsed()
+    if kind == "calibrated":
+        fluid = R.measured_fraction(f"{sc.topology}/{sc.pattern}")
+        cal = R.measured_fraction(sc.scenario)
+        paper = C.PAPER_TABLE2_BANDWIDTH[parsed.topology.table_name][
+            "alltoall"]
+        return [{
+            "kind": kind,
+            "endpoints": parsed.topology.num_accelerators,
+            "fluid": round(fluid, 6),
+            "calibrated": round(cal, 6),
+            "paper": paper,
+            "err_fluid": round(fluid / paper, 4),
+            "err_calibrated": round(cal / paper, 4),
+        }]
+    net = parsed.network()
+    dem = parsed.traffic.demand(net)
+    lpe = parsed.topology.links_per_endpoint
+    t0 = time.time()
+    sat = saturation_fraction(net, dem, config=_config(ctx),
+                              links_per_endpoint=lpe)
+    wall = time.time() - t0
+    row = {
+        "kind": kind,
+        "endpoints": int(len(net.active_endpoints())),
+        "packet": round(sat.fraction, 6),
+        "latency_mean": round(sat.latency_mean, 2),
+        "latency_p99": round(sat.latency_p99, 2),
+        "max_voq": sat.max_voq,
+        "wall_ms": round(wall * 1e3, 1),
+    }
+    if kind == "ratio":
+        fluid = R.measured_fraction(f"{sc.topology}/{sc.pattern}")
+        row["fluid"] = round(fluid, 6)
+        row["ratio"] = round(fluid / sat.fraction, 4) if sat.fraction else None
+    return [row]
+
+
+def summarize(results: list[tuple[S.Scenario, list[dict]]],
+              ctx: S.RunContext) -> list[dict]:
+    ratios = [r for sc, out in results for r in out if r["kind"] == "ratio"]
+    incast = [r for sc, out in results for r in out if r["kind"] == "incast"]
+    cal = next((r for sc, out in results for r in out
+                if r["kind"] == "calibrated"), None)
+    rows = []
+    if ratios:
+        rows.append({
+            "kind": "ratio",
+            # the packet engine never beats the fluid upper bound by more
+            # than instrument noise, and the torus penalty exceeds hx's
+            "fluid_upper_bounds": all(r["ratio"] >= 0.95 for r in ratios),
+            "max_ratio": max(r["ratio"] for r in ratios),
+        })
+    if incast:
+        rows.append({
+            "kind": "incast",
+            # the congestion tree shows up as a heavy queueing tail
+            "tail_visible": all(
+                r["latency_p99"] > 1.5 * r["latency_mean"] for r in incast),
+        })
+    if cal is not None:
+        gap_fluid = abs(cal["fluid"] - cal["paper"])
+        gap_cal = abs(cal["calibrated"] - cal["paper"])
+        rows.append({
+            "kind": "calibrated",
+            "torus_gap_measured": bool(
+                cal["paper"] < cal["calibrated"] < cal["fluid"]
+                and gap_cal < gap_fluid),
+            "fluid_over_paper": round(cal["err_fluid"], 4),
+            "calibrated_over_paper": round(cal["err_calibrated"], 4),
+        })
+    return rows

@@ -39,8 +39,8 @@ def _suite_registry(args):
 
     from benchmarks import (cluster_sched, fig8_utilization, fig10_failures,
                             fig13_allreduce, fig15_workloads, flowsim_micro,
-                            multitenant, netsim_bench, roofline,
-                            table2_bandwidth, table2_cost)
+                            multitenant, netsim_bench, packetsim_bench,
+                            roofline, table2_bandwidth, table2_cost)
 
     suites = {
         "table2_cost": table2_cost,
@@ -53,6 +53,7 @@ def _suite_registry(args):
         "flowsim_micro": flowsim_micro,
         "cluster_sched": cluster_sched,
         "netsim": netsim_bench,
+        "packetsim": packetsim_bench,
         "multitenant": multitenant,
     }
     if args.quick:

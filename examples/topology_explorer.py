@@ -5,22 +5,29 @@ line.  A bare spec prints the structural row (cost / bisection /
 diameter); a scenario string (``topology/traffic[/fail=...]``) also runs
 the flow-level engine and prints the measured achievable fraction under
 the scenario's failure set next to the healthy baseline — the Fig-10
-degradation story from one CLI token.  With no arguments, sweep the
-HxMesh design space around 1k accelerators (the cost / global-bandwidth /
-flexibility trade-off of paper Fig 1) against a fat-tree baseline.
+degradation story from one CLI token.  A ``fidelity=packet`` (or
+``fidelity=calibrated``) leg runs the cycle-level engine and prints the
+fluid and packet numbers side by side — the congestion penalty the fluid
+tier cannot see.  With no arguments, sweep the HxMesh design space
+around 1k accelerators (the cost / global-bandwidth / flexibility
+trade-off of paper Fig 1) against a fat-tree baseline.
 
   PYTHONPATH=src python examples/topology_explorer.py
   PYTHONPATH=src python examples/topology_explorer.py hx4-8x8 torus-32x32
   PYTHONPATH=src python examples/topology_explorer.py \\
       hx2-8x8/alltoall/fail=boards:4:seed7 \\
       hx2-8x8/skewed-alltoall:h8:seed3 \\
-      torus-16x16/bisection/fail=links:1%:seed1
+      torus-16x16/bisection/fail=links:1%:seed1 \\
+      torus-6x6/alltoall/fidelity=packet \\
+      torus-32x32/alltoall/fidelity=calibrated
 """
 
+import dataclasses
 import sys
 
 from repro.core.registry import parse, parse_scenario
 from repro.core.topology import HxMesh
+from repro.packetsim import FidelitySpec
 
 HEADER = (f"{'spec':16s} {'topology':20s} {'accels':>7s} {'cost M$':>8s} "
           f"{'$/accel':>8s} {'bisect':>7s} {'diam':>5s} {'boards':>7s}")
@@ -39,27 +46,53 @@ def describe(spec: str) -> str:
 def describe_scenario(token: str) -> str:
     """Measured achievable fraction of a full scenario vs its healthy
     baseline (same topology + traffic, failure leg dropped); a ``coll=``
-    leg additionally reports the time-domain simulated completion."""
+    leg additionally reports the time-domain simulated completion.  A
+    non-fluid ``fidelity=`` leg prints the fluid number next to the
+    packet/calibrated one, side by side."""
     sc = parse_scenario(token)
     frac = sc.fraction()
-    line = f"{sc}: measured {sc.traffic} = {frac:.4f}"
+    label = "measured" if sc.fidelity.mode == "fluid" else sc.fidelity.mode
+    line = f"{sc}: {label} {sc.traffic} = {frac:.4f}"
+    if sc.fidelity:
+        fluid = dataclasses.replace(sc, fidelity=FidelitySpec()).fraction()
+        ratio = fluid / frac if frac else float("inf")
+        line += f"  (fluid {fluid:.4f}, penalty {ratio:.3f}x)"
     if sc.failures:
-        healthy = parse_scenario(
-            f"{sc.topology}/{sc.traffic}").fraction()
+        healthy = dataclasses.replace(
+            sc, failures=type(sc.failures)()).fraction()
         loss = 0.0 if healthy == 0 else (healthy - frac) / healthy
         line += (f"  (healthy {healthy:.4f}, degradation {loss:+.1%} "
                  f"under {sc.failures})")
-    if sc.collective is not None:
+    # time-domain completion: always for a coll= leg; for a bare traffic
+    # leg only at packet fidelity (small fabrics — a one-shot demand
+    # schedule at scale would swamp the fluid engine with O(n^2) flows)
+    if sc.collective is not None or sc.fidelity.mode == "packet":
         t = sc.completion_time()
-        line += f"\n  {sc.collective}: simulated completion {t * 1e3:.3f} ms"
-        if sc.failures:
+        what = sc.collective if sc.collective is not None else sc.traffic
+        line += f"\n  {what}: {label} completion {t * 1e3:.3f} ms"
+        if sc.fidelity:
+            fluid_sc = dataclasses.replace(sc, fidelity=FidelitySpec())
+            if fluid_sc.collective is not None:
+                fluid_t = fluid_sc.completion_time()
+            else:  # one-shot traffic schedule, fluid engine directly
+                from repro.core import commodel as C
+                from repro.netsim import demand_schedule, simulate_schedule
+
+                net = fluid_sc.network()
+                fluid_t = simulate_schedule(
+                    net, demand_schedule(net, fluid_sc.traffic.demand(net),
+                                         name=str(fluid_sc.traffic)),
+                    link_bw=C.LINK_BW).time
+            line += f" (fluid {fluid_t * 1e3:.3f} ms, {t / fluid_t:.2f}x)"
+        elif sc.failures:
             healthy_t = parse_scenario(
                 f"{sc.topology}/{sc.collective}").completion_time()
             line += (f" (healthy {healthy_t * 1e3:.3f} ms, "
                      f"{t / healthy_t:.2f}x)")
-        model = sc.collective.model_time(sc.topology.num_accelerators)
-        if model is not None:
-            line += f"; alpha-beta model {model * 1e3:.3f} ms"
+        if sc.collective is not None:
+            model = sc.collective.model_time(sc.topology.num_accelerators)
+            if model is not None:
+                line += f"; alpha-beta model {model * 1e3:.3f} ms"
     return line
 
 

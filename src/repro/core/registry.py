@@ -43,11 +43,14 @@ The paper's claims are *scenario* claims — a topology under a traffic
 pattern with a failure set.  :func:`parse_scenario` addresses all three
 legs with one string::
 
-    scenario := <topology> [ "/" <traffic> ] [ "/" <failures> ]
+    scenario := <topology> [ "/" <traffic> ] [ "/" <fidelity> ]
+                [ "/" <failures> ]
     traffic  := name(":" param)*          # repro.core.traffic grammar
+    fidelity := "fidelity=" mode[":p" bytes]   # packetsim.spec grammar
     failures := "fail=" clause("+" clause)*   # flowsim.FAILURE_GRAMMAR
 
     hx2-16x16/skewed-alltoall:h8:seed3/fail=boards:1%:seed7
+    torus-4x4/alltoall/fidelity=packet
 
 returning a :class:`Scenario` value object with round-trip
 ``parse_scenario(str(s)) == s``; each leg normalizes through its own
@@ -74,6 +77,7 @@ from repro.core.allocation import (HxMeshAllocator, PoolAllocator,
                                    TorusAllocator)
 from repro.netsim import engine as NE
 from repro.netsim import schedule as NS
+from repro.packetsim import spec as PS
 
 # bump to invalidate cached measured fractions when the engine or the
 # builders change behaviour.  v2: entries are keyed by the full canonical
@@ -221,20 +225,52 @@ def measured_fraction(scenario) -> float:
     Results are cached in ``MEASURED_CACHE`` keyed by the canonical
     scenario string — deterministic (every random leg is seeded), so the
     cache is purely a time saver.  A ``coll=`` leg does not change the
-    steady-state fraction, so it is stripped from the cache key."""
+    steady-state fraction, so it is stripped from the cache key; the
+    ``fidelity=`` leg *does* change it (different instrument), so it
+    stays in the key.
+
+    Fidelity dispatch: ``fluid`` (default) runs the flow engine;
+    ``packet`` runs the cycle-level saturation instrument
+    (:func:`repro.packetsim.engine.saturation_fraction` — small fabrics
+    only); ``calibrated`` multiplies the fluid fraction by the distilled
+    per-(family, pattern-class) rate cap
+    (:func:`repro.packetsim.distill.rate_cap`) — memory-cached only,
+    since it derives from the fluid entry and the shipped calibration
+    table rather than a fresh measurement."""
     sc = parse_scenario(scenario)
     if sc.collective is not None:
         sc = dataclasses.replace(sc, collective=None)
     key = str(sc)
     if key in _measured_mem:
         return _measured_mem[key]
+    if sc.fidelity.mode == "calibrated":
+        from repro.packetsim import distill
+
+        fluid = measured_fraction(
+            dataclasses.replace(sc, fidelity=PS.FidelitySpec()))
+        net = sc.network()
+        cap = distill.rate_cap(
+            sc.topology.family, sc.traffic.name,
+            len(net.active_endpoints()))
+        _measured_mem[key] = fluid * cap
+        return _measured_mem[key]
     cache = _load_cache()
     entries = cache["entries"]
     if key not in entries:
         net = sc.network()
-        entries[key] = F.achievable_fraction(
-            net, sc.traffic.demand(net), sc.topology.links_per_endpoint
-        )
+        if sc.fidelity.mode == "packet":
+            from repro.packetsim import engine as PE
+
+            report = PE.saturation_fraction(
+                net, sc.traffic.demand(net),
+                config=sc.fidelity.config(),
+                links_per_endpoint=sc.topology.links_per_endpoint)
+            entries[key] = report.fraction
+        else:
+            entries[key] = F.achievable_fraction(
+                net, sc.traffic.demand(net),
+                sc.topology.links_per_endpoint
+            )
         _store_cache(cache)
     _measured_mem[key] = entries[key]
     return entries[key]
@@ -248,18 +284,42 @@ def simulated_time(scenario) -> float:
     build the (possibly degraded) fabric, lower the ``coll=`` leg onto it
     (:mod:`repro.netsim.schedule`), and play the schedule through the
     time-domain engine (:mod:`repro.netsim.engine`) at the paper's link
-    bandwidth.  Deterministic; memory-cached by the scenario string."""
+    bandwidth.  Deterministic; memory-cached by the scenario string.
+
+    Fidelity dispatch: ``fluid`` (default) requires a ``coll=`` leg and
+    runs the fluid engine as before; ``packet`` replays the same lowered
+    schedule through the cycle-level engine
+    (:func:`repro.packetsim.engine.simulate_packet_schedule`) — without
+    a collective leg the traffic demand lowers to a one-shot schedule;
+    ``calibrated`` runs the fluid engine with the distilled rate cap
+    applied as a uniform link-efficiency derate."""
     sc = parse_scenario(scenario)
-    if sc.collective is None:
+    if sc.collective is None and sc.fidelity.mode == "fluid":
         raise ValueError(
             f"scenario {sc} has no collective leg; grammar: "
             f"{NS.collective_grammar()}")
     key = str(sc)
     if key not in _simulated_mem:
         net = sc.network()
-        report = NE.simulate_schedule(
-            net, sc.schedule(net), link_bw=commodel.LINK_BW,
-            record_timeline=False)
+        if sc.fidelity.mode == "packet":
+            from repro.packetsim import engine as PE
+
+            report = PE.simulate_packet_schedule(
+                net, sc.schedule(net), link_bw=commodel.LINK_BW,
+                config=sc.fidelity.config())
+        elif sc.fidelity.mode == "calibrated":
+            from repro.packetsim import distill
+
+            cap = distill.rate_cap(
+                sc.topology.family, sc.traffic.name,
+                len(net.active_endpoints()), collective=sc.collective)
+            report = NE.simulate_schedule(
+                net, sc.schedule(net), link_bw=commodel.LINK_BW,
+                record_timeline=False, link_eff=cap)
+        else:
+            report = NE.simulate_schedule(
+                net, sc.schedule(net), link_bw=commodel.LINK_BW,
+                record_timeline=False)
         _simulated_mem[key] = report.time
     return _simulated_mem[key]
 
@@ -470,18 +530,21 @@ class Scenario:
     global traffic and time-domain collective runs).
 
     The canonical string is
-    ``<topology>[/<traffic>][/<collective>][/<failures>]``; the failure
-    leg is omitted when empty, the traffic leg is omitted when it is the
-    default ``alltoall`` *and* a collective leg is present (a collective
-    scenario is a completion-time experiment — the traffic leg only
-    matters when explicitly pinned), and ``parse_scenario(str(s)) == s``
-    round-trips for every registered grammar combination.
+    ``<topology>[/<traffic>][/<collective>][/<fidelity>][/<failures>]``;
+    the failure leg is omitted when empty, the fidelity leg is omitted
+    when it is the fluid default, the traffic leg is omitted when it is
+    the default ``alltoall`` *and* a collective leg is present (a
+    collective scenario is a completion-time experiment — the traffic
+    leg only matters when explicitly pinned), and
+    ``parse_scenario(str(s)) == s`` round-trips for every registered
+    grammar combination.
     """
 
     topology: Topology
     traffic: TR.TrafficSpec
     failures: F.FailureSpec = F.FailureSpec()
     collective: NS.CollectiveSpec | None = None
+    fidelity: PS.FidelitySpec = PS.FidelitySpec()
 
     def __str__(self) -> str:
         parts = [self.topology.spec]
@@ -491,6 +554,8 @@ class Scenario:
             parts.append(str(self.traffic))
         if self.collective is not None:
             parts.append(str(self.collective))
+        if self.fidelity:
+            parts.append(str(self.fidelity))
         if self.failures:
             parts.append(str(self.failures))
         return "/".join(parts)
@@ -514,11 +579,19 @@ class Scenario:
 
     def schedule(self, net: F.Network | None = None) -> NS.CommSchedule:
         """The collective leg lowered onto this scenario's (possibly
-        degraded) fabric — requires a ``coll=`` leg."""
+        degraded) fabric.  Fluid scenarios require a ``coll=`` leg; at
+        packet/calibrated fidelity a missing collective leg lowers the
+        *traffic demand* to a one-shot schedule instead
+        (:func:`repro.netsim.schedule.demand_schedule`), so every
+        fidelity scenario is time-domain runnable."""
         if self.collective is None:
-            raise ValueError(
-                f"scenario {self} has no collective leg; grammar: "
-                f"{NS.collective_grammar()}")
+            if self.fidelity.mode == "fluid":
+                raise ValueError(
+                    f"scenario {self} has no collective leg; grammar: "
+                    f"{NS.collective_grammar()}")
+            net = self.network() if net is None else net
+            return NS.demand_schedule(net, self.traffic.demand(net),
+                                      name=str(self.traffic))
         return self.collective.schedule(self.network() if net is None
                                         else net)
 
@@ -534,9 +607,11 @@ def scenario_grammar() -> str:
     parse error messages and ``--help`` style listings)."""
     topo = ", ".join(f.grammar for f in FAMILIES.values())
     return (
-        "scenario := <topology>[/<traffic>][/<collective>][/<failures>] "
+        "scenario := <topology>[/<traffic>][/<collective>][/<fidelity>]"
+        "[/<failures>] "
         f"with topology in [{topo}], traffic in [{TR.traffic_grammars()}], "
-        f"collective {NS.collective_grammar()}, failures "
+        f"collective {NS.collective_grammar()}, fidelity "
+        f"{PS.fidelity_grammar()}, failures "
         f"{F.FAILURE_GRAMMAR}"
     )
 
@@ -564,25 +639,39 @@ def parse_scenario(token) -> Scenario:
         raise ValueError(f"bad scenario topology leg: {e}") from None
     traffic_tok: str | None = None
     coll_tok: str | None = None
+    fidelity_tok: str | None = None
     failure_tok: str | None = None
     for part in parts[1:]:
         if part.startswith("fail="):
             if failure_tok is not None:
                 raise ValueError(f"duplicate failure leg in {token!r}")
             failure_tok = part
+        elif part.startswith("fidelity="):
+            if fidelity_tok is not None:
+                raise ValueError(f"duplicate fidelity leg in {token!r}")
+            if failure_tok is not None:
+                raise ValueError(
+                    f"fidelity leg {part!r} after the failure leg in "
+                    f"{token!r}; grammar: {scenario_grammar()}"
+                )
+            fidelity_tok = part
         elif part.startswith("coll="):
             if coll_tok is not None:
                 raise ValueError(f"duplicate collective leg in {token!r}")
-            if failure_tok is not None:
+            if failure_tok is not None or fidelity_tok is not None:
                 raise ValueError(
-                    f"collective leg {part!r} after the failure leg in "
-                    f"{token!r}; grammar: {scenario_grammar()}"
+                    f"collective leg {part!r} after the "
+                    f"{'failure' if failure_tok is not None else 'fidelity'}"
+                    f" leg in {token!r}; grammar: {scenario_grammar()}"
                 )
             coll_tok = part
-        elif failure_tok is not None or coll_tok is not None:
+        elif (failure_tok is not None or coll_tok is not None
+                or fidelity_tok is not None):
+            after = ("failure" if failure_tok is not None
+                     else "fidelity" if fidelity_tok is not None
+                     else "collective")
             raise ValueError(
-                f"traffic leg {part!r} after the "
-                f"{'failure' if failure_tok is not None else 'collective'} "
+                f"traffic leg {part!r} after the {after} "
                 f"leg in {token!r}; grammar: {scenario_grammar()}"
             )
         elif traffic_tok is not None:
@@ -594,8 +683,9 @@ def parse_scenario(token) -> Scenario:
     traffic = TR.parse_traffic(traffic_tok or "alltoall")
     failures = F.parse_failures(failure_tok or "")
     collective = NS.parse_collective(coll_tok) if coll_tok else None
+    fidelity = PS.parse_fidelity(fidelity_tok)
     return Scenario(topology=topo, traffic=traffic, failures=failures,
-                    collective=collective)
+                    collective=collective, fidelity=fidelity)
 
 
 def match_scenario(token: str, scenario) -> bool:
@@ -612,6 +702,9 @@ def match_scenario(token: str, scenario) -> bool:
     for part in parts[1:]:
         if part.startswith("fail="):
             if F.parse_failures(part) != sc.failures:
+                return False
+        elif part.startswith("fidelity="):
+            if PS.parse_fidelity(part) != sc.fidelity:
                 return False
         elif part.startswith("coll="):
             if NS.parse_collective(part) != sc.collective:

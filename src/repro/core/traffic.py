@@ -302,6 +302,24 @@ def _skewed_alltoall_demand(net: F.Network, skew: float = 0.75, h: int = 4,
                   groups=groups)
 
 
+def _incast_demand(net: F.Network, k: int = 8, dst: int = 0,
+                   vol: float = 1.0) -> Demand:
+    """k-to-1 incast hotspot: ``k`` active endpoints all send to one
+    destination — the classic congestion-tree microbenchmark.  The
+    hotspot is the ``dst``-th active endpoint; senders are the next ``k``
+    active endpoints cyclically after it."""
+    if k < 1:
+        raise ValueError(f"incast needs k >= 1 senders, got {k}")
+    act = net.active_endpoints()
+    if len(act) < 2:
+        return _empty_demand(net)
+    hot = int(act[dst % len(act)])
+    senders = [int(s) for s in np.roll(act, -(dst % len(act)) - 1)
+               if int(s) != hot][:k]
+    entries = {s: {hot: vol} for s in senders}
+    return _sparse_demand(net, entries)
+
+
 def _bisection_demand(net: F.Network) -> Demand:
     """Cross-bisection uniform traffic: each active endpoint sends unit
     volume spread over the active endpoints of the opposite half, so the
@@ -547,4 +565,10 @@ register_traffic(TrafficFamily(
 register_traffic(TrafficFamily(
     name="bisection", build=_bisection_demand,
     doc="cross-cut uniform traffic; achievable fraction == bisection",
+))
+register_traffic(TrafficFamily(
+    name="incast", build=_incast_demand,
+    params=(Param("k", int, 8), Param("dst", int, 0),
+            Param("vol", float, 1.0)),
+    doc="k-to-1 hotspot: k senders converge on one destination endpoint",
 ))

@@ -14,8 +14,8 @@ from repro.netsim.engine import (FootprintCache, SimReport, flow_footprints,
 from repro.netsim.replay import contention_fractions, steady_iteration_times
 from repro.netsim.schedule import (COLLECTIVE_FAMILIES, CollectiveFamily,
                                    CollectiveSpec, CommSchedule, Phase,
-                                   collective_grammar, lower,
-                                   merge_schedules, parse_collective,
+                                   collective_grammar, demand_schedule,
+                                   lower, merge_schedules, parse_collective,
                                    register_collective, ring_order,
                                    schedule_for_endpoints)
 
@@ -29,6 +29,7 @@ __all__ = [
     "SimReport",
     "collective_grammar",
     "contention_fractions",
+    "demand_schedule",
     "flow_footprints",
     "lower",
     "merge_schedules",

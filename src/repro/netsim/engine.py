@@ -406,6 +406,7 @@ def simulate_schedule(
     link_bw: float = 1.0,
     cache: FootprintCache | None = None,
     record_timeline: bool = True,
+    link_eff: float = 1.0,
 ) -> SimReport:
     """Play a :class:`repro.netsim.schedule.CommSchedule` through the
     fabric and return its :class:`SimReport`.
@@ -416,7 +417,14 @@ def simulate_schedule(
     and completes when all its flows have moved their bytes.  Rates are
     recomputed at every activation/finish event; identical active sets
     hit the rate cache.
+
+    ``link_eff`` derates every link's capacity to that fraction of
+    ``link_bw`` — the hook the calibrated fidelity mode uses to apply
+    packet-distilled rate caps (:mod:`repro.packetsim.distill`) without
+    leaving the fluid engine.
     """
+    if not 0.0 < link_eff <= 1.0:
+        raise ValueError(f"link_eff must be in (0, 1], got {link_eff}")
     phases = schedule.phases
     alpha = schedule.alpha
     foot = cache if cache is not None else FootprintCache(net)
@@ -573,7 +581,10 @@ def simulate_schedule(
                 n_waterfills += 1
                 cached = np.zeros(n_flows)
                 idx = np.nonzero(active)[0]
-                cached[idx] = waterfill(W[idx])
+                cached[idx] = waterfill(
+                    W[idx],
+                    cap=(None if link_eff == 1.0
+                         else np.full(W.shape[1], link_eff)))
                 rate_cache[sig] = cached
             rates = cached
         t_act = queue.next_time()

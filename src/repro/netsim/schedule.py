@@ -54,6 +54,7 @@ from repro.core import hamiltonian as ham
 
 PLANES = C.PLANES  # the fabric graph is one of these planes
 DEFAULT_SIZE = 100 * 2 ** 20  # canonical forms omit the default payload
+DEFAULT_TRAFFIC_SIZE = 4 * 2 ** 20  # demand_schedule per-unit-volume bytes
 
 
 # ---------------------------------------------------------------------------
@@ -441,6 +442,34 @@ def lower(spec, net: F.Network, planes: int = PLANES,
           alpha: float = C.ALPHA, group: str = "") -> CommSchedule:
     """One-shot: parse a collective token and lower it onto ``net``."""
     return parse_collective(spec).schedule(net, planes, alpha, group)
+
+
+def demand_schedule(net: F.Network, dem, size: int = DEFAULT_TRAFFIC_SIZE,
+                    planes: int = PLANES, alpha: float = C.ALPHA,
+                    name: str = "traffic", group: str = "") -> CommSchedule:
+    """Lower a steady-state traffic :class:`repro.core.traffic.Demand`
+    into a one-shot, single-phase schedule: every nonzero demand entry
+    becomes one concurrent ``(src, dst, size * volume / planes)`` flow.
+
+    This is how traffic-only scenarios become time-domain runnable at
+    packet fidelity (``torus-4x4/alltoall/fidelity=packet``): the packet
+    engine replays the burst and its completion time carries the
+    queueing/backpressure signal the steady-state fraction averages out.
+    ``size`` is deliberately small (default 4 MiB per unit volume) so
+    small fabrics stay inside the packet-count envelope."""
+    flows: list[tuple[int, int, float]] = []
+    chunk = 256
+    for lo in range(0, dem.n_sources, chunk):
+        hi = min(lo + chunk, dem.n_sources)
+        rows = dem.rows(lo, hi)
+        for k, s in enumerate(dem.sources[lo:hi]):
+            nz = np.nonzero(rows[k])[0]
+            for t in nz:
+                flows.append((int(s), int(t),
+                              size * float(rows[k][t]) / planes))
+    phases = (Phase(name=name, flows=tuple(flows), group=group),) \
+        if flows else ()
+    return CommSchedule(name=name, phases=phases, alpha=alpha)
 
 
 def schedule_for_endpoints(spec, net: F.Network, endpoints,

@@ -1,0 +1,45 @@
+"""Packet/flit-level fidelity tier: cycle-accurate VOQ + crossbar engine
+and the distillation layer that calibrates the fluid engines with it.
+
+Import surface is intentionally registry-free: :mod:`repro.core.registry`
+imports this package for the ``fidelity=`` leg, so only the grammar
+(:mod:`~repro.packetsim.spec`) and engine (:mod:`~repro.packetsim.engine`)
+live here; :mod:`repro.packetsim.distill` imports the registry and must be
+imported lazily at dispatch time.
+"""
+
+from repro.packetsim.spec import (
+    DEFAULT_PACKET,
+    MODES,
+    FidelitySpec,
+    fidelity_grammar,
+    parse_fidelity,
+)
+from repro.packetsim.engine import (
+    EV_CYCLE,
+    EV_PHASE,
+    PacketConfig,
+    PacketEngine,
+    PacketReport,
+    SaturationReport,
+    estimate_packets,
+    saturation_fraction,
+    simulate_packet_schedule,
+)
+
+__all__ = [
+    "DEFAULT_PACKET",
+    "MODES",
+    "FidelitySpec",
+    "fidelity_grammar",
+    "parse_fidelity",
+    "EV_CYCLE",
+    "EV_PHASE",
+    "PacketConfig",
+    "PacketEngine",
+    "PacketReport",
+    "SaturationReport",
+    "estimate_packets",
+    "saturation_fraction",
+    "simulate_packet_schedule",
+]

@@ -1,0 +1,832 @@
+"""Cycle-level packet engine: VOQ + crossbar switches with backpressure.
+
+The third simulation tier, beside flowsim (steady state) and netsim
+(fluid time domain).  The fluid engines upper-bound every packet-level
+effect the paper's SST simulations resolve: finite buffers, head-of-line
+blocking, credit backpressure, incast queueing.  This engine models them
+directly, at the cost of scale — it is the measurement instrument the
+distillation layer (:mod:`repro.packetsim.distill`) runs on *small*
+fabrics to calibrate the fluid engine at paper scale.
+
+Model (one simulated plane, the same ``flowsim.Network`` view the fluid
+engines use; the fm16 VOQ simulator in SNIPPETS.md Snippet 1 is the
+idiom reference):
+
+* **Ports** are the network's directed link bundles
+  (``net.directed_edges()``); a bundle of multiplicity ``m`` moves up to
+  ``m`` packets per cycle.  One cycle serializes one packet
+  (``PacketConfig.packet`` bytes) onto one link, so the cycle time in
+  seconds is ``packet / link_bw``.
+* Every node — accelerator *and* switch — runs the same router: finite
+  input FIFOs per in-port, a virtual output queue (VOQ) per (in-port,
+  out-port) pair, and per-out-port round-robin (MDRR-style) arbitration
+  over the VOQs.  A full VOQ stalls its input FIFO head (head-of-line
+  blocking); credits bound downstream FIFO occupancy (a send needs a
+  free slot at the receiver, counting packets already on the wire).
+* **Routing** is minimal-adaptive ECMP: per destination, the minimal
+  next-hop port set comes from the same BFS distances flowsim uses; each
+  packet picks the candidate whose target VOQ is shortest (rotating
+  tie-break).  On tori the candidate set is dimension-ordered (x before
+  y) — adaptivity survives only where both ring directions are minimal.
+* **Deadlock avoidance** is per-fabric-kind, matching the literature:
+  tori use bubble flow control on the dimension-ordered rings (packets
+  continuing straight in a ring need one free downstream slot, packets
+  injecting into or turning into a ring need two — the classic
+  ring-bubble condition, deadlock-free under DOR).  Switch fabrics
+  (HxMesh, HyperX, fat tree, dragonfly) instead use *distance-class*
+  flow control — the paper's "one VC per hop" story: input FIFOs are
+  partitioned into hop classes and every transmitted packet lands in a
+  strictly higher class, so the credit-wait graph is acyclic by
+  construction for any topology and any minimal route.  A cycle in
+  which no packet moves while packets remain is still reported as a
+  deadlock, loudly.
+* **Injection** is a pull model: each endpoint's NIC (``set_source``)
+  offers packets which enter the injection VOQ slot when space allows,
+  up to the endpoint's port count per cycle; a blocked head packet holds
+  (no resampling — offered traffic is not biased away from congestion).
+
+Two drivers share the engine and the :mod:`repro.core.timecore` event
+loop (kinds :data:`EV_CYCLE` / :data:`EV_PHASE`):
+
+* :func:`simulate_packet_schedule` replays the *same*
+  :class:`repro.netsim.schedule.CommSchedule` phase DAGs the fluid
+  engine runs — per-repeat α charging, dependency barriers, exact byte
+  accounting — and returns the completion time.
+* :func:`saturation_fraction` measures steady-state achievable fraction
+  under continuous demand-weighted injection (warm-up + measurement
+  window), the packet-level counterpart of
+  ``flowsim.achievable_fraction``.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import random
+from collections import deque
+
+import numpy as np
+
+from repro.core import flowsim as F
+from repro.core.timecore import EventLoop
+
+from repro.packetsim.spec import DEFAULT_PACKET
+
+# timecore event kinds (names prefixed to stay disjoint from netsim's
+# "phase" and the cluster's kinds when queues are ever merged)
+EV_CYCLE = "pkt/cycle"
+EV_PHASE = "pkt/phase"
+
+# internal packet layout: [dst, nbytes, tag, inject_cycle, hops]
+_DST, _NB, _TAG, _T0, _HOPS = range(5)
+
+
+@dataclasses.dataclass(frozen=True)
+class PacketConfig:
+    """Engine knobs.  Defaults follow the fm16 exemplar's shape (512 B
+    packets, shallow per-port queues) scaled to the small fabrics the
+    validity envelope allows."""
+
+    packet: int = DEFAULT_PACKET  # bytes per packet == per cycle per link
+    fifo_depth: int = 16  # input-FIFO slots per port (split across classes)
+    voq_depth: int = 8  # slots per (in-port, class, out-port) VOQ
+    link_latency: int = 1  # cycles on the wire per hop
+    seed: int = 0  # saturation injection sampling seed
+    warmup: int = 500  # saturation warm-up cycles
+    measure: int = 2000  # saturation measurement window (cycles)
+    max_packets: int = 300_000  # schedule-mode validity envelope
+
+
+class PacketEngine:
+    """The synchronous fabric: queues, VOQs, arbitration, credits.
+
+    ``dsts`` enumerates the destination endpoints packets may carry —
+    routing tables are built per destination up front (one batched BFS).
+    Drivers attach per-endpoint packet sources (:meth:`set_source`) and
+    an ejection callback (:attr:`on_eject`), then call :meth:`step` once
+    per cycle.
+    """
+
+    def __init__(self, net: F.Network, dsts, config: PacketConfig | None = None):
+        self.net = net
+        self.config = config or PacketConfig()
+        U, V, M = net.directed_edges()
+        self.n_ports = len(U)
+        self.port_src = [int(u) for u in U]
+        self.port_dst = [int(v) for v in V]
+        self.caps = [int(m) for m in M]
+        out_ports: dict[int, list[int]] = {}
+        in_ports: dict[int, list[int]] = {}
+        for k in range(self.n_ports):
+            out_ports.setdefault(self.port_src[k], []).append(k)
+            in_ports.setdefault(self.port_dst[k], []).append(k)
+        self.out_ports = out_ports
+        self.in_ports = in_ports
+        self.port_dir = self._direction_classes()
+        self.is_torus = net.meta.get("kind") == "torus"
+        # routing tables: per destination, node -> minimal out-port tuple
+        # (ports repeated by bundle multiplicity so wider bundles draw
+        # proportionally more adaptive choices)
+        self._dsts = sorted({int(t) for t in dsts})
+        self._dst_index = {t: i for i, t in enumerate(self._dsts)}
+        if self._dsts:
+            D, _ = F.shortest_paths(net, np.asarray(self._dsts,
+                                                    dtype=np.int64))
+        else:
+            D = np.zeros((0, 0), dtype=np.int32)
+        self._dist = D
+        Ua = np.asarray(U, dtype=np.int64)
+        Va = np.asarray(V, dtype=np.int64)
+        self._nh: list[dict[int, tuple[int, ...]]] = []
+        for i in range(len(self._dsts)):
+            d = D[i]
+            ok = np.nonzero((d[Ua] > 0) & (d[Va] >= 0)
+                            & (d[Va] == d[Ua] - 1))[0]
+            table: dict[int, list[int]] = {}
+            for k in ok:
+                k = int(k)
+                table.setdefault(self.port_src[k], []).extend(
+                    [k] * self.caps[k])
+            if self.is_torus:
+                # dimension-order the rings: bubble flow control is only
+                # deadlock-free without turn cycles, so a packet corrects
+                # x before y (adaptivity survives where +x/-x are both
+                # minimal); switch fabrics keep the full minimal set and
+                # rely on distance classes instead.
+                for u, ps in table.items():
+                    xs = [k for k in ps if self.port_dir[k] in (0, 1)]
+                    if xs and len(xs) < len(ps):
+                        table[u] = xs
+            self._nh.append({u: tuple(ps) for u, ps in table.items()})
+        self._route_ptr: dict[tuple[int, int], int] = {}
+        # hop classes: tori run one class (the bubble rule is the
+        # deadlock story there); switch fabrics run one class per hop of
+        # the longest minimal route, splitting the FIFO budget
+        if self.is_torus or not len(D):
+            self.n_classes = 1
+        else:
+            self.n_classes = max(1, int(D.max()))
+        self.class_depth = (self.config.fifo_depth if self.n_classes == 1
+                            else max(2, self.config.fifo_depth
+                                     // self.n_classes))
+        nc = self.n_classes
+        # input FIFOs and wire pipelines, per port per class
+        self.inq: list[list[deque]] = [[deque() for _ in range(nc)]
+                                       for _ in range(self.n_ports)]
+        self.flight: list[deque] = [deque() for _ in range(self.n_ports)]
+        self.flight_cnt: list[list[int]] = [[0] * nc
+                                            for _ in range(self.n_ports)]
+        # VOQs of out-port k: a (source x class) grid; source slot 0 is
+        # injection (class 0 only), then the in-ports of the owning node
+        # in id order — the arbitration scan order
+        self.voq_srcs: list[list[int]] = []
+        self.key_base: list[dict[int, int]] = []  # in-port -> slot base
+        self.voq_by_port: list[list[deque]] = []
+        for k in range(self.n_ports):
+            srcs = [-1] + sorted(in_ports.get(self.port_src[k], []))
+            self.voq_srcs.append(srcs)
+            self.key_base.append({s: i * nc for i, s in enumerate(srcs)})
+            self.voq_by_port.append([deque() for _ in range(len(srcs) * nc)])
+        self.voq_load = [0] * self.n_ports
+        self.rr = [0] * self.n_ports  # per-out-port arbitration pointer
+        # injection: endpoints with links, pull-model sources
+        self.inj_nodes = [e for e in range(net.n_endpoints)
+                          if out_ports.get(e)]
+        self.inj_ways = {u: sum(self.caps[k] for k in out_ports[u])
+                         for u in self.inj_nodes}
+        self.sources: dict[int, object] = {}
+        self._pending: dict[int, list | None] = {u: None
+                                                 for u in self.inj_nodes}
+        self.on_eject = None  # fn(pkt, cycle, latency_cycles)
+        # counters / accounting
+        self.n_system = 0  # packets resident (pending + queued + in flight)
+        self.injected_pkts = 0
+        self.ejected_pkts = 0
+        self.ejected_bytes = 0
+        self.n_unroutable = 0
+        self.max_inq = 0
+        self.max_voq = 0
+        self.occ_sum = 0
+        self.occ_cycles = 0
+
+    # -- construction helpers -------------------------------------------------
+
+    def _direction_classes(self) -> list[int | None]:
+        """Per-port dimension+direction class on torus fabrics (the ring
+        membership the bubble rule needs); ``None`` elsewhere."""
+        meta = self.net.meta
+        dirs: list[int | None] = [None] * self.n_ports
+        if meta.get("kind") != "torus":
+            return dirs
+        sx, sy = meta["side_x"], meta["side_y"]
+        for k in range(self.n_ports):
+            ui, uj = divmod(self.port_src[k], sx)
+            vi, vj = divmod(self.port_dst[k], sx)
+            if ui == vi:
+                dirs[k] = 0 if (vj - uj) % sx == 1 else 1
+            else:
+                dirs[k] = 2 if (vi - ui) % sy == 1 else 3
+        return dirs
+
+    # -- queries --------------------------------------------------------------
+
+    def reachable(self, s: int, t: int) -> bool:
+        """True when a packet injected at ``s`` can route minimally to
+        ``t`` (``t`` must be in the engine's destination set)."""
+        i = self._dst_index.get(int(t))
+        return (i is not None and s != t
+                and int(self._dist[i][int(s)]) > 0)
+
+    def set_source(self, node: int, fn) -> None:
+        """Attach a pull-model packet source to an endpoint: ``fn(cycle)``
+        returns the next ``(dst, nbytes, tag, inject_cycle)`` tuple or
+        ``None`` when the NIC has nothing to offer this cycle."""
+        self.sources[int(node)] = fn
+
+    # -- per-cycle dynamics ---------------------------------------------------
+
+    def _choose(self, u: int, t: int, base_key: tuple[int, int]) -> int | None:
+        """Adaptive-minimal output port for a packet at ``u`` headed to
+        ``t``: the candidate whose (this input slot's) VOQ is shortest,
+        with a rotating tie-break pointer per (node, destination).
+        ``base_key`` is ``(in_port, class)`` — ``(-1, 0)`` for injection."""
+        ti = self._dst_index[t]
+        cands = self._nh[ti].get(u)
+        if not cands:
+            return None
+        n = len(cands)
+        if n == 1:
+            return cands[0]
+        key = (ti, u)
+        start = self._route_ptr.get(key, 0)
+        self._route_ptr[key] = (start + 1) % n
+        kin, cls = base_key
+        voqs = self.voq_by_port
+        kbase = self.key_base
+        best = -1
+        best_len = 1 << 30
+        for off in range(n):
+            k = cands[(start + off) % n]
+            ln = len(voqs[k][kbase[k][kin] + cls])
+            if ln < best_len:
+                best, best_len = k, ln
+                if ln == 0:
+                    break
+        return best
+
+    def step(self, cycle: int) -> int:
+        """Advance the fabric one cycle; returns the number of packet
+        movements (arrivals, routes, ejections, injections, sends).  A
+        zero return with packets resident means the fabric is frozen —
+        drivers escalate that to a deadlock error when no future
+        activation can unblock it."""
+        cfg = self.config
+        nc = self.n_classes
+        voq_depth = cfg.voq_depth
+        class_depth = self.class_depth
+        inq = self.inq
+        flight = self.flight
+        flight_cnt = self.flight_cnt
+        voqs = self.voq_by_port
+        kbase = self.key_base
+        torus = self.is_torus
+        moved = 0
+
+        # 1. arrivals: wire pipeline -> input FIFO of the packet's class
+        for k in range(self.n_ports):
+            fl = flight[k]
+            if not fl:
+                continue
+            qk = inq[k]
+            cnt = flight_cnt[k]
+            while fl and fl[0][0] <= cycle:
+                pkt = fl.popleft()[1]
+                c = (pkt[_HOPS] - 1) % nc
+                cnt[c] -= 1
+                qk[c].append(pkt)
+                if len(qk[c]) > self.max_inq:
+                    self.max_inq = len(qk[c])
+                moved += 1
+
+        # 2. route/eject: each input FIFO advances up to its bundle
+        # width, deepest hop class first (older packets drain first)
+        for k in range(self.n_ports):
+            qk = inq[k]
+            u = self.port_dst[k]
+            d_in = self.port_dir[k]
+            budget = self.caps[k]
+            for c in range(nc - 1, -1, -1):
+                q = qk[c]
+                while q and budget > 0:
+                    pkt = q[0]
+                    if pkt[_DST] == u:
+                        q.popleft()
+                        self._eject(pkt, cycle)
+                        budget -= 1
+                        moved += 1
+                        continue
+                    kout = self._choose(u, pkt[_DST], (k, c))
+                    if kout is None:  # pragma: no cover - static routes
+                        raise RuntimeError(
+                            f"packetsim lost route: node {u} has no "
+                            f"minimal port toward {pkt[_DST]}")
+                    dq = voqs[kout][kbase[kout][k] + c]
+                    if len(dq) >= voq_depth:
+                        break  # head-of-line stall for this class FIFO
+                    straight = torus and d_in == self.port_dir[kout]
+                    dq.append((pkt, straight))
+                    q.popleft()
+                    self.voq_load[kout] += 1
+                    if len(dq) > self.max_voq:
+                        self.max_voq = len(dq)
+                    budget -= 1
+                    moved += 1
+
+        # 3. injection: NIC pull into the injection VOQ slots (class 0)
+        pend = self._pending
+        for u in self.inj_nodes:
+            fn = self.sources.get(u)
+            for _ in range(self.inj_ways[u]):
+                pkt = pend[u]
+                if pkt is None:
+                    if fn is None:
+                        break
+                    raw = fn(cycle)
+                    if raw is None:
+                        break
+                    pkt = [raw[0], raw[1], raw[2], raw[3], 0]
+                    self.n_system += 1
+                    pend[u] = pkt
+                kout = self._choose(u, pkt[_DST], (-1, 0))
+                if kout is None:
+                    # statically unroutable (failed fabric): count + drop
+                    self.n_unroutable += 1
+                    self.n_system -= 1
+                    pend[u] = None
+                    continue
+                dq = voqs[kout][kbase[kout][-1]]
+                if len(dq) >= voq_depth:
+                    break  # hold the head packet; no resampling
+                dq.append((pkt, False))
+                self.voq_load[kout] += 1
+                if len(dq) > self.max_voq:
+                    self.max_voq = len(dq)
+                pend[u] = None
+                self.injected_pkts += 1
+                moved += 1
+
+        # 4. transmit: per out bundle, round-robin over the VOQ grid with
+        # credit backpressure.  Tori apply the bubble rule (straight
+        # needs 1 free downstream slot, entering/turning needs 2) on the
+        # single shared class; switch fabrics check the packet's *next*
+        # hop class, which every hop strictly increases — acyclic waits.
+        for k in range(self.n_ports):
+            if self.voq_load[k] == 0:
+                continue
+            qs = voqs[k]
+            nq = len(qs)
+            ptr = self.rr[k]
+            sent = 0
+            ready = cycle + cfg.link_latency
+            fl = flight[k]
+            cnt = flight_cnt[k]
+            inqk = inq[k]
+            while sent < self.caps[k] and self.voq_load[k] > 0:
+                picked = -1
+                for off in range(nq):
+                    i = (ptr + off) % nq
+                    dq = qs[i]
+                    if not dq:
+                        continue
+                    pkt, straight = dq[0]
+                    cc = pkt[_HOPS] % nc
+                    room = class_depth - len(inqk[cc]) - cnt[cc]
+                    if room >= (1 if (straight or not torus) else 2):
+                        picked = i
+                        break
+                if picked < 0:
+                    break
+                pkt, _ = qs[picked].popleft()
+                pkt[_HOPS] += 1
+                cc = (pkt[_HOPS] - 1) % nc
+                fl.append((ready, pkt))
+                cnt[cc] += 1
+                self.voq_load[k] -= 1
+                sent += 1
+                moved += 1
+                ptr = (picked + 1) % nq
+            self.rr[k] = ptr
+
+        self.occ_sum += self.n_system
+        self.occ_cycles += 1
+        return moved
+
+    def _eject(self, pkt: list, cycle: int) -> None:
+        self.n_system -= 1
+        self.ejected_pkts += 1
+        self.ejected_bytes += pkt[_NB]
+        if self.on_eject is not None:
+            self.on_eject(pkt, cycle, cycle - pkt[_T0])
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean packets resident in the fabric per cycle."""
+        return self.occ_sum / self.occ_cycles if self.occ_cycles else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Schedule replay: the same CommSchedule DAGs the fluid engine runs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PacketReport:
+    """Outcome of one :func:`simulate_packet_schedule` run — the packet
+    counterpart of :class:`repro.netsim.engine.SimReport` (same byte
+    conservation contract: ``flow_bytes`` is per flow slot across all its
+    repeats and must equal ``delivered`` exactly)."""
+
+    time: float
+    cycles: int
+    flow_bytes: np.ndarray
+    delivered: np.ndarray
+    packets: int
+    phase_spans: list[tuple[str, float, float]]
+    latency_mean: float  # cycles, over every ejected packet
+    latency_p99: float
+    mean_occupancy: float
+    max_inq: int
+    max_voq: int
+    n_events: int = 0
+    n_unroutable: int = 0
+
+    def conservation_error(self) -> float:
+        """Max relative per-flow |delivered - expected| (0 when exact)."""
+        if not len(self.flow_bytes):
+            return 0.0
+        scale = np.maximum(self.flow_bytes, 1e-30)
+        return float((np.abs(self.delivered - self.flow_bytes) / scale).max())
+
+
+def estimate_packets(schedule, packet: int = DEFAULT_PACKET) -> int:
+    """Total packet count a schedule lowers to at the given packet size —
+    the validity-envelope estimate checked against ``max_packets``."""
+    total = 0
+    for ph in schedule.phases:
+        per_repeat = sum(-(-int(b) // packet) for (_, _, b) in ph.flows
+                         if b > 0)
+        total += per_repeat * max(1, ph.repeat)
+    return total
+
+
+def simulate_packet_schedule(
+    net: F.Network,
+    schedule,
+    link_bw: float = 1.0,
+    config: PacketConfig | None = None,
+) -> PacketReport:
+    """Replay a :class:`repro.netsim.schedule.CommSchedule` at packet
+    fidelity and return its :class:`PacketReport`.
+
+    Phase semantics mirror :func:`repro.netsim.engine.simulate_schedule`:
+    a phase activates α seconds after its dependencies (charged per
+    repeat), its flows inject as packet streams from their source NICs,
+    and it completes when every flow's bytes have been ejected at the
+    destination.  Unroutable (self / disconnected) flows complete
+    instantly, matching the fluid convention.
+
+    Raises ``ValueError`` when the schedule lowers to more packets than
+    ``config.max_packets`` — the validity envelope; shrink the payload
+    (``coll=ring:s1MiB``), raise the packet size, or use fluid fidelity.
+    """
+    cfg = config or PacketConfig()
+    phases = schedule.phases
+    alpha = schedule.alpha
+    n_pkts = estimate_packets(schedule, cfg.packet)
+    if n_pkts > cfg.max_packets:
+        raise ValueError(
+            f"schedule {schedule.name!r} lowers to ~{n_pkts} packets at "
+            f"p{cfg.packet}, over the packet-fidelity envelope of "
+            f"{cfg.max_packets}; shrink the payload, raise the packet "
+            f"size, or use fluid fidelity")
+
+    pairs: list[tuple[int, int]] = []
+    fbytes: list[float] = []
+    phase_slots: list[list[int]] = []
+    for ph in phases:
+        slots = []
+        for (s, t, b) in ph.flows:
+            slots.append(len(pairs))
+            pairs.append((int(s), int(t)))
+            fbytes.append(float(b))
+        phase_slots.append(slots)
+    n_flows = len(pairs)
+    fbytes_arr = np.asarray(fbytes)
+
+    eng = PacketEngine(net, sorted({t for _, t in pairs}), cfg)
+    routable = [eng.reachable(s, t) and fbytes[i] > 0
+                for i, (s, t) in enumerate(pairs)]
+
+    n_ph = len(phases)
+    deps_left = [len(ph.deps) for ph in phases]
+    children: list[list[int]] = [[] for _ in range(n_ph)]
+    for i, ph in enumerate(phases):
+        for d in ph.deps:
+            if not 0 <= d < n_ph:
+                raise ValueError(f"phase {i} depends on unknown phase {d}")
+            children[d].append(i)
+    repeat_left = [max(1, ph.repeat) for ph in phases]
+    total_repeats = list(repeat_left)
+    flows_left = [0] * n_ph
+    started = [None] * n_ph
+    ended = [None] * n_ph
+    slot_phase = [0] * n_flows
+    for i, slots in enumerate(phase_slots):
+        for s in slots:
+            slot_phase[s] = i
+    # the NIC moves whole bytes: a routable flow's payload quantizes to
+    # int(bytes) per repeat, so the conservation contract quantizes too
+    # (unroutable flows complete instantly at their fractional size)
+    eff_bytes = np.asarray([
+        float(int(b)) if routable[i] else float(b)
+        for i, b in enumerate(fbytes)])
+    expected = eff_bytes * np.asarray(
+        [total_repeats[i] for i in slot_phase]) if n_flows else fbytes_arr
+
+    rem_inject = [0] * n_flows  # bytes not yet offered to the NIC
+    rem_deliver = [0] * n_flows  # bytes not yet ejected (this repeat)
+    delivered = np.zeros(n_flows)
+    node_flows: dict[int, deque] = {}
+    live_flows = [0]  # flow-repeats currently in flight
+    loop = EventLoop()
+    cycle_dt = cfg.packet / link_bw
+    state = {"cycle": 0, "armed": False, "now": 0.0}
+    latencies: list[int] = []
+    pkt_bytes = cfg.packet
+
+    def _node_source(u: int):
+        dq = node_flows[u]
+
+        def fn(cycle: int):
+            while dq:
+                fid = dq[0]
+                r = rem_inject[fid]
+                if r <= 0:  # pragma: no cover - drained entries pop below
+                    dq.popleft()
+                    continue
+                nb = pkt_bytes if r >= pkt_bytes else r
+                rem_inject[fid] = r - nb
+                if rem_inject[fid] <= 0:
+                    dq.popleft()  # fully offered; next flow takes over
+                else:
+                    dq.rotate(-1)  # round-robin across this node's flows
+                return (pairs[fid][1], nb, fid, cycle)
+            return None
+
+        return fn
+
+    def _repeat_done(i: int, now: float) -> None:
+        repeat_left[i] -= 1
+        if repeat_left[i] > 0:
+            loop.push(now + alpha, EV_PHASE, i)
+            return
+        ended[i] = now
+        for c in children[i]:
+            deps_left[c] -= 1
+            if deps_left[c] == 0:
+                loop.push(now + alpha, EV_PHASE, c)
+
+    def _on_eject(pkt, cycle, lat):
+        fid = pkt[_TAG]
+        rem_deliver[fid] -= pkt[_NB]
+        delivered[fid] += pkt[_NB]
+        latencies.append(lat)
+        if rem_deliver[fid] <= 0:
+            live_flows[0] -= 1
+            i = slot_phase[fid]
+            flows_left[i] -= 1
+            if flows_left[i] == 0:
+                _repeat_done(i, state["now"])
+
+    eng.on_eject = _on_eject
+
+    def _activate(i: int, now: float) -> None:
+        if started[i] is None:
+            started[i] = now
+        live = 0
+        for fid in phase_slots[i]:
+            if not routable[fid]:
+                delivered[fid] += fbytes[fid]  # instant, as in the fluid
+                continue
+            rem_inject[fid] = int(fbytes[fid])
+            rem_deliver[fid] = int(fbytes[fid])
+            u = pairs[fid][0]
+            if u not in node_flows:
+                node_flows[u] = deque()
+                eng.set_source(u, _node_source(u))
+            node_flows[u].append(fid)
+            live += 1
+        flows_left[i] = live
+        live_flows[0] += live
+        if live == 0:
+            _repeat_done(i, now)
+
+    def _on_phase(t: float, i) -> None:
+        state["now"] = t
+        _activate(int(i), t)
+        if (live_flows[0] > 0 or eng.n_system > 0) and not state["armed"]:
+            state["armed"] = True
+            loop.push(t, EV_CYCLE)
+
+    def _on_cycle(t: float, _) -> None:
+        state["armed"] = False
+        state["now"] = t + cycle_dt  # ejections complete at cycle end
+        moved = eng.step(state["cycle"])
+        state["cycle"] += 1
+        if live_flows[0] > 0 or eng.n_system > 0:
+            if moved == 0:
+                if not loop.queue:
+                    raise RuntimeError(
+                        f"packetsim deadlock: {eng.n_system} packets "
+                        f"frozen in schedule {schedule.name!r} at cycle "
+                        f"{state['cycle']}")
+                return  # frozen until the next activation re-arms
+            state["armed"] = True
+            loop.push(t + cycle_dt, EV_CYCLE)
+
+    loop.on(EV_PHASE, _on_phase)
+    loop.on(EV_CYCLE, _on_cycle)
+    n_roots = 0
+    for i in range(n_ph):
+        if deps_left[i] == 0:
+            loop.push(alpha, EV_PHASE, i)
+            n_roots += 1
+    if n_ph and not n_roots:
+        raise ValueError(f"schedule {schedule.name!r} has no root phase")
+    loop.run()
+
+    t_end = max((e for e in ended if e is not None), default=0.0)
+    spans = [(ph.name,
+              started[i] if started[i] is not None else 0.0,
+              ended[i] if ended[i] is not None else t_end)
+             for i, ph in enumerate(phases)]
+    lat_arr = np.asarray(latencies) if latencies else np.zeros(0)
+    return PacketReport(
+        time=t_end,
+        cycles=state["cycle"],
+        flow_bytes=expected,
+        delivered=delivered,
+        packets=eng.injected_pkts,
+        phase_spans=spans,
+        latency_mean=float(lat_arr.mean()) if len(lat_arr) else 0.0,
+        latency_p99=float(np.percentile(lat_arr, 99)) if len(lat_arr)
+        else 0.0,
+        mean_occupancy=eng.mean_occupancy,
+        max_inq=eng.max_inq,
+        max_voq=eng.max_voq,
+        n_events=state["cycle"] + sum(total_repeats),
+        n_unroutable=sum(1 for r in routable if not r),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Saturation measurement: the packet-level achievable fraction
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SaturationReport:
+    """Steady-state packet measurement of one demand on one fabric.
+
+    ``fraction`` is directly comparable to the fluid
+    ``flowsim.achievable_fraction``: mean per-source delivered rate,
+    normalized by the demand's per-source total volume and the
+    topology's ``links_per_endpoint`` injection bandwidth.  Latencies
+    are in cycles over the measurement window — the queueing signal the
+    fluid engines cannot see (incast, hotspot backpressure).
+    """
+
+    fraction: float
+    min_source_fraction: float
+    latency_mean: float
+    latency_p50: float
+    latency_p99: float
+    cycles: int  # measurement window
+    delivered_bytes: int
+    mean_occupancy: float
+    max_inq: int
+    max_voq: int
+    injected_pkts: int
+    ejected_pkts: int
+
+
+def saturation_fraction(
+    net: F.Network,
+    demand,
+    config: PacketConfig | None = None,
+    links_per_endpoint: int | None = None,
+) -> SaturationReport:
+    """Measure the packet-level achievable fraction of a bound
+    :class:`repro.core.traffic.Demand`: every source injects greedily
+    with destinations sampled in proportion to its demand row (seeded,
+    deterministic), the fabric warms for ``config.warmup`` cycles, and
+    delivery is counted over the next ``config.measure`` cycles."""
+    cfg = config or PacketConfig()
+    lpe = (links_per_endpoint if links_per_endpoint is not None
+           else int(net.meta.get("links_per_endpoint", 1)))
+    # materialize per-source destination tables (small fabrics only)
+    rows_by_src: dict[int, tuple[list[int], list[float]]] = {}
+    all_dsts: set[int] = set()
+    chunk = 256
+    for lo in range(0, demand.n_sources, chunk):
+        hi = min(lo + chunk, demand.n_sources)
+        rows = demand.rows(lo, hi)
+        for k, s in enumerate(demand.sources[lo:hi]):
+            nz = np.nonzero(rows[k])[0]
+            if len(nz):
+                rows_by_src[int(s)] = ([int(t) for t in nz],
+                                       [float(v) for v in rows[k][nz]])
+                all_dsts.update(int(t) for t in nz)
+    eng = PacketEngine(net, sorted(all_dsts), cfg)
+    rng = random.Random(cfg.seed)
+    pkt_bytes = cfg.packet
+    warmup, measure = cfg.warmup, cfg.measure
+    total = warmup + measure
+    delivered_pkts: dict[int, int] = {}
+    latencies: list[int] = []
+
+    active_sources = []
+    for s, (dsts, vols) in sorted(rows_by_src.items()):
+        keep = [(t, v) for t, v in zip(dsts, vols) if eng.reachable(s, t)]
+        if not keep:
+            continue
+        dd = [t for t, _ in keep]
+        cum = []
+        acc = 0.0
+        for _, v in keep:
+            acc += v
+            cum.append(acc)
+        active_sources.append(s)
+        delivered_pkts[s] = 0
+
+        def fn(cycle, s=s, dd=dd, cum=cum, acc=acc):
+            j = bisect.bisect_right(cum, rng.random() * acc)
+            if j >= len(dd):  # float-edge guard
+                j = len(dd) - 1
+            return (dd[j], pkt_bytes, s, cycle)
+
+        eng.set_source(s, fn)
+
+    def _on_eject(pkt, cycle, lat):
+        if cycle >= warmup:
+            delivered_pkts[pkt[_TAG]] += 1
+            latencies.append(lat)
+
+    eng.on_eject = _on_eject
+
+    loop = EventLoop()
+    state = {"cycle": 0}
+
+    def _on_cycle(t, _):
+        c = state["cycle"]
+        moved = eng.step(c)
+        if moved == 0 and eng.n_system > 0:
+            raise RuntimeError(
+                f"packetsim deadlock at cycle {c}: {eng.n_system} packets "
+                "frozen under saturation injection")
+        state["cycle"] = c + 1
+        if c + 1 < total:
+            loop.push(t + 1.0, EV_CYCLE)
+
+    loop.on(EV_CYCLE, _on_cycle)
+    if active_sources and total > 0:
+        loop.push(0.0, EV_CYCLE)
+        loop.run()
+    if not active_sources or measure <= 0:
+        return SaturationReport(
+            fraction=1.0, min_source_fraction=1.0, latency_mean=0.0,
+            latency_p50=0.0, latency_p99=0.0, cycles=0, delivered_bytes=0,
+            mean_occupancy=0.0, max_inq=0, max_voq=0,
+            injected_pkts=eng.injected_pkts, ejected_pkts=eng.ejected_pkts)
+
+    # a source sustaining its whole row at fraction f delivers
+    # f * lpe packets per cycle (volumes are relative; the row total is
+    # the unit, exactly the flowsim level normalization)
+    fracs = [delivered_pkts[s] / measure / lpe for s in active_sources]
+    lat_arr = np.asarray(latencies) if latencies else np.zeros(0)
+    return SaturationReport(
+        fraction=float(np.mean(fracs)),
+        min_source_fraction=float(np.min(fracs)),
+        latency_mean=float(lat_arr.mean()) if len(lat_arr) else 0.0,
+        latency_p50=float(np.percentile(lat_arr, 50)) if len(lat_arr)
+        else 0.0,
+        latency_p99=float(np.percentile(lat_arr, 99)) if len(lat_arr)
+        else 0.0,
+        cycles=measure,
+        delivered_bytes=sum(delivered_pkts.values()) * pkt_bytes,
+        mean_occupancy=eng.mean_occupancy,
+        max_inq=eng.max_inq,
+        max_voq=eng.max_voq,
+        injected_pkts=eng.injected_pkts,
+        ejected_pkts=eng.ejected_pkts,
+    )

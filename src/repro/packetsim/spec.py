@@ -1,0 +1,124 @@
+"""The ``fidelity=`` scenario leg: which simulation tier answers a claim.
+
+The repo now has three simulation tiers over the same scenario strings:
+
+* ``fluid`` (default) — flowsim steady-state fractions and the netsim
+  fluid time-domain engine.  Scales to paper-size fabrics; upper-bounds
+  packet behaviour (no queues, no serialization).
+* ``packet`` — the cycle-level VOQ + crossbar engine in
+  :mod:`repro.packetsim.engine`.  Exact queueing/backpressure physics,
+  feasible only on *small* fabrics (the validity envelope is a packet
+  budget, see ``PacketConfig.max_packets``).
+* ``calibrated`` — the fluid engine with the distilled per-family rate
+  caps of :mod:`repro.packetsim.distill` applied: fluid scalability,
+  packet-measured congestion penalties.
+
+This module holds only the *leg grammar* (:class:`FidelitySpec`,
+:func:`parse_fidelity`) so :mod:`repro.core.registry` can parse and
+round-trip fidelity legs without importing the engine; the engine and
+the distillation layer are imported lazily at dispatch time.
+
+Leg grammar (canonical forms; the default leg drops from ``str()``)::
+
+    fidelity=<mode>[:p<bytes>]     mode in fluid|packet|calibrated
+
+``p<bytes>`` overrides the packet size of the packet engine (default
+512 B, the fm16 exemplar's unit) and is only meaningful — and only
+accepted — in ``packet`` mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# Modes, in documentation order.  "fluid" is the default and drops from
+# canonical scenario strings — existing scenario strings and their cache
+# keys are unchanged by the fidelity leg's existence.
+MODES = ("fluid", "packet", "calibrated")
+
+DEFAULT_PACKET = 512  # bytes serialized per cycle per link (fm16 exemplar)
+
+_PARAM_RE = re.compile(r"p(\d+)")
+
+
+def fidelity_grammar() -> str:
+    """One-line grammar of the ``fidelity=`` scenario leg."""
+    return ("fidelity=<mode>[:p<bytes>] with mode in ["
+            + "|".join(MODES)
+            + f"] and p the packet size in bytes (packet mode only, "
+            f"default {DEFAULT_PACKET})")
+
+
+@dataclasses.dataclass(frozen=True)
+class FidelitySpec:
+    """A parsed ``fidelity=`` leg: simulation tier + packet-size knob.
+
+    The canonical string is ``fidelity=<mode>[:p<bytes>]`` with the
+    default packet size omitted; the all-default spec (fluid) is dropped
+    entirely by ``Scenario.__str__``, so ``parse_fidelity(str(f)) == f``
+    and pre-fidelity scenario strings stay canonical.
+    """
+
+    mode: str = "fluid"
+    packet: int = DEFAULT_PACKET  # bytes per packet (packet mode only)
+
+    def __str__(self) -> str:
+        tail = f":p{self.packet}" if self.packet != DEFAULT_PACKET else ""
+        return f"fidelity={self.mode}{tail}"
+
+    def __bool__(self) -> bool:
+        """True when the leg must appear in the canonical string."""
+        return self.mode != "fluid" or self.packet != DEFAULT_PACKET
+
+    def config(self):
+        """The :class:`repro.packetsim.engine.PacketConfig` this leg
+        selects (lazy import — the grammar stays engine-free)."""
+        from repro.packetsim.engine import PacketConfig
+
+        return PacketConfig(packet=self.packet)
+
+
+def parse_fidelity(token) -> FidelitySpec:
+    """Parse a fidelity leg (with or without the ``fidelity=`` prefix)
+    into its canonical :class:`FidelitySpec`; ``''``/``None`` parse to
+    the fluid default.  Raises ``ValueError`` listing the grammar on
+    malformed or unknown tokens."""
+    if isinstance(token, FidelitySpec):
+        return token
+    if token is None:
+        return FidelitySpec()
+    if not isinstance(token, str):
+        raise ValueError(
+            f"fidelity spec must be a string, got {type(token)}; "
+            f"grammar: {fidelity_grammar()}")
+    body = token.strip()
+    if body.startswith("fidelity="):
+        body = body[len("fidelity="):]
+    if not body:
+        return FidelitySpec()
+    parts = body.split(":")
+    mode = parts[0]
+    if mode not in MODES:
+        raise ValueError(
+            f"unknown fidelity mode {mode!r}; grammar: "
+            f"{fidelity_grammar()}")
+    packet = DEFAULT_PACKET
+    seen = False
+    for part in parts[1:]:
+        m = _PARAM_RE.fullmatch(part)
+        if m is None:
+            raise ValueError(
+                f"bad fidelity param {part!r}; grammar: "
+                f"{fidelity_grammar()}")
+        if seen:
+            raise ValueError(f"duplicate packet-size param in {token!r}")
+        seen = True
+        packet = int(m[1])
+        if packet <= 0:
+            raise ValueError(f"packet size must be positive: {part!r}")
+    if seen and mode != "packet":
+        raise ValueError(
+            f"packet-size param only applies to packet mode, not "
+            f"{mode!r}; grammar: {fidelity_grammar()}")
+    return FidelitySpec(mode=mode, packet=packet)

@@ -258,11 +258,14 @@ def test_simconfig_schedules_pool_topologies():
 #
 # The flow-level model (idealized minimal-path ECMP) differs from the
 # paper's packet-level SST numbers by a topology-dependent factor, so the
-# tolerance is per-row: tight where fluid == packet (switched fabrics),
-# a documented ratio band for the torus (packet-level congestion costs
-# ~3x that minimal-ECMP routing does not see).  The test fails if EITHER
-# side drifts: a builder/engine change moves `measured`, an accidental
-# table edit moves `paper`.
+# tolerance is per-row: tight where fluid == packet (switched fabrics).
+# The torus row — where packet-level congestion costs ~3x that
+# minimal-ECMP routing does not see — is no longer a hard-coded band:
+# the packetsim distillation (repro/packetsim/distill.py) measures the
+# fluid-vs-packet penalty and the test asserts the calibrated fraction
+# lands strictly between the paper value and the raw fluid value.  The
+# test fails if EITHER side drifts: a builder/engine change moves
+# `measured`, an accidental table edit moves `paper`.
 # ---------------------------------------------------------------------------
 
 # max |measured - paper| / paper for the alltoall column
@@ -271,22 +274,35 @@ _ALLTOALL_RTOL = {
     "hx4-8x8": 0.12,  # adaptive routing in the paper beats minimal ECMP
     "ft1024": 0.02,
     "ft1050-t50": 0.05,
-    "torus-32x32": 2.5,  # fluid upper bound vs packet-level: ~3.1x
 }
 
 
 @pytest.mark.timeout(180)
 def test_measured_profile_matches_paper_table2():
     """Tier-1 anti-drift check (full paper-size fabrics, cached on disk)."""
-    for name, band in _ALLTOALL_RTOL.items():
+    for name, band in list(_ALLTOALL_RTOL.items()) + [("torus-32x32", None)]:
         t = R.parse(name)
         paper = C.PAPER_TABLE2_BANDWIDTH[t.table_name]
         p = t.profile()
         err = abs(p.global_bw - paper["alltoall"]) / paper["alltoall"]
-        assert err <= band, (
-            f"{name}: measured alltoall {p.global_bw:.4f} vs paper "
-            f"{paper['alltoall']} drifted ({err:.1%} > {band:.0%})"
-        )
+        if band is not None:
+            assert err <= band, (
+                f"{name}: measured alltoall {p.global_bw:.4f} vs paper "
+                f"{paper['alltoall']} drifted ({err:.1%} > {band:.0%})"
+            )
+        else:
+            # torus: the gap is measured, not banded.  The distilled rate
+            # cap must land the calibrated fraction strictly inside
+            # (paper, fluid) and strictly closer to the paper than the
+            # raw fluid value — torus_gap_measured, by measurement.
+            fluid = p.global_bw
+            cal = R.measured_fraction(f"{name}/alltoall/fidelity=calibrated")
+            assert paper["alltoall"] < cal < fluid, (
+                f"{name}: calibrated alltoall {cal:.4f} outside "
+                f"(paper {paper['alltoall']}, fluid {fluid:.4f})"
+            )
+            assert (abs(cal - paper["alltoall"])
+                    < abs(fluid - paper["alltoall"]))
         # ring allreduce is contention-free neighbor traffic: the fluid
         # model sustains the full fraction; the paper loses <= 2% to
         # implementation overheads

@@ -336,3 +336,83 @@ def test_cluster_probes_log_parseable_scenarios():
     assert observed
     for rec in observed:
         assert rec.probe_scenario in {tok for _, tok in res.probe_log}
+
+
+# ---------------------------------------------------------------------------
+# Fidelity leg: fluid | packet[:p<bytes>] | calibrated
+# ---------------------------------------------------------------------------
+
+
+FIDELITY_TOKENS = ["fidelity=packet", "fidelity=packet:p256",
+                   "fidelity=calibrated"]
+
+
+@pytest.mark.parametrize("fid", FIDELITY_TOKENS)
+def test_fidelity_round_trip(fid):
+    for token in (f"torus-4x4/alltoall/{fid}",
+                  f"hx2-4x4/ring-allreduce/{fid}/fail=boards:1:seed2",
+                  f"torus-4x4/coll=ring/{fid}"):
+        sc = R.parse_scenario(token)
+        assert str(sc) == token
+        assert R.parse_scenario(str(sc)) == sc
+
+
+def test_fidelity_defaults_drop():
+    # fluid is the default mode: the leg never appears in canonical form
+    assert str(R.parse_scenario("torus-4x4/alltoall/fidelity=fluid")) == \
+        "torus-4x4/alltoall"
+    assert R.parse_scenario("torus-4x4/alltoall").fidelity.mode == "fluid"
+    # the default packet size drops from the canonical packet leg
+    assert str(R.parse_scenario("torus-4x4/alltoall/fidelity=packet:p512")) \
+        == "torus-4x4/alltoall/fidelity=packet"
+
+
+@pytest.mark.parametrize("token", [
+    "torus-4x4/alltoall/fidelity=bogus",  # unknown mode
+    "torus-4x4/alltoall/fidelity=packet:p0",  # non-positive packet
+    "torus-4x4/alltoall/fidelity=packet:p256:p512",  # duplicate size
+    "torus-4x4/alltoall/fidelity=fluid:p256",  # size on a non-packet mode
+    "torus-4x4/alltoall/fidelity=calibrated:p256",
+    "torus-4x4/fail=links:1/fidelity=packet",  # fidelity after failures
+    "torus-4x4/fidelity=packet/alltoall",  # traffic after fidelity
+    "torus-4x4/fidelity=packet/coll=ring",  # collective after fidelity
+    "torus-4x4/fidelity=packet/fidelity=fluid",  # duplicate leg
+])
+def test_malformed_fidelity_rejected(token):
+    with pytest.raises(ValueError):
+        R.parse_scenario(token)
+
+
+def test_fidelity_errors_list_grammar():
+    with pytest.raises(ValueError, match=r"fidelity=<mode>"):
+        R.parse_scenario("torus-4x4/alltoall/fidelity=bogus")
+
+
+def test_match_scenario_pins_fidelity():
+    s = "torus-4x4/alltoall/fidelity=packet:p256"
+    assert R.match_scenario("torus-4x4", s)
+    assert R.match_scenario("torus-4x4/fidelity=packet:p256", s)
+    assert not R.match_scenario("torus-4x4/fidelity=packet", s)
+    assert not R.match_scenario("torus-4x4/fidelity=calibrated", s)
+    # a fluid token requires the default mode
+    assert not R.match_scenario(
+        "torus-4x4/fidelity=fluid", s)
+    assert R.match_scenario(
+        "torus-4x4/fidelity=fluid", "torus-4x4/alltoall")
+
+
+def test_cache_key_distinguishes_fidelity(tmp_cache):
+    fluid = R.measured_fraction("torus-4x4/alltoall")
+    packet = R.measured_fraction("torus-4x4/alltoall/fidelity=packet")
+    data = json.load(open(tmp_cache))
+    assert set(data["entries"]) == {
+        "torus-4x4/alltoall", "torus-4x4/alltoall/fidelity=packet"}
+    assert data["entries"]["torus-4x4/alltoall"] == fluid
+    assert data["entries"]["torus-4x4/alltoall/fidelity=packet"] == packet
+    assert packet != fluid
+    # calibrated derives from the fluid entry + shipped table: memory only
+    cal = R.measured_fraction("torus-4x4/alltoall/fidelity=calibrated")
+    data = json.load(open(tmp_cache))
+    assert set(data["entries"]) == {
+        "torus-4x4/alltoall", "torus-4x4/alltoall/fidelity=packet"}
+    assert 0 < cal <= fluid

@@ -39,6 +39,8 @@ TRAFFIC_TOKENS = [
     "skewed-alltoall:h2:seed7",
     "skewed-alltoall:h2:seed7:skew0.5",
     "bisection",
+    "incast",
+    "incast:k4:dst3",
 ]
 
 
