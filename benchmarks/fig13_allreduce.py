@@ -110,7 +110,7 @@ def _compute_model(p: int) -> list[dict]:
         name, t = C.best_algorithm(p, size)
         per = {n: f(p, size) for n, f in C.ALGORITHMS.items()}
         row = {"kind": "model", "p": p, "S": f"{size:.0e}", "best": name}
-        row.update({n: round(size / t_ / C.INJECTION_BW, 3)
+        row.update({n: round(size / t_ / C.INJECTION_BPS, 3)
                     for n, t_ in per.items()})
         rows.append(row)
     return rows

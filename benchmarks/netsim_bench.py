@@ -60,7 +60,7 @@ def _simulate(sc: S.Scenario) -> tuple[NS.SimReport, float]:
     net = parsed.network()
     t0 = time.time()
     report = NS.simulate_schedule(
-        net, parsed.schedule(net), link_bw=C.LINK_BW, record_timeline=False)
+        net, parsed.schedule(net), link_bps=C.LINK_BPS, record_timeline=False)
     return report, time.time() - t0
 
 
@@ -104,7 +104,7 @@ def _compute_probe(sc: S.Scenario) -> list[dict]:
         for g, eps in jobs.items()
     ]
     report = NS.simulate_schedule(net, NS.merge_schedules(parts),
-                                  link_bw=1.0)
+                                  link_bps=1.0)
     lpe = net.meta.get("links_per_endpoint", 1)
     rows = []
     for g, eps in jobs.items():

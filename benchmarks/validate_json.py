@@ -12,6 +12,12 @@ scenario addressing is part of the contract.  Exit 1 with one line per
 violation.
 
 Usage:  python benchmarks/validate_json.py report.json [schema.json]
+        python benchmarks/validate_json.py --simlint simlint.json [schema.json]
+
+The ``--simlint`` form validates a ``python -m repro.simlint --json``
+report against the ``simlint_report`` schema block instead (rule
+inventory, count consistency, the suppression budget) and additionally
+fails when the report carries any unsuppressed finding — the CI gate.
 """
 
 import json
@@ -84,12 +90,38 @@ def validate(report: dict, schema: dict) -> list[str]:
     return errors
 
 
+def validate_simlint(report: dict, schema: dict) -> list[str]:
+    from repro.simlint.report import validate_report
+
+    errors = validate_report(report, schema)
+    if report.get("n_findings", 0) > 0:
+        errors.append(
+            f"{report['n_findings']} unsuppressed simlint finding(s); "
+            f"the CI gate requires zero")
+    return errors
+
+
 def main() -> None:
-    if not 2 <= len(sys.argv) <= 3:
+    argv = list(sys.argv[1:])
+    simlint_mode = "--simlint" in argv
+    if simlint_mode:
+        argv.remove("--simlint")
+    if not 1 <= len(argv) <= 2:
         sys.exit(__doc__)
-    report = json.load(open(sys.argv[1]))
-    schema_path = sys.argv[2] if len(sys.argv) == 3 else "benchmarks/schema.json"
+    report = json.load(open(argv[0]))
+    schema_path = argv[1] if len(argv) == 2 else "benchmarks/schema.json"
     schema = json.load(open(schema_path))
+    if simlint_mode:
+        errors = validate_simlint(report, schema)
+        for e in errors:
+            print(f"SCHEMA: {e}")
+        if errors:
+            sys.exit(1)
+        print(f"simlint report OK: {report['files_scanned']} files, "
+              f"{len(report['rules'])} rules, 0 unsuppressed findings "
+              f"({report['n_suppressed']} suppressed, "
+              f"{report['suppression_comments']} suppression comments)")
+        return
     errors = validate(report, schema)
     for e in errors:
         print(f"SCHEMA: {e}")

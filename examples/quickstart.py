@@ -28,7 +28,7 @@ print(f"4x4 job -> virtual sub-HxMesh rows={pl.rows[:4]} cols={pl.cols[:4]}")
 from repro.core.commodel import best_algorithm
 
 for size in (1e5, 1e9):
-    name, t = best_algorithm(p=64, size=size)
+    name, t = best_algorithm(p=64, size_bytes=size)
     print(f"allreduce of {size:.0e} B on 64 devices -> {name} ({t*1e6:.0f} us)")
 
 # 4. Train a tiny model through the full stack -------------------------------

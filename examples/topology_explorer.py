@@ -82,7 +82,7 @@ def describe_scenario(token: str) -> str:
                 fluid_t = simulate_schedule(
                     net, demand_schedule(net, fluid_sc.traffic.demand(net),
                                          name=str(fluid_sc.traffic)),
-                    link_bw=C.LINK_BW).time
+                    link_bps=C.LINK_BPS).time
             line += f" (fluid {fluid_t * 1e3:.3f} ms, {t / fluid_t:.2f}x)"
         elif sc.failures:
             healthy_t = parse_scenario(

@@ -496,7 +496,7 @@ class ClusterSimulator:
     def _surviving_probe(self) -> HxMeshAllocator:
         """An empty allocator with only the current failures applied."""
         probe = self._new_allocator()
-        for r, c in self.alloc.failed:
+        for r, c in sorted(self.alloc.failed):
             probe.fail_board(r, c)
         return probe
 
@@ -719,7 +719,7 @@ class ClusterSimulator:
         failed = frozenset(self.alloc.failed)
         if self._foot_cache is None or self._foot_cache[0] != failed:
             self._foot_cache = (failed, NE.FootprintCache(net))
-        report = NE.simulate_schedule(net, merged, link_bw=1.0,
+        report = NE.simulate_schedule(net, merged, link_bps=1.0,
                                       cache=self._foot_cache[1])
         lpe = net.meta.get("links_per_endpoint", 1)
         per_job: dict[int, list[tuple[float, float, float]]] = {}

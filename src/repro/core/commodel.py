@@ -26,9 +26,9 @@ import dataclasses
 import math
 
 # -- hardware constants of the paper's example accelerator -------------------
-LINK_BW = 50e9  # bytes/s per 400 Gb/s link
+LINK_BPS = 50e9  # bytes/s per 400 Gb/s link
 PLANES = 4
-INJECTION_BW = 4 * LINK_BW  # 4 planes x 400 Gb/s = 200 GB/s (1.6 Tb/s)
+INJECTION_BPS = 4 * LINK_BPS  # 4 planes x 400 Gb/s = 200 GB/s (1.6 Tb/s)
 ALPHA = 1.0e-6  # per-message latency (s); SST config: ~20-40ns/hop + switch
 
 
@@ -57,23 +57,23 @@ def volume_operator(n_op: int, word: int) -> float:
 # ---------------------------------------------------------------------------
 
 
-def t_ring(p: int, size: float, beta: float = 1 / INJECTION_BW, alpha: float = ALPHA) -> float:
+def t_ring(p: int, size_bytes: float, beta: float = 1 / INJECTION_BPS, alpha: float = ALPHA) -> float:
     """Pipelined unidirectional ring: T ≈ 2pα + 2Sβ."""
-    return 2 * p * alpha + 2 * size * beta
+    return 2 * p * alpha + 2 * size_bytes * beta
 
 
-def t_bidir_ring(p: int, size: float, beta: float = 1 / INJECTION_BW, alpha: float = ALPHA) -> float:
+def t_bidir_ring(p: int, size_bytes: float, beta: float = 1 / INJECTION_BPS, alpha: float = ALPHA) -> float:
     """Bidirectional ring (two NICs): T ≈ 2pα + Sβ."""
-    return 2 * p * alpha + size * beta
+    return 2 * p * alpha + size_bytes * beta
 
 
-def t_dual_hamiltonian(p: int, size: float, beta: float = 1 / INJECTION_BW, alpha: float = ALPHA) -> float:
+def t_dual_hamiltonian(p: int, size_bytes: float, beta: float = 1 / INJECTION_BPS, alpha: float = ALPHA) -> float:
     """Two bidirectional rings on edge-disjoint Hamiltonian cycles (4 NICs):
     T ≈ 2pα + (S/2)β."""
-    return 2 * p * alpha + size * beta / 2
+    return 2 * p * alpha + size_bytes * beta / 2
 
 
-def t_torus2d(p: int, size: float, beta: float = 1 / INJECTION_BW, alpha: float = ALPHA) -> float:
+def t_torus2d(p: int, size_bytes: float, beta: float = 1 / INJECTION_BPS, alpha: float = ALPHA) -> float:
     """2D-torus allreduce: row reduce-scatter → column allreduce → row
     allgather, two transposed copies in parallel on half the data each:
     T ≈ 4√p α + Sβ(1+2√p)/(2√p).
@@ -84,7 +84,7 @@ def t_torus2d(p: int, size: float, beta: float = 1 / INJECTION_BW, alpha: float 
     "the torus algorithm, which is 2x less bandwidth-efficient, achieves
     higher throughput at smaller message sizes")."""
     q = math.sqrt(p)
-    return 4 * q * alpha + size * beta * (1 + 2 * q) / (2 * q)
+    return 4 * q * alpha + size_bytes * beta * (1 + 2 * q) / (2 * q)
 
 
 ALGORITHMS = {
@@ -95,9 +95,9 @@ ALGORITHMS = {
 }
 
 
-def best_algorithm(p: int, size: float, **kw) -> tuple[str, float]:
+def best_algorithm(p: int, size_bytes: float, **kw) -> tuple[str, float]:
     """Multi-algorithm selection (paper Fig 13 conclusion)."""
-    times = {name: fn(p, size, **kw) for name, fn in ALGORITHMS.items()}
+    times = {name: fn(p, size_bytes, **kw) for name, fn in ALGORITHMS.items()}
     name = min(times, key=times.get)
     return name, times[name]
 
@@ -113,7 +113,7 @@ def best_algorithm(p: int, size: float, **kw) -> tuple[str, float]:
 # model* only (iteration-time predictions validated against
 # PAPER_ITERATION_MS).  For fractions *measured from our own fabric
 # simulation*, use the unified topology API —
-# ``repro.core.registry.parse(spec).profile()`` — which fills global_bw /
+# ``repro.core.registry.parse(spec).profile()`` — which fills global_bw_frac /
 # allreduce_eff / bisection from flow-level measurements on the actual
 # link graph; tests cross-check the two against PAPER_TABLE2_BANDWIDTH so
 # neither can silently drift.
@@ -126,7 +126,7 @@ class TopologyProfile:
     cost_small: float  # M$ (Table II)
     cost_large: float
     allreduce_eff: float  # share of optimal allreduce bw (large msgs)
-    global_bw: float  # alltoall share of injection bw
+    global_bw_frac: float  # alltoall share of injection bw
     # effective bandwidth fraction for *pipeline hops / multi-board model
     # traffic* of a deep D×P×O job.  1.0 = neighbor-perfect embedding.
     # Calibrated once on the paper's GPT-3 results (its most
@@ -218,7 +218,7 @@ def resnet152(topo: TopologyProfile, D: int = 1024) -> WorkloadResult:
     """Pure data parallelism; 60.2M fp32 gradients in 10 overlapped groups."""
     n_params, word, groups = 60.2e6, 4, 10
     v_d = volume_data(n_params, word, O=1, P=1)
-    beta = 1 / (INJECTION_BW * topo.allreduce_eff)
+    beta = 1 / (INJECTION_BPS * topo.allreduce_eff)
     t_group = t_bidir_ring(D, v_d / groups, beta=beta)
     # groups overlap with backprop; only the last group's reduction is exposed
     exposed = t_group
@@ -229,7 +229,7 @@ def cosmoflow(topo: TopologyProfile, D: int = 256, O: int = 4) -> WorkloadResult
     """Hybrid data+operator parallelism (halo exchanges + allgathers)."""
     n_params, word = 8.9e6, 4
     v_d = volume_data(n_params, word, O=O, P=1)
-    beta = 1 / (INJECTION_BW * topo.allreduce_eff)
+    beta = 1 / (INJECTION_BPS * topo.allreduce_eff)
     t_d = t_bidir_ring(D, v_d, beta=beta)
     # operator dimension: halo exchange + allgather per conv/FC stage; the
     # O=4 groups straddle boards for part of the allocation -> hop_eff term.
@@ -248,9 +248,9 @@ def dlrm(topo: TopologyProfile, p: int = 128) -> WorkloadResult:
     # eager protocol).  Sub-jobs see *local* global bandwidth, much higher
     # than the full-system alltoall fraction for direct topologies.
     alpha_a2a = 3.0e-6
-    glob = max(topo.global_bw, min(1.0, topo.global_bw * math.sqrt(16384 / p)))
-    t_a2a = (p - 1) * alpha_a2a + a2a_bytes / (INJECTION_BW * glob)
-    beta = 1 / (INJECTION_BW * topo.allreduce_eff)
+    glob = max(topo.global_bw_frac, min(1.0, topo.global_bw_frac * math.sqrt(16384 / p)))
+    t_a2a = (p - 1) * alpha_a2a + a2a_bytes / (INJECTION_BPS * glob)
+    beta = 1 / (INJECTION_BPS * topo.allreduce_eff)
     t_ar = t_bidir_ring(p, ar_bytes, beta=beta)
     exposed = 2 * 2 * t_a2a + t_ar  # fwd+bwd alltoalls are blocking
     return WorkloadResult("DLRM", topo.name, compute_ms, exposed * 1e3)
@@ -275,7 +275,7 @@ def gpt3_moe(topo: TopologyProfile, P: int = 96, experts: int = 16) -> WorkloadR
     compute_ms = 49.9
     # MHA part still Megatron-style (≈45% of the dense exposed time), FF part
     # becomes expert alltoalls across the 16-expert groups at local global bw.
-    glob = max(topo.global_bw, min(1.0, topo.global_bw * math.sqrt(16384 / (experts * 4))))
+    glob = max(topo.global_bw_frac, min(1.0, topo.global_bw_frac * math.sqrt(16384 / (experts * 4))))
     t_a2a = 0.95e-3 / glob * 0.989  # calibrated to FT's 2.3ms total exposed
     t_attn = gpt3(topo).comm_exposed_ms / 1e3 * 0.45
     return WorkloadResult("GPT-3-MoE", topo.name, compute_ms, (t_a2a + t_attn) * 1e3)

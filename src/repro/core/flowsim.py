@@ -965,7 +965,7 @@ def build_network(topo, failures=()) -> Network:
                 f"unknown failure descriptor {f!r}; supported grammar: "
                 f"{FAILURE_GRAMMAR}"
             )
-    for u in dead:
+    for u in sorted(dead):
         for v in adj.get(u, ()):
             adj[v] = [w for w in adj[v] if w != u]
         adj[u] = []

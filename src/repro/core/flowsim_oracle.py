@@ -87,7 +87,7 @@ def link_loads(
             du = D[si, u]
             if du < 0:
                 continue
-            for v in set(net.adj.get(int(u), ())):
+            for v in sorted(set(net.adj.get(int(u), ()))):
                 if D[ti, v] == dst - du - 1 and D[si, v] == du + 1:
                     loads[(int(u), v)] += vol * Np[si, u] * Np[ti, v] / nst
     return loads
@@ -145,7 +145,7 @@ def alltoall_fraction(net: Network, links_per_endpoint: int = 1) -> float:
     max_load = 0.0
     seen = set()
     for u, nbrs in net.adj.items():
-        for v in set(nbrs):
+        for v in sorted(set(nbrs)):
             if (u, v) in seen:
                 continue
             seen.add((u, v))

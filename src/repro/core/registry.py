@@ -178,7 +178,7 @@ class Topology:
     def profile(self, measured: bool = True) -> commodel.TopologyProfile:
         """The workload-model profile of this topology.
 
-        ``measured=True`` (default) fills ``global_bw`` / ``allreduce_eff``
+        ``measured=True`` (default) fills ``global_bw_frac`` / ``allreduce_eff``
         / ``bisection`` with flow-level measurements from the actual link
         graph at this spec's scale; costs come from :meth:`structure` and
         ``hop_eff`` stays the paper-calibrated value of the matching table
@@ -209,7 +209,7 @@ class Topology:
             cost_small=cost,
             cost_large=cost,
             allreduce_eff=meas["allreduce"],
-            global_bw=meas["alltoall"],
+            global_bw_frac=meas["alltoall"],
             hop_eff=hop_eff,
             bisection=meas["bisection"],
             provenance=f"measured(flowsim)@{self.spec}{hop_note}",
@@ -305,7 +305,7 @@ def simulated_time(scenario) -> float:
             from repro.packetsim import engine as PE
 
             report = PE.simulate_packet_schedule(
-                net, sc.schedule(net), link_bw=commodel.LINK_BW,
+                net, sc.schedule(net), link_bps=commodel.LINK_BPS,
                 config=sc.fidelity.config())
         elif sc.fidelity.mode == "calibrated":
             from repro.packetsim import distill
@@ -314,11 +314,11 @@ def simulated_time(scenario) -> float:
                 sc.topology.family, sc.traffic.name,
                 len(net.active_endpoints()), collective=sc.collective)
             report = NE.simulate_schedule(
-                net, sc.schedule(net), link_bw=commodel.LINK_BW,
+                net, sc.schedule(net), link_bps=commodel.LINK_BPS,
                 record_timeline=False, link_eff=cap)
         else:
             report = NE.simulate_schedule(
-                net, sc.schedule(net), link_bw=commodel.LINK_BW,
+                net, sc.schedule(net), link_bps=commodel.LINK_BPS,
                 record_timeline=False)
         _simulated_mem[key] = report.time
     return _simulated_mem[key]

@@ -191,7 +191,7 @@ def _bit_complement_demand(net: F.Network, vol: float = 1.0) -> Demand:
     classic bit-complement for power-of-two ``n``)."""
     n = net.n_endpoints
     act = set(net.active_endpoints().tolist())
-    entries = {s: {n - 1 - s: vol} for s in act
+    entries = {s: {n - 1 - s: vol} for s in sorted(act)
                if n - 1 - s != s and n - 1 - s in act}
     return _sparse_demand(net, entries)
 

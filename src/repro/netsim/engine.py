@@ -22,7 +22,7 @@ fabric?  This module is that engine, in the fluid limit:
   keyed by the packed active-flow bitmap, so a 16k-endpoint ring
   allreduce costs one waterfill, not thirty thousand.
 
-Time is in seconds once ``link_bw`` is given in bytes/s (default 1.0:
+Time is in seconds once ``link_bps`` is given in bytes/s (default 1.0:
 time == bytes through a unit link).  Phase activation latency (the α of
 the α-β models) is charged once per phase repeat.
 
@@ -212,7 +212,7 @@ class FootprintCache:
             frontier = {t}
             for lev in range(dist, 0, -1):
                 prev: set[int] = set()
-                for v in frontier:
+                for v in sorted(frontier):
                     for u in adj.get(v, ()):
                         if ds[u] == lev - 1:
                             e = self._edge_index[(u, v)]
@@ -364,7 +364,7 @@ class SimReport:
     """Outcome of one :func:`simulate_schedule` run.
 
     ``time`` is the completion time of the whole schedule (seconds given
-    ``link_bw`` in bytes/s).  ``flow_bytes``/``delivered`` are per *flow
+    ``link_bps`` in bytes/s).  ``flow_bytes``/``delivered`` are per *flow
     slot* (phase flow x all its repeats) — byte conservation means the two
     agree.  ``timeline`` holds ``(t0, t1, {group: aggregate bytes/s})``
     segments for every interval with active flows — the per-job
@@ -403,7 +403,7 @@ class SimReport:
 def simulate_schedule(
     net: F.Network,
     schedule,
-    link_bw: float = 1.0,
+    link_bps: float = 1.0,
     cache: FootprintCache | None = None,
     record_timeline: bool = True,
     link_eff: float = 1.0,
@@ -419,7 +419,7 @@ def simulate_schedule(
     hit the rate cache.
 
     ``link_eff`` derates every link's capacity to that fraction of
-    ``link_bw`` — the hook the calibrated fidelity mode uses to apply
+    ``link_bps`` — the hook the calibrated fidelity mode uses to apply
     packet-distilled rate caps (:mod:`repro.packetsim.distill`) without
     leaving the fluid engine.
     """
@@ -589,7 +589,7 @@ def simulate_schedule(
             rates = cached
         t_act = queue.next_time()
         if has_active:
-            r = rates[active] * link_bw
+            r = rates[active] * link_bps
             with np.errstate(divide="ignore"):
                 dts = np.where(r > 0, remaining[active] / np.maximum(r, 1e-300),
                                np.inf)
@@ -606,7 +606,7 @@ def simulate_schedule(
         if has_active and t_next > t:
             if record_timeline:
                 agg = np.bincount(slot_group[active],
-                                  weights=rates[active] * link_bw,
+                                  weights=rates[active] * link_bps,
                                   minlength=len(group_names))
                 seg = {g: float(agg[k]) for g, k in group_code.items()
                        if agg[k] > 0}
@@ -615,7 +615,7 @@ def simulate_schedule(
                     timeline[-1] = (timeline[-1][0], t_next, seg)
                 else:
                     timeline.append((t, t_next, seg))
-            adv = rates[active] * link_bw * (t_next - t)
+            adv = rates[active] * link_bps * (t_next - t)
             delivered[active] += adv
             remaining[active] -= adv
         t = t_next

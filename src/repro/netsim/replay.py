@@ -35,7 +35,7 @@ def steady_iteration_times(
     net: F.Network,
     schedules: dict,
     cache: FootprintCache | None = None,
-    link_bw: float = 1.0,
+    link_bps: float = 1.0,
 ) -> dict:
     """Per-schedule steady-state iteration time under fair sharing.
 
@@ -61,7 +61,7 @@ def steady_iteration_times(
             slots[(key, pi)] = ids
     if pairs:
         W = foot.matrix(pairs)
-        rates = waterfill(W) * link_bw
+        rates = waterfill(W) * link_bps
     else:
         rates = np.zeros(0)
     fb = np.asarray(fbytes)
@@ -96,7 +96,7 @@ def contention_fractions(
     net: F.Network,
     schedules: dict,
     cache: FootprintCache | None = None,
-    link_bw: float = 1.0,
+    link_bps: float = 1.0,
 ) -> dict:
     """Per-tenant ``(contended, isolated, fraction)`` iteration times: one
     joint waterfill with every tenant active, then each tenant alone on
@@ -104,11 +104,11 @@ def contention_fractions(
     tenant with a zero-cost schedule)."""
     foot = cache if cache is not None else FootprintCache(net)
     joint = steady_iteration_times(net, schedules, cache=foot,
-                                   link_bw=link_bw)
+                                   link_bps=link_bps)
     out = {}
     for key, sched in schedules.items():
         iso = steady_iteration_times(net, {key: sched}, cache=foot,
-                                     link_bw=link_bw)[key]
+                                     link_bps=link_bps)[key]
         cont = joint[key]
         out[key] = (cont, iso, iso / cont if cont > 0 else 1.0)
     return out

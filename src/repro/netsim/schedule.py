@@ -31,7 +31,7 @@ Lowerings map an algorithm onto a *concrete* fabric — healthy or failed:
 All payloads are the **full** allreduce size S; lowering divides by the
 ``planes`` count (the fabric graph models one plane, all planes run the
 same schedule independently), which is what makes the simulated times
-line up with the α-β models' ``β = 1/INJECTION_BW`` normalization.
+line up with the α-β models' ``β = 1/INJECTION_BPS`` normalization.
 
 The ``coll=`` scenario leg (:class:`CollectiveSpec`,
 :func:`parse_collective`) addresses a lowering + payload in one token —

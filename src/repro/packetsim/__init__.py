@@ -9,7 +9,7 @@ imported lazily at dispatch time.
 """
 
 from repro.packetsim.spec import (
-    DEFAULT_PACKET,
+    DEFAULT_PACKET_BYTES,
     MODES,
     FidelitySpec,
     fidelity_grammar,
@@ -28,7 +28,7 @@ from repro.packetsim.engine import (
 )
 
 __all__ = [
-    "DEFAULT_PACKET",
+    "DEFAULT_PACKET_BYTES",
     "MODES",
     "FidelitySpec",
     "fidelity_grammar",

@@ -208,7 +208,7 @@ def regenerate(path: pathlib.Path | None = None, progress=None) -> dict:
         "version": 1,
         "instrument": {
             "engine": "repro.packetsim.engine.saturation_fraction",
-            "packet": cfg.packet,
+            "packet": cfg.packet_bytes,
             "fifo_depth": cfg.fifo_depth,
             "voq_depth": cfg.voq_depth,
             "warmup": cfg.warmup,

@@ -15,8 +15,8 @@ idiom reference):
 * **Ports** are the network's directed link bundles
   (``net.directed_edges()``); a bundle of multiplicity ``m`` moves up to
   ``m`` packets per cycle.  One cycle serializes one packet
-  (``PacketConfig.packet`` bytes) onto one link, so the cycle time in
-  seconds is ``packet / link_bw``.
+  (``PacketConfig.packet_bytes``) onto one link, so the cycle time in
+  seconds is ``packet_bytes / link_bps``.
 * Every node — accelerator *and* switch — runs the same router: finite
   input FIFOs per in-port, a virtual output queue (VOQ) per (in-port,
   out-port) pair, and per-out-port round-robin (MDRR-style) arbitration
@@ -70,7 +70,7 @@ import numpy as np
 from repro.core import flowsim as F
 from repro.core.timecore import EventLoop
 
-from repro.packetsim.spec import DEFAULT_PACKET
+from repro.packetsim.spec import DEFAULT_PACKET_BYTES
 
 # timecore event kinds (names prefixed to stay disjoint from netsim's
 # "phase" and the cluster's kinds when queues are ever merged)
@@ -87,10 +87,10 @@ class PacketConfig:
     packets, shallow per-port queues) scaled to the small fabrics the
     validity envelope allows."""
 
-    packet: int = DEFAULT_PACKET  # bytes per packet == per cycle per link
+    packet_bytes: int = DEFAULT_PACKET_BYTES  # bytes per packet == per cycle per link
     fifo_depth: int = 16  # input-FIFO slots per port (split across classes)
     voq_depth: int = 8  # slots per (in-port, class, out-port) VOQ
-    link_latency: int = 1  # cycles on the wire per hop
+    link_latency_cycles: int = 1  # per-hop wire latency
     seed: int = 0  # saturation injection sampling seed
     warmup: int = 500  # saturation warm-up cycles
     measure: int = 2000  # saturation measurement window (cycles)
@@ -387,7 +387,7 @@ class PacketEngine:
             nq = len(qs)
             ptr = self.rr[k]
             sent = 0
-            ready = cycle + cfg.link_latency
+            ready = cycle + cfg.link_latency_cycles
             fl = flight[k]
             cnt = flight_cnt[k]
             inqk = inq[k]
@@ -468,12 +468,12 @@ class PacketReport:
         return float((np.abs(self.delivered - self.flow_bytes) / scale).max())
 
 
-def estimate_packets(schedule, packet: int = DEFAULT_PACKET) -> int:
+def estimate_packets(schedule, packet_bytes: int = DEFAULT_PACKET_BYTES) -> int:
     """Total packet count a schedule lowers to at the given packet size —
     the validity-envelope estimate checked against ``max_packets``."""
     total = 0
     for ph in schedule.phases:
-        per_repeat = sum(-(-int(b) // packet) for (_, _, b) in ph.flows
+        per_repeat = sum(-(-int(b) // packet_bytes) for (_, _, b) in ph.flows
                          if b > 0)
         total += per_repeat * max(1, ph.repeat)
     return total
@@ -482,7 +482,7 @@ def estimate_packets(schedule, packet: int = DEFAULT_PACKET) -> int:
 def simulate_packet_schedule(
     net: F.Network,
     schedule,
-    link_bw: float = 1.0,
+    link_bps: float = 1.0,
     config: PacketConfig | None = None,
 ) -> PacketReport:
     """Replay a :class:`repro.netsim.schedule.CommSchedule` at packet
@@ -502,11 +502,11 @@ def simulate_packet_schedule(
     cfg = config or PacketConfig()
     phases = schedule.phases
     alpha = schedule.alpha
-    n_pkts = estimate_packets(schedule, cfg.packet)
+    n_pkts = estimate_packets(schedule, cfg.packet_bytes)
     if n_pkts > cfg.max_packets:
         raise ValueError(
             f"schedule {schedule.name!r} lowers to ~{n_pkts} packets at "
-            f"p{cfg.packet}, over the packet-fidelity envelope of "
+            f"p{cfg.packet_bytes}, over the packet-fidelity envelope of "
             f"{cfg.max_packets}; shrink the payload, raise the packet "
             f"size, or use fluid fidelity")
 
@@ -559,10 +559,10 @@ def simulate_packet_schedule(
     node_flows: dict[int, deque] = {}
     live_flows = [0]  # flow-repeats currently in flight
     loop = EventLoop()
-    cycle_dt = cfg.packet / link_bw
+    cycle_dt = cfg.packet_bytes / link_bps
     state = {"cycle": 0, "armed": False, "now": 0.0}
     latencies: list[int] = []
-    pkt_bytes = cfg.packet
+    pkt_bytes = cfg.packet_bytes
 
     def _node_source(u: int):
         dq = node_flows[u]
@@ -749,7 +749,7 @@ def saturation_fraction(
                 all_dsts.update(int(t) for t in nz)
     eng = PacketEngine(net, sorted(all_dsts), cfg)
     rng = random.Random(cfg.seed)
-    pkt_bytes = cfg.packet
+    pkt_bytes = cfg.packet_bytes
     warmup, measure = cfg.warmup, cfg.measure
     total = warmup + measure
     delivered_pkts: dict[int, int] = {}

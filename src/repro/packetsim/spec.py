@@ -37,7 +37,7 @@ import re
 # keys are unchanged by the fidelity leg's existence.
 MODES = ("fluid", "packet", "calibrated")
 
-DEFAULT_PACKET = 512  # bytes serialized per cycle per link (fm16 exemplar)
+DEFAULT_PACKET_BYTES = 512  # bytes serialized per cycle per link (fm16 exemplar)
 
 _PARAM_RE = re.compile(r"p(\d+)")
 
@@ -47,7 +47,7 @@ def fidelity_grammar() -> str:
     return ("fidelity=<mode>[:p<bytes>] with mode in ["
             + "|".join(MODES)
             + f"] and p the packet size in bytes (packet mode only, "
-            f"default {DEFAULT_PACKET})")
+            f"default {DEFAULT_PACKET_BYTES})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,22 +61,22 @@ class FidelitySpec:
     """
 
     mode: str = "fluid"
-    packet: int = DEFAULT_PACKET  # bytes per packet (packet mode only)
+    packet_bytes: int = DEFAULT_PACKET_BYTES  # packet mode only
 
     def __str__(self) -> str:
-        tail = f":p{self.packet}" if self.packet != DEFAULT_PACKET else ""
+        tail = f":p{self.packet_bytes}" if self.packet_bytes != DEFAULT_PACKET_BYTES else ""
         return f"fidelity={self.mode}{tail}"
 
     def __bool__(self) -> bool:
         """True when the leg must appear in the canonical string."""
-        return self.mode != "fluid" or self.packet != DEFAULT_PACKET
+        return self.mode != "fluid" or self.packet_bytes != DEFAULT_PACKET_BYTES
 
     def config(self):
         """The :class:`repro.packetsim.engine.PacketConfig` this leg
         selects (lazy import — the grammar stays engine-free)."""
         from repro.packetsim.engine import PacketConfig
 
-        return PacketConfig(packet=self.packet)
+        return PacketConfig(packet_bytes=self.packet_bytes)
 
 
 def parse_fidelity(token) -> FidelitySpec:
@@ -103,7 +103,7 @@ def parse_fidelity(token) -> FidelitySpec:
         raise ValueError(
             f"unknown fidelity mode {mode!r}; grammar: "
             f"{fidelity_grammar()}")
-    packet = DEFAULT_PACKET
+    packet = DEFAULT_PACKET_BYTES
     seen = False
     for part in parts[1:]:
         m = _PARAM_RE.fullmatch(part)
@@ -121,4 +121,4 @@ def parse_fidelity(token) -> FidelitySpec:
         raise ValueError(
             f"packet-size param only applies to packet mode, not "
             f"{mode!r}; grammar: {fidelity_grammar()}")
-    return FidelitySpec(mode=mode, packet=packet)
+    return FidelitySpec(mode=mode, packet_bytes=packet)

@@ -1,0 +1,56 @@
+"""simlint: contract-aware static analysis for the simulation stack.
+
+The repo's credibility as a reproduction rests on invariants the paper
+takes for granted — deterministic event ordering (the ``(time, seq)``
+tie-break contract of :mod:`repro.core.timecore`), exact byte
+conservation across the fluid/packet engines, and one canonical scenario
+string per experiment.  Runtime tests sample a few configurations;
+``simlint`` checks the *source* for whole classes of bug before any
+simulation runs, and CI gates on zero unsuppressed findings.
+
+Four rule groups (registered in a rule registry mirroring
+``registry.register_family`` / ``traffic.register_traffic``):
+
+* **determinism** — iteration over sets feeding simulator state
+  (``SET-ITER``), unseeded RNG construction (``UNSEEDED-RNG``), and
+  wall-clock reads reachable from simulation modules (``WALL-CLOCK``);
+* **events** — mutation of :class:`~repro.core.timecore.EventQueue`
+  internals or the clock outside the handler API (``QUEUE-INTERNALS``)
+  and handlers that push events into the past (``PAST-PUSH``);
+* **units** — the suffix unit convention (``_bytes``/``_s``/``_cycles``/
+  ``_bps``/``_frac``/...): mixed-unit arithmetic (``UNIT-MIX``),
+  unconverted cross-unit assignment (``UNIT-ASSIGN``), and ambiguous
+  bare names like ``size``/``rate``/``packet`` in the audited unit
+  modules (``UNIT-AMBIG``);
+* **scenario** — every scenario-shaped string literal in tests,
+  benchmarks, examples and the fenced code blocks of ``DESIGN.md`` /
+  ``ROADMAP.md`` must parse through ``registry.parse_scenario``
+  (``SCENARIO-LIT``).
+
+CLI::
+
+    python -m repro.simlint src tests benchmarks examples --json report.json
+
+Per-line suppression: ``# simlint: ignore[RULE]`` on the reported line;
+per-file: ``# simlint: ignore-file[RULE]``.  Both are counted in the
+JSON report — the repo budget (asserted by ``tests/test_simlint.py``) is
+at most :data:`repro.simlint.config.SUPPRESSION_BUDGET` explicit
+suppressions.  See DESIGN.md §12.
+"""
+
+from repro.simlint.framework import (  # noqa: F401
+    Finding,
+    FileContext,
+    LintResult,
+    Rule,
+    RULES,
+    register_rule,
+    lint_paths,
+    lint_sources,
+)
+
+# importing the rule modules registers every rule
+from repro.simlint import determinism as _determinism  # noqa: F401,E402
+from repro.simlint import events as _events  # noqa: F401,E402
+from repro.simlint import units as _units  # noqa: F401,E402
+from repro.simlint import scenario as _scenario  # noqa: F401,E402

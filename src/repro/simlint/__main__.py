@@ -1,0 +1,74 @@
+"""CLI entry point: ``python -m repro.simlint PATHS... [--json FILE]``.
+
+Exits 0 when every finding is suppressed (or there are none), 1 when
+unsuppressed findings remain, 2 on usage errors.  ``--json`` writes the
+schema-validated report (see ``benchmarks/schema.json``,
+``simlint_report`` block); ``--list-rules`` prints the rule inventory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time  # wall-clock allowlisted: the linter times its own run
+
+from repro.simlint.framework import RULES, lint_paths
+from repro.simlint.report import build_report
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.simlint",
+        description="contract-aware static analysis for the simulation "
+                    "stack (determinism, event-loop, units, scenarios)")
+    parser.add_argument("paths", nargs="*",
+                        default=["src", "tests", "benchmarks", "examples"],
+                        help="files or directories to lint "
+                             "(default: src tests benchmarks examples)")
+    parser.add_argument("--json", metavar="FILE",
+                        help="write the JSON report to FILE ('-' = stdout)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule inventory and exit")
+    parser.add_argument("--no-docs", action="store_true",
+                        help="skip DESIGN.md/ROADMAP.md fenced-block scan")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for name, rule in sorted(RULES.items()):
+            print(f"{name:16s} [{rule.group}] {rule.description}")
+        return 0
+
+    t0 = time.perf_counter()
+    result = lint_paths(args.paths or ["src", "tests", "benchmarks",
+                                       "examples"],
+                        include_docs=not args.no_docs)
+    runtime_s = time.perf_counter() - t0
+
+    for path, err in result.parse_errors:
+        print(f"{path}: PARSE-ERROR: {err}", file=sys.stderr)
+    for f in result.findings:
+        if not f.suppressed:
+            print(f.format())
+
+    n = len(result.unsuppressed)
+    n_sup = len(result.suppressed)
+    print(f"simlint: {result.files_scanned} files, {len(RULES)} rules, "
+          f"{n} finding{'s' if n != 1 else ''} "
+          f"({n_sup} suppressed) in {runtime_s:.2f}s",
+          file=sys.stderr)
+
+    if args.json:
+        report = build_report(result, runtime_s=round(runtime_s, 4))
+        text = json.dumps(report, indent=2, sort_keys=False)
+        if args.json == "-":
+            print(text)
+        else:
+            with open(args.json, "w", encoding="utf-8") as fh:
+                fh.write(text + "\n")
+
+    return 1 if (n or result.parse_errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,91 @@
+"""Scopes, allowlist and budgets of the simlint rules.
+
+A rule only fires inside its *scope* — path prefixes (or exact files)
+relative to the repo root.  The :data:`ALLOWLIST` names the handful of
+sites where a pattern a rule hunts is *legitimate* (CLI wall-clock
+timing in ``launch/``, the linter reporting its own runtime); allowlist
+entries carry a reason and are config, not suppressions — the per-line
+``# simlint: ignore[RULE]`` budget (:data:`SUPPRESSION_BUDGET`) is for
+true positives a human has judged, and ``tests/test_simlint.py`` keeps
+it honest.
+"""
+
+from __future__ import annotations
+
+# -- rule scopes (repo-relative posix path prefixes) -------------------------
+
+# The simulator subsystems whose internal state must be reproducible.
+SIM_SCOPE = (
+    "src/repro/core/",
+    "src/repro/netsim/",
+    "src/repro/packetsim/",
+    "src/repro/cluster/",
+)
+
+# Everything importable by the simulators (wall-clock / RNG hygiene).
+SRC_SCOPE = ("src/repro/",)
+
+# Event-loop contract rules run everywhere *except* the time core itself
+# (the one module allowed to touch its own internals).
+EVENT_SCOPE = ("src/", "tests/", "benchmarks/", "examples/")
+EVENT_SCOPE_EXCLUDE = ("src/repro/core/timecore.py",)
+
+# The unit-suffix convention is enforced on the modules where bytes,
+# seconds, cycles and rate fractions meet (DESIGN.md §12).
+UNIT_SCOPE = (
+    "src/repro/core/commodel.py",
+    "src/repro/netsim/engine.py",
+    "src/repro/packetsim/engine.py",
+    "src/repro/packetsim/spec.py",
+)
+
+# Scenario string literals are validated wherever experiments are named.
+SCENARIO_SCOPE = ("tests/", "benchmarks/", "examples/")
+
+# Repo-level docs whose fenced code blocks are scanned for scenario
+# tokens whenever the CLI runs (added to any directory roots given).
+DOC_FILES = ("DESIGN.md", "ROADMAP.md")
+
+# -- allowlist ---------------------------------------------------------------
+
+# (rule, path prefix, reason).  These are *configuration*: sites where
+# the flagged pattern is the intended behaviour.  Keep each entry
+# justified — an allowlist without reasons is just a blindfold.
+ALLOWLIST: tuple[tuple[str, str, str], ...] = (
+    ("WALL-CLOCK", "src/repro/launch/dryrun.py",
+     "CLI dry-run prints wall-clock compile/run timings to the user; "
+     "never inside simulated time"),
+    ("WALL-CLOCK", "src/repro/launch/serve.py",
+     "serving demo reports real prefill/decode latency"),
+    ("WALL-CLOCK", "src/repro/launch/train.py",
+     "training loop reports real step timing"),
+    ("WALL-CLOCK", "src/repro/simlint/",
+     "the linter times its own run for the JSON report"),
+    ("UNSEEDED-RNG", "src/repro/cluster/traces.py",
+     "trace generators must take an explicit seed; entry kept so any "
+     "future unseeded draw in this file is a conscious decision"),
+)
+
+# Explicit-suppression budget for the whole tree, asserted by
+# tests/test_simlint.py (the acceptance contract: <= 10).
+SUPPRESSION_BUDGET = 10
+
+
+def in_scope(rel: str, prefixes, excludes=()) -> bool:
+    """True when ``rel`` (repo-relative posix path) falls under one of
+    ``prefixes`` (a prefix ending in ``/`` matches a subtree, otherwise
+    the exact file) and under none of ``excludes``."""
+    def match(p: str) -> bool:
+        return rel.startswith(p) if p.endswith("/") else rel == p
+
+    return any(match(p) for p in prefixes) and not any(
+        match(p) for p in excludes)
+
+
+def allowlisted(rule: str, rel: str) -> str | None:
+    """The allowlist reason covering (rule, path), or ``None``."""
+    for r, prefix, reason in ALLOWLIST:
+        if r == rule and (rel.startswith(prefix) if prefix.endswith("/")
+                          else rel == prefix):
+            return reason
+    return None

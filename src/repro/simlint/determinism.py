@@ -1,0 +1,311 @@
+"""Determinism rules: SET-ITER, UNSEEDED-RNG, WALL-CLOCK.
+
+The simulators promise bit-identical results for a given scenario string
+and seed (the ``(time, seq)`` contract of :mod:`repro.core.timecore`).
+Three source-level patterns silently break that promise:
+
+* iterating a ``set`` (or ``frozenset``) whose elements contain strings
+  or other salted-hash types — iteration order then depends on
+  ``PYTHONHASHSEED``, and even for ints it is an implementation detail,
+  so any set iteration feeding event pushes, float accumulation or
+  output must go through ``sorted(...)`` (``SET-ITER``);
+* drawing randomness from unseeded or global-state RNGs
+  (``UNSEEDED-RNG``);
+* reading the wall clock from code reachable by the simulators
+  (``WALL-CLOCK``) — simulated time comes from the event loop only.
+
+Note ``dict`` iteration is *not* flagged: CPython dicts preserve
+insertion order, so a dict filled deterministically iterates
+deterministically.  Sets make no such promise.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.simlint import config
+from repro.simlint.framework import FileContext, register_rule
+
+# -- SET-ITER ----------------------------------------------------------------
+
+# Consumers that are insensitive to iteration order (or impose one).
+_ORDER_FREE_CALLS = {"sorted", "sum", "min", "max", "any", "all", "len",
+                     "set", "frozenset"}
+
+# Attribute names declared set-typed anywhere in the linted tree; filled
+# by the prepare hook so e.g. ``alloc.failed`` is known to be a set at
+# its use sites in other files.
+_SET_ATTRS: set[str] = set()
+
+
+def _ann_is_set(ann: ast.expr | None) -> bool:
+    if ann is None:
+        return False
+    text = ast.unparse(ann).replace(" ", "")
+    return (text.startswith(("set[", "frozenset[", "Set[", "FrozenSet["))
+            or text in ("set", "frozenset", "Set", "FrozenSet"))
+
+
+def _value_is_set(value: ast.expr | None) -> bool:
+    if value is None:
+        return False
+    if isinstance(value, (ast.Set, ast.SetComp)):
+        return True
+    if (isinstance(value, ast.Call) and isinstance(value.func, ast.Name)
+            and value.func.id in ("set", "frozenset")):
+        return True
+    return False
+
+
+def _scope_walk(scope: ast.AST):
+    """Walk ``scope`` without descending into nested function/class
+    scopes (so a set-typed local in one function cannot taint a
+    same-named variable in another)."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _collect_set_names(tree: ast.AST,
+                       walk=ast.walk) -> tuple[set[str], set[str]]:
+    """(variable names, attribute names) bound to set values/annotations
+    in this scope."""
+    names: set[str] = set()
+    attrs: set[str] = set()
+    for node in walk(tree):
+        targets: list[ast.expr] = []
+        is_set = False
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+            is_set = _value_is_set(node.value)
+        elif isinstance(node, ast.AnnAssign):
+            targets = [node.target]
+            is_set = _ann_is_set(node.annotation) or _value_is_set(node.value)
+        elif isinstance(node, ast.arg):
+            targets = []
+            if _ann_is_set(node.annotation):
+                names.add(node.arg)
+        elif isinstance(node, ast.AugAssign):
+            # ``acc |= {...}`` keeps acc a set
+            targets = [node.target]
+            is_set = _value_is_set(node.value)
+        if not is_set:
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name):
+                names.add(t.id)
+            elif isinstance(t, ast.Attribute):
+                attrs.add(t.attr)
+    return names, attrs
+
+
+def _set_expr_kind(node: ast.expr, names: set[str]) -> str | None:
+    """Describe ``node`` if it is set-valued, else ``None``."""
+    if isinstance(node, ast.Set):
+        return "set literal"
+    if isinstance(node, ast.SetComp):
+        return "set comprehension"
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("set", "frozenset")):
+        return f"{node.func.id}() result"
+    if isinstance(node, ast.Name) and node.id in names:
+        return f"set {node.id!r}"
+    if isinstance(node, ast.Attribute) and node.attr in _SET_ATTRS:
+        return f"set attribute .{node.attr}"
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+        left = _set_expr_kind(node.left, names)
+        right = _set_expr_kind(node.right, names)
+        if left and right:
+            return f"set expression ({left} {type(node.op).__name__} ...)"
+    return None
+
+
+def _order_free_context(node: ast.AST,
+                        parents: dict[ast.AST, ast.AST]) -> bool:
+    """True when the set expression is consumed by an order-insensitive
+    call (``sorted(s)``, ``len(s)``, ...) or builds another set."""
+    parent = parents.get(node)
+    if (isinstance(parent, ast.Call) and isinstance(parent.func, ast.Name)
+            and parent.func.id in _ORDER_FREE_CALLS
+            and node in parent.args):
+        return True
+    return False
+
+
+def _prepare_set_attrs(contexts: list[FileContext]) -> None:
+    _SET_ATTRS.clear()
+    for ctx in contexts:
+        tree = ctx.tree
+        if tree is None:
+            continue
+        _, attrs = _collect_set_names(tree)
+        _SET_ATTRS.update(attrs)
+
+
+@register_rule(
+    "SET-ITER", "determinism",
+    "iteration over a set without an explicit ordering; wrap the "
+    "iterable in sorted(...) so results cannot depend on hash order",
+    scope=config.SIM_SCOPE, prepare=_prepare_set_attrs)
+def check_set_iter(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    tree = ctx.tree
+    if tree is None:
+        return
+    parents = ctx.parents
+    # Set-typed names are tracked per lexical scope: module-level names
+    # plus, inside each function, that function's own bindings.
+    module_names, _ = _collect_set_names(tree, walk=_scope_walk)
+    scope_names: dict[ast.AST, set[str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn_names, _ = _collect_set_names(node, walk=_scope_walk)
+            scope_names[node] = module_names | fn_names
+
+    def names_at(node: ast.AST) -> set[str]:
+        cur = node
+        while cur in parents:
+            cur = parents[cur]
+            if cur in scope_names:
+                return scope_names[cur]
+        return module_names
+
+    seen: set[tuple[int, int]] = set()
+
+    def flag(iter_node: ast.expr, where: str):
+        kind = _set_expr_kind(iter_node, names_at(iter_node))
+        if kind is None:
+            return
+        if _order_free_context(iter_node, parents):
+            return
+        key = (iter_node.lineno, iter_node.col_offset)
+        if key in seen:
+            return
+        seen.add(key)
+        yield (iter_node.lineno, iter_node.col_offset,
+               f"{where} iterates {kind} without an explicit ordering; "
+               f"wrap in sorted(...)")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.For):
+            yield from flag(node.iter, "for loop")
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.DictComp)):
+            # a generator fed straight into an order-free call is fine:
+            # sorted(x for x in s), sum(...), etc.
+            if _order_free_context(node, parents):
+                continue
+            for gen in node.generators:
+                yield from flag(gen.iter, "comprehension")
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Name)
+              and node.func.id in ("list", "tuple") and node.args):
+            # list(s)/tuple(s) freeze the nondeterministic order
+            yield from flag(node.args[0], f"{node.func.id}() call")
+
+
+# -- UNSEEDED-RNG ------------------------------------------------------------
+
+_GLOBAL_NP_RANDOM_FNS = {"rand", "randn", "randint", "random", "shuffle",
+                         "permutation", "choice", "normal", "uniform",
+                         "sample", "standard_normal"}
+_GLOBAL_RANDOM_FNS = {"random", "randint", "randrange", "shuffle",
+                      "choice", "choices", "sample", "uniform", "gauss"}
+
+
+def _is_np_random(node: ast.expr) -> bool:
+    """Matches ``np.random`` / ``numpy.random``."""
+    return (isinstance(node, ast.Attribute) and node.attr == "random"
+            and isinstance(node.value, ast.Name)
+            and node.value.id in ("np", "numpy"))
+
+
+@register_rule(
+    "UNSEEDED-RNG", "determinism",
+    "RNG constructed without an explicit seed, or a draw from "
+    "module-global RNG state; thread a seed from the scenario spec",
+    scope=config.SRC_SCOPE)
+def check_unseeded_rng(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    tree = ctx.tree
+    if tree is None:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        has_args = bool(node.args) or bool(node.keywords)
+        # np.random.default_rng() / numpy.random.default_rng()
+        if (isinstance(func, ast.Attribute) and func.attr == "default_rng"
+                and _is_np_random(func.value) and not has_args):
+            yield (node.lineno, node.col_offset,
+                   "np.random.default_rng() without a seed; pass the "
+                   "scenario seed explicitly")
+        # random.Random()
+        elif (isinstance(func, ast.Attribute) and func.attr == "Random"
+              and isinstance(func.value, ast.Name)
+              and func.value.id == "random" and not has_args):
+            yield (node.lineno, node.col_offset,
+                   "random.Random() without a seed; pass the scenario "
+                   "seed explicitly")
+        # np.random.<draw>(...) — module-global RNG state
+        elif (isinstance(func, ast.Attribute)
+              and func.attr in _GLOBAL_NP_RANDOM_FNS
+              and _is_np_random(func.value)):
+            yield (node.lineno, node.col_offset,
+                   f"np.random.{func.attr}() draws from module-global "
+                   f"RNG state; use a seeded Generator instance")
+        # random.<draw>(...) — stdlib module-global RNG state
+        elif (isinstance(func, ast.Attribute)
+              and func.attr in _GLOBAL_RANDOM_FNS
+              and isinstance(func.value, ast.Name)
+              and func.value.id == "random"):
+            yield (node.lineno, node.col_offset,
+                   f"random.{func.attr}() draws from module-global RNG "
+                   f"state; use a seeded random.Random instance")
+
+
+# -- WALL-CLOCK --------------------------------------------------------------
+
+_TIME_FNS = {"time", "time_ns", "monotonic", "monotonic_ns",
+             "perf_counter", "perf_counter_ns", "process_time"}
+
+
+@register_rule(
+    "WALL-CLOCK", "determinism",
+    "wall-clock read reachable from simulation code; simulated time "
+    "comes from the event loop (loop.now), never the host clock",
+    scope=config.SRC_SCOPE)
+def check_wall_clock(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    tree = ctx.tree
+    if tree is None:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if not isinstance(func, ast.Attribute):
+            continue
+        # time.time() / time.monotonic() / ...
+        if (func.attr in _TIME_FNS and isinstance(func.value, ast.Name)
+                and func.value.id == "time"):
+            yield (node.lineno, node.col_offset,
+                   f"time.{func.attr}() reads the host clock; simulation "
+                   f"time must come from the event loop")
+        # datetime.now() / datetime.datetime.now() / date.today()
+        elif func.attr in ("now", "utcnow", "today"):
+            base = func.value
+            is_dt = (isinstance(base, ast.Name)
+                     and base.id in ("datetime", "date")) or (
+                isinstance(base, ast.Attribute)
+                and base.attr in ("datetime", "date")
+                and isinstance(base.value, ast.Name)
+                and base.value.id == "datetime")
+            if is_dt:
+                yield (node.lineno, node.col_offset,
+                       f"datetime {func.attr}() reads the host clock; "
+                       f"simulation time must come from the event loop")

@@ -1,0 +1,83 @@
+"""Event-loop contract rules: QUEUE-INTERNALS, PAST-PUSH.
+
+:mod:`repro.core.timecore` owns the simulation clock.  Its public API
+(``push``/``pop``/``advance``/``shift``/``peek_time``/``pending`` on
+:class:`EventQueue`; ``on``/``push``/``step``/``run`` on
+:class:`EventLoop`) is the *only* sanctioned way to schedule or observe
+time: touching ``_heap``/``_seq`` or assigning ``now`` from outside
+breaks the ``(time, seq)`` tie-break contract silently, and pushing an
+event behind the clock (``push(now - dt, ...)``) corrupts causality —
+the queue raises at pop time, far from the bug.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.simlint import config
+from repro.simlint.framework import FileContext, register_rule
+
+_PRIVATE_ATTRS = {"_heap", "_seq"}
+
+
+@register_rule(
+    "QUEUE-INTERNALS", "events",
+    "EventQueue internals (_heap/_seq) or the clock (.now) mutated "
+    "outside core/timecore.py; use the EventLoop handler API",
+    scope=config.EVENT_SCOPE, scope_exclude=config.EVENT_SCOPE_EXCLUDE)
+def check_queue_internals(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    tree = ctx.tree
+    if tree is None:
+        return
+    parents = ctx.parents
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Attribute):
+            continue
+        if node.attr in _PRIVATE_ATTRS:
+            yield (node.lineno, node.col_offset,
+                   f"access to EventQueue internal ._{node.attr.lstrip('_')}"
+                   f" outside core/timecore.py; use the public queue API")
+        elif node.attr == "now" and isinstance(node.ctx, ast.Store):
+            # ``obj.now = ...`` — assigning the clock.  Allow plain
+            # dataclass-style self.now in classes unrelated to the time
+            # core is *not* attempted: the attribute name is reserved by
+            # convention (DESIGN.md §12).
+            parent = parents.get(node)
+            if isinstance(parent, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                yield (node.lineno, node.col_offset,
+                       "direct assignment to .now outside core/timecore.py; "
+                       "time advances only via EventQueue.pop/advance/shift")
+
+
+def _mentions_now(node: ast.expr) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id == "now":
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr == "now":
+            return True
+    return False
+
+
+@register_rule(
+    "PAST-PUSH", "events",
+    "event pushed behind the clock (push(now - dt, ...)); handlers "
+    "must schedule at or after the current time",
+    scope=config.EVENT_SCOPE, scope_exclude=config.EVENT_SCOPE_EXCLUDE)
+def check_past_push(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    tree = ctx.tree
+    if tree is None:
+        return
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "push" and node.args):
+            continue
+        t_arg = node.args[0]
+        # push(now - dt, ...) — a subtraction whose left side is the
+        # clock is the canonical way this bug is written.
+        if (isinstance(t_arg, ast.BinOp) and isinstance(t_arg.op, ast.Sub)
+                and _mentions_now(t_arg.left)):
+            yield (t_arg.lineno, t_arg.col_offset,
+                   "push() scheduled at now - ...; events must not be "
+                   "pushed into the past (EventQueue raises at pop time)")

@@ -1,0 +1,339 @@
+"""Rule registry, suppression handling and the lint driver.
+
+Mirrors the repo's registry idiom (``registry.register_family``,
+``traffic.register_traffic``): a rule is a named checker registered into
+:data:`RULES` via the :func:`register_rule` decorator.  The driver walks
+the requested roots, builds one :class:`FileContext` per Python source
+(AST parsed once, shared by every rule), runs each rule whose scope
+covers the file, and folds per-line ``# simlint: ignore[RULE]`` /
+per-file ``# simlint: ignore-file[RULE]`` suppressions into the
+:class:`LintResult`.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Iterable, Iterator
+
+from repro.simlint import config
+
+# -- findings ----------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    group: str
+    path: str  # repo-relative posix path
+    line: int  # 1-based
+    col: int  # 0-based
+    message: str
+    suppressed: bool = False
+
+    def format(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule}: {self.message}{tag}")
+
+
+# -- suppression comments ----------------------------------------------------
+
+_IGNORE_RE = re.compile(
+    r"#\s*simlint:\s*ignore\[([A-Za-z0-9_\-, ]+)\]")
+_IGNORE_FILE_RE = re.compile(
+    r"#\s*simlint:\s*ignore-file\[([A-Za-z0-9_\-, ]+)\]")
+
+
+def _split_rules(spec: str) -> set[str]:
+    return {r.strip() for r in spec.split(",") if r.strip()}
+
+
+# -- file context ------------------------------------------------------------
+
+
+@dataclass
+class FileContext:
+    """Everything a rule needs about one source file.
+
+    ``rel`` is the repo-relative posix path used for scoping; ``text``
+    the raw source.  The AST (``tree``) and the child->parent map
+    (``parents``) are built lazily once and shared by all rules.
+    """
+
+    rel: str
+    text: str
+    _tree: ast.AST | None = field(default=None, repr=False)
+    _parents: dict[ast.AST, ast.AST] | None = field(default=None, repr=False)
+    _line_ignores: dict[int, set[str]] | None = field(default=None, repr=False)
+    _file_ignores: set[str] | None = field(default=None, repr=False)
+    parse_error: str | None = None
+
+    @property
+    def is_python(self) -> bool:
+        return self.rel.endswith(".py")
+
+    @property
+    def tree(self) -> ast.AST | None:
+        if self._tree is None and self.parse_error is None and self.is_python:
+            try:
+                self._tree = ast.parse(self.text)
+            except SyntaxError as exc:  # pragma: no cover - repo parses
+                self.parse_error = f"{type(exc).__name__}: {exc}"
+        return self._tree
+
+    @property
+    def parents(self) -> dict[ast.AST, ast.AST]:
+        if self._parents is None:
+            self._parents = {}
+            tree = self.tree
+            if tree is not None:
+                for node in ast.walk(tree):
+                    for child in ast.iter_child_nodes(node):
+                        self._parents[child] = node
+        return self._parents
+
+    def _comment_lines(self) -> list[tuple[int, str]]:
+        """(lineno, text) of the real comment tokens of a Python file —
+        a ``# simlint: ignore[...]`` spelled inside a string literal or
+        docstring is a *mention*, not a suppression."""
+        if not self.is_python:
+            return list(enumerate(self.text.splitlines(), start=1))
+        import io
+        import tokenize
+        out: list[tuple[int, str]] = []
+        try:
+            for tok in tokenize.generate_tokens(
+                    io.StringIO(self.text).readline):
+                if tok.type == tokenize.COMMENT:
+                    out.append((tok.start[0], tok.string))
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            pass  # unparsable files surface via parse_error instead
+        return out
+
+    def _scan_ignores(self) -> None:
+        self._line_ignores = {}
+        self._file_ignores = set()
+        for lineno, line in self._comment_lines():
+            m = _IGNORE_FILE_RE.search(line)
+            if m:
+                self._file_ignores |= _split_rules(m.group(1))
+            m = _IGNORE_RE.search(line)
+            if m:
+                self._line_ignores.setdefault(lineno, set()).update(
+                    _split_rules(m.group(1)))
+
+    @property
+    def line_ignores(self) -> dict[int, set[str]]:
+        if self._line_ignores is None:
+            self._scan_ignores()
+        return self._line_ignores  # type: ignore[return-value]
+
+    @property
+    def file_ignores(self) -> set[str]:
+        if self._file_ignores is None:
+            self._scan_ignores()
+        return self._file_ignores  # type: ignore[return-value]
+
+    def suppression_comment_count(self) -> int:
+        """Number of explicit suppression comments in this file (each
+        comment counts once, however many rules it names)."""
+        n = 0
+        for _, line in self._comment_lines():
+            if _IGNORE_RE.search(line) or _IGNORE_FILE_RE.search(line):
+                n += 1
+        return n
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        if rule in self.file_ignores:
+            return True
+        return rule in self.line_ignores.get(line, set())
+
+
+# -- rule registry -----------------------------------------------------------
+
+# A rule's check() yields (line, col, message) triples; the driver wraps
+# them into Findings and applies scope + allowlist + suppressions.
+CheckFn = Callable[[FileContext], Iterator[tuple[int, int, str]]]
+PrepareFn = Callable[[list[FileContext]], None]
+
+
+@dataclass(frozen=True)
+class Rule:
+    name: str
+    group: str
+    description: str
+    scope: tuple[str, ...]
+    check: CheckFn
+    scope_exclude: tuple[str, ...] = ()
+    prepare: PrepareFn | None = None
+    python_only: bool = True
+
+    def applies_to(self, ctx: FileContext) -> bool:
+        if self.python_only and not ctx.is_python:
+            return False
+        return config.in_scope(ctx.rel, self.scope, self.scope_exclude)
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register_rule(name: str, group: str, description: str,
+                  scope: tuple[str, ...],
+                  scope_exclude: tuple[str, ...] = (),
+                  prepare: PrepareFn | None = None,
+                  python_only: bool = True) -> Callable[[CheckFn], CheckFn]:
+    """Decorator registering ``check`` under ``name`` (same shape as
+    ``registry.register_family``)."""
+
+    def deco(check: CheckFn) -> CheckFn:
+        if name in RULES:
+            raise ValueError(f"duplicate simlint rule {name!r}")
+        RULES[name] = Rule(name=name, group=group, description=description,
+                           scope=scope, scope_exclude=scope_exclude,
+                           check=check, prepare=prepare,
+                           python_only=python_only)
+        return check
+
+    return deco
+
+
+# -- results -----------------------------------------------------------------
+
+
+@dataclass
+class LintResult:
+    findings: list[Finding]
+    files_scanned: int
+    roots: list[str]
+    suppression_comments: int
+    parse_errors: list[tuple[str, str]] = field(default_factory=list)
+
+    @property
+    def unsuppressed(self) -> list[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def suppressed(self) -> list[Finding]:
+        return [f for f in self.findings if f.suppressed]
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {name: 0 for name in sorted(RULES)}
+        for f in self.unsuppressed:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+    def suppressed_counts(self) -> dict[str, int]:
+        out: dict[str, int] = {name: 0 for name in sorted(RULES)}
+        for f in self.suppressed:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+
+# -- driver ------------------------------------------------------------------
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "node_modules",
+              ".venv", "venv", ".eggs", "build", "dist"}
+
+
+def _collect_files(roots: Iterable[str], base: Path) -> list[Path]:
+    files: list[Path] = []
+    for root in roots:
+        p = (base / root) if not Path(root).is_absolute() else Path(root)
+        if p.is_file():
+            files.append(p)
+        elif p.is_dir():
+            for sub in sorted(p.rglob("*")):
+                if not sub.is_file():
+                    continue
+                if any(part in _SKIP_DIRS for part in sub.parts):
+                    continue
+                if sub.suffix in (".py", ".md"):
+                    files.append(sub)
+    # dedupe keeping deterministic order
+    seen: set[Path] = set()
+    out: list[Path] = []
+    for f in files:
+        if f not in seen:
+            seen.add(f)
+            out.append(f)
+    return out
+
+
+def _relpath(path: Path, base: Path) -> str:
+    try:
+        return path.resolve().relative_to(base.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def lint_contexts(contexts: list[FileContext],
+                  roots: list[str]) -> LintResult:
+    """Run every registered rule over prepared file contexts."""
+    rules = [RULES[name] for name in sorted(RULES)]
+    for rule in rules:
+        if rule.prepare is not None:
+            rule.prepare([c for c in contexts if rule.applies_to(c)])
+
+    findings: list[Finding] = []
+    parse_errors: list[tuple[str, str]] = []
+    n_suppression_comments = 0
+    for ctx in contexts:
+        if ctx.is_python:
+            ctx.tree  # force parse so parse_error is populated
+            n_suppression_comments += ctx.suppression_comment_count()
+        if ctx.parse_error is not None:
+            parse_errors.append((ctx.rel, ctx.parse_error))
+            continue
+        for rule in rules:
+            if not rule.applies_to(ctx):
+                continue
+            if config.allowlisted(rule.name, ctx.rel) is not None:
+                continue
+            for line, col, message in rule.check(ctx):
+                findings.append(Finding(
+                    rule=rule.name, group=rule.group, path=ctx.rel,
+                    line=line, col=col, message=message,
+                    suppressed=ctx.is_suppressed(rule.name, line)))
+
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return LintResult(findings=findings, files_scanned=len(contexts),
+                      roots=list(roots),
+                      suppression_comments=n_suppression_comments,
+                      parse_errors=parse_errors)
+
+
+def lint_paths(roots: Iterable[str], base: Path | None = None,
+               include_docs: bool = True) -> LintResult:
+    """Lint every ``.py``/``.md`` file under ``roots`` (repo-relative or
+    absolute).  ``base`` defaults to the current working directory; doc
+    files from :data:`config.DOC_FILES` are appended when present."""
+    base = Path.cwd() if base is None else base
+    roots = list(roots)
+    files = _collect_files(roots, base)
+    if include_docs:
+        have = {f.resolve() for f in files}
+        for doc in config.DOC_FILES:
+            p = base / doc
+            if p.is_file() and p.resolve() not in have:
+                files.append(p)
+    contexts = []
+    for f in files:
+        try:
+            text = f.read_text(encoding="utf-8")
+        except (OSError, UnicodeDecodeError):  # pragma: no cover
+            continue
+        contexts.append(FileContext(rel=_relpath(f, base), text=text))
+    return lint_contexts(contexts, roots)
+
+
+def lint_sources(sources: dict[str, str]) -> LintResult:
+    """Lint in-memory sources keyed by virtual repo-relative path —
+    the fixture-test entry point."""
+    contexts = [FileContext(rel=rel, text=text)
+                for rel, text in sorted(sources.items())]
+    return lint_contexts(contexts, sorted(sources))

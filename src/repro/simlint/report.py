@@ -1,0 +1,128 @@
+"""JSON report emission and validation for the simlint CLI.
+
+The report is the machine contract CI consumes: rule inventory, per-rule
+unsuppressed/suppressed counts, the findings themselves, and run
+metadata.  ``validate_report`` checks a loaded report against the
+``simlint_report`` block of ``benchmarks/schema.json`` in the same
+no-third-party-library style as ``benchmarks/validate_json.py`` — one
+error line per violation, empty list means valid.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.simlint.framework import RULES, LintResult
+
+REPORT_VERSION = 1
+
+
+def build_report(result: LintResult, runtime_s: float | None = None) -> dict:
+    """Serialize a :class:`LintResult` into the report dict."""
+    return {
+        "version": REPORT_VERSION,
+        "tool": "repro.simlint",
+        "roots": list(result.roots),
+        "files_scanned": result.files_scanned,
+        "rules": {
+            name: {"group": rule.group, "description": rule.description}
+            for name, rule in sorted(RULES.items())
+        },
+        "counts": result.counts(),
+        "suppressed_counts": result.suppressed_counts(),
+        "n_findings": len(result.unsuppressed),
+        "n_suppressed": len(result.suppressed),
+        "suppression_comments": result.suppression_comments,
+        "parse_errors": [
+            {"path": path, "error": err} for path, err in result.parse_errors
+        ],
+        "findings": [
+            {
+                "rule": f.rule,
+                "group": f.group,
+                "path": f.path,
+                "line": f.line,
+                "col": f.col,
+                "message": f.message,
+                "suppressed": f.suppressed,
+            }
+            for f in result.findings
+        ],
+        "runtime_s": runtime_s,
+    }
+
+
+def validate_report(report: Any, schema: dict) -> list[str]:
+    """Validate ``report`` against ``schema['simlint_report']``."""
+    errors: list[str] = []
+    spec = schema.get("simlint_report")
+    if spec is None:
+        return ["schema has no simlint_report block"]
+    if not isinstance(report, dict):
+        return [f"report must be an object, got {type(report).__name__}"]
+
+    for key in spec["required_keys"]:
+        if key not in report:
+            errors.append(f"missing required key {key!r}")
+    if errors:
+        return errors
+
+    if report["version"] != spec["version"]:
+        errors.append(
+            f"version {report['version']!r} != schema {spec['version']!r}")
+    if report["tool"] != spec["tool"]:
+        errors.append(f"tool {report['tool']!r} != {spec['tool']!r}")
+
+    rules = report["rules"]
+    for name in spec["required_rules"]:
+        if name not in rules:
+            errors.append(f"missing required rule {name!r}")
+        else:
+            for k in ("group", "description"):
+                if k not in rules[name]:
+                    errors.append(f"rule {name}: missing {k!r}")
+    for table in ("counts", "suppressed_counts"):
+        tbl = report[table]
+        if not isinstance(tbl, dict):
+            errors.append(f"{table} must be an object")
+            continue
+        for name in spec["required_rules"]:
+            if name not in tbl:
+                errors.append(f"{table}: missing rule {name!r}")
+            elif not (isinstance(tbl[name], int) and tbl[name] >= 0):
+                errors.append(f"{table}[{name}] must be a non-negative int")
+
+    for i, f in enumerate(report["findings"]):
+        for k in spec["finding_keys"]:
+            if k not in f:
+                errors.append(f"finding {i}: missing key {k!r}")
+        if f.get("rule") not in rules:
+            errors.append(
+                f"finding {i}: rule {f.get('rule')!r} not in rule inventory")
+
+    n_unsup = sum(1 for f in report["findings"] if not f.get("suppressed"))
+    n_sup = sum(1 for f in report["findings"] if f.get("suppressed"))
+    if report["n_findings"] != n_unsup:
+        errors.append(
+            f"n_findings={report['n_findings']} but report lists "
+            f"{n_unsup} unsuppressed findings")
+    if report["n_suppressed"] != n_sup:
+        errors.append(
+            f"n_suppressed={report['n_suppressed']} but report lists "
+            f"{n_sup} suppressed findings")
+    counted = sum(report["counts"].values())
+    if counted != n_unsup:
+        errors.append(
+            f"counts sum to {counted} but {n_unsup} unsuppressed findings")
+
+    budget = spec.get("max_suppression_comments")
+    if budget is not None and report["suppression_comments"] > budget:
+        errors.append(
+            f"{report['suppression_comments']} suppression comments exceed "
+            f"budget {budget}")
+    if report["files_scanned"] <= 0:
+        errors.append("files_scanned must be positive")
+    if report["parse_errors"]:
+        for pe in report["parse_errors"]:
+            errors.append(f"parse error in {pe.get('path')}: {pe.get('error')}")
+    return errors

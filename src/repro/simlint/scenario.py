@@ -1,0 +1,166 @@
+"""Scenario-literal validation: SCENARIO-LIT.
+
+Every experiment in this repo is named by a scenario string
+(``hx2-16x16/skewed-alltoall:h8:seed3/fail=boards:1%:seed7``).  A typo'd
+literal in a test, benchmark or doc silently names a *different*
+experiment — or dies deep inside the runner.  This rule finds every
+scenario-shaped string literal (first ``/``-leg matches a registered
+topology family pattern) in Python sources and in the fenced code blocks
+of DESIGN.md / ROADMAP.md, and requires it to parse through
+``registry.parse_scenario``.
+
+Deliberately-malformed literals in negative tests are exempt when the
+context says so: inside a ``pytest.raises`` call or with-block, in the
+decorators of a test whose body asserts a raise, or assigned to a name
+containing ``MALFORMED``/``BAD``/``INVALID``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from functools import lru_cache
+from typing import Iterator
+
+from repro.simlint import config
+from repro.simlint.framework import FileContext, register_rule
+
+_NEGATIVE_NAME_RE = re.compile(r"MALFORMED|BAD|INVALID", re.IGNORECASE)
+_FENCE_RE = re.compile(r"^(```|~~~)")
+# candidate tokens inside fenced doc blocks
+_DOC_TOKEN_RE = re.compile(r"[A-Za-z0-9][A-Za-z0-9_.%,:=\-/]*")
+# placeholder markers that mark a doc token as schematic, not literal
+_PLACEHOLDER_RE = re.compile(r"\.\.\.|[{}<>*\[\]]|\{")
+
+
+@lru_cache(maxsize=1)
+def _grammar():
+    """(family patterns, parse_scenario) — imported lazily so the
+    framework itself has no numpy dependency."""
+    from repro.core import registry
+    patterns = [re.compile(fam.pattern) for fam in registry.FAMILIES.values()]
+    return patterns, registry.parse_scenario
+
+
+def _scenario_shaped(text: str) -> bool:
+    if not text or any(c.isspace() for c in text):
+        return False
+    first = text.split("/", 1)[0]
+    patterns, _ = _grammar()
+    return any(p.fullmatch(first) for p in patterns)
+
+
+@lru_cache(maxsize=4096)
+def _parse_failure(text: str) -> str | None:
+    """The parse error for ``text``, or None when it parses."""
+    _, parse_scenario = _grammar()
+    try:
+        parse_scenario(text)
+        return None
+    except ValueError as exc:
+        return str(exc).splitlines()[0]
+
+
+def _is_pytest_raises(call: ast.expr) -> bool:
+    return (isinstance(call, ast.Call)
+            and isinstance(call.func, ast.Attribute)
+            and call.func.attr == "raises")
+
+
+def _body_asserts_raise(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.withitem) and _is_pytest_raises(
+                node.context_expr):
+            return True
+        if _is_pytest_raises(node):
+            return True
+    return False
+
+
+def _exempt(node: ast.Constant, ctx: FileContext) -> bool:
+    """True when the literal is a deliberate negative-test input."""
+    parents = ctx.parents
+    cur: ast.AST = node
+    in_decorator_call = False
+    while cur in parents:
+        parent = parents[cur]
+        if isinstance(parent, ast.With):
+            if any(_is_pytest_raises(item.context_expr)
+                   for item in parent.items):
+                return True
+        elif _is_pytest_raises(parent):
+            return True
+        elif isinstance(parent, (ast.Assign, ast.AnnAssign)):
+            targets = (parent.targets if isinstance(parent, ast.Assign)
+                       else [parent.target])
+            for t in targets:
+                if (isinstance(t, ast.Name)
+                        and _NEGATIVE_NAME_RE.search(t.id)):
+                    return True
+        elif isinstance(parent, ast.Call):
+            in_decorator_call = True if isinstance(
+                parent.func, ast.Attribute) and parent.func.attr in (
+                "parametrize",) else in_decorator_call
+        elif isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if cur in parent.decorator_list or in_decorator_call:
+                if _body_asserts_raise(parent):
+                    return True
+        cur = parent
+    return False
+
+
+def _check_python(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    tree = ctx.tree
+    if tree is None:
+        return
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Constant)
+                and isinstance(node.value, str)):
+            continue
+        text = node.value
+        if not _scenario_shaped(text):
+            continue
+        # f-string pieces are fragments, not complete scenario literals
+        if isinstance(ctx.parents.get(node), ast.JoinedStr):
+            continue
+        failure = _parse_failure(text)
+        if failure is None:
+            continue
+        if _exempt(node, ctx):
+            continue
+        yield (node.lineno, node.col_offset,
+               f"scenario literal {text!r} does not parse: {failure}")
+
+
+def _check_markdown(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    in_fence = False
+    for lineno, line in enumerate(ctx.text.splitlines(), start=1):
+        if _FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            continue
+        for m in _DOC_TOKEN_RE.finditer(line):
+            token = m.group(0).rstrip(".,:")
+            if _PLACEHOLDER_RE.search(m.group(0)):
+                continue
+            if not _scenario_shaped(token):
+                continue
+            failure = _parse_failure(token)
+            if failure is not None:
+                yield (lineno, m.start(),
+                       f"scenario token {token!r} in fenced block does "
+                       f"not parse: {failure}")
+
+
+@register_rule(
+    "SCENARIO-LIT", "scenario",
+    "scenario-shaped string literal that does not parse through "
+    "registry.parse_scenario",
+    scope=config.SCENARIO_SCOPE + config.DOC_FILES,
+    python_only=False)
+def check_scenario_literals(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    if ctx.rel.endswith(".md"):
+        yield from _check_markdown(ctx)
+    elif ctx.is_python:
+        yield from _check_python(ctx)

@@ -1,0 +1,183 @@
+"""Unit-consistency rules: UNIT-MIX, UNIT-ASSIGN, UNIT-AMBIG.
+
+The audited modules (:data:`repro.simlint.config.UNIT_SCOPE`) move
+quantities between four unit systems — bytes on the wire, seconds of
+simulated time, switch cycles, and dimensionless fractions.  The repo
+convention (DESIGN.md §12) is to carry the unit in the name's final
+underscore component: ``size_bytes``, ``phase_t_s``, ``link_latency_cycles``,
+``link_bps`` (bytes/second), ``global_bw_frac``.  The rules are a
+dataflow *lint*, not a type system: they flag the arithmetic and
+assignments where two differently-suffixed names meet with no conversion
+in between (``UNIT-MIX``/``UNIT-ASSIGN``), and the ambiguous bare stems
+(``size``, ``rate``, ``bw``, ...) in signatures, dataclass fields and
+module constants where a suffix is required (``UNIT-AMBIG``).
+
+Multiplication and division are never flagged — they are how units
+convert (``size_bytes / link_bps`` *is* seconds).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.simlint import config
+from repro.simlint.framework import FileContext, register_rule
+
+# suffix -> canonical unit; time units deliberately kept distinct
+_SUFFIX_UNIT = {
+    "bytes": "bytes",
+    "s": "s",
+    "ms": "ms",
+    "us": "us",
+    "cycles": "cycles",
+    "bps": "bytes/s",
+    "frac": "frac",
+    "pkts": "packets",
+    "packets": "packets",
+    "hops": "hops",
+}
+
+# stems that name a quantity without naming its unit
+_AMBIGUOUS_STEMS = {"size", "rate", "packet", "latency", "bw", "dt",
+                    "interval", "duration", "timeout"}
+
+
+def unit_of_name(name: str) -> str | None:
+    """The unit carried by ``name``'s final underscore component."""
+    tail = name.rsplit("_", 1)[-1].lower()
+    return _SUFFIX_UNIT.get(tail)
+
+
+def _unit_of(node: ast.expr) -> tuple[str, str] | None:
+    """(unit, display name) when ``node`` is a unit-suffixed name."""
+    if isinstance(node, ast.Name):
+        u = unit_of_name(node.id)
+        return (u, node.id) if u else None
+    if isinstance(node, ast.Attribute):
+        u = unit_of_name(node.attr)
+        return (u, f".{node.attr}") if u else None
+    return None
+
+
+@register_rule(
+    "UNIT-MIX", "units",
+    "additive arithmetic or comparison between names carrying "
+    "different unit suffixes; convert explicitly first",
+    scope=config.UNIT_SCOPE)
+def check_unit_mix(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    tree = ctx.tree
+    if tree is None:
+        return
+    for node in ast.walk(tree):
+        pairs: list[tuple[ast.expr, ast.expr]] = []
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.Add, ast.Sub)):
+            pairs.append((node.left, node.right))
+        elif isinstance(node, ast.AugAssign) and isinstance(
+                node.op, (ast.Add, ast.Sub)):
+            pairs.append((node.target, node.value))
+        elif isinstance(node, ast.Compare):
+            operands = [node.left, *node.comparators]
+            pairs.extend(zip(operands, operands[1:]))
+        for left, right in pairs:
+            lu, ru = _unit_of(left), _unit_of(right)
+            if lu and ru and lu[0] != ru[0]:
+                yield (node.lineno, node.col_offset,
+                       f"mixes units: {lu[1]} [{lu[0]}] with "
+                       f"{ru[1]} [{ru[0]}]")
+
+
+@register_rule(
+    "UNIT-ASSIGN", "units",
+    "direct assignment between names carrying different unit "
+    "suffixes with no conversion expression in between",
+    scope=config.UNIT_SCOPE)
+def check_unit_assign(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    tree = ctx.tree
+    if tree is None:
+        return
+    for node in ast.walk(tree):
+        targets: list[ast.expr] = []
+        value: ast.expr | None = None
+        if isinstance(node, ast.Assign):
+            targets, value = list(node.targets), node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        elif (isinstance(node, ast.Call)):
+            # keyword argument: f(t_s=n_cycles)
+            for kw in node.keywords:
+                if kw.arg is None:
+                    continue
+                tu = unit_of_name(kw.arg)
+                vu = _unit_of(kw.value)
+                if tu and vu and tu != vu[0]:
+                    yield (kw.value.lineno, kw.value.col_offset,
+                           f"keyword {kw.arg} [{tu}] bound to "
+                           f"{vu[1]} [{vu[0]}] with no conversion")
+            continue
+        if value is None:
+            continue
+        # only a *bare* suffixed name on the RHS is flagged; any
+        # arithmetic is presumed to be the conversion
+        vu = _unit_of(value)
+        if vu is None:
+            continue
+        for t in targets:
+            tu = _unit_of(t)
+            if tu and tu[0] != vu[0]:
+                yield (node.lineno, node.col_offset,
+                       f"assigns {vu[1]} [{vu[0]}] to {tu[1]} [{tu[0]}] "
+                       f"with no conversion")
+
+
+def _ambiguous(name: str) -> bool:
+    if unit_of_name(name) is not None:
+        return False
+    tail = name.rsplit("_", 1)[-1].lower()
+    return tail in _AMBIGUOUS_STEMS
+
+
+@register_rule(
+    "UNIT-AMBIG", "units",
+    "quantity-shaped name (size/rate/bw/latency/...) without a unit "
+    "suffix in a signature, dataclass field or module constant",
+    scope=config.UNIT_SCOPE)
+def check_unit_ambig(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    tree = ctx.tree
+    if tree is None:
+        return
+    if tree is not None:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = (node.args.posonlyargs + node.args.args
+                        + node.args.kwonlyargs)
+                for a in args:
+                    if _ambiguous(a.arg):
+                        yield (a.lineno, a.col_offset,
+                               f"parameter {a.arg!r} names a quantity but "
+                               f"not its unit; add a suffix "
+                               f"(_bytes/_s/_cycles/_bps/_frac)")
+            elif isinstance(node, ast.ClassDef):
+                for stmt in node.body:
+                    if (isinstance(stmt, ast.AnnAssign)
+                            and isinstance(stmt.target, ast.Name)
+                            and _ambiguous(stmt.target.id)):
+                        yield (stmt.lineno, stmt.col_offset,
+                               f"field {stmt.target.id!r} names a quantity "
+                               f"but not its unit; add a suffix")
+    # module-level ALL_CAPS constants
+    root = ctx.tree
+    if isinstance(root, ast.Module):
+        for stmt in root.body:
+            names: list[ast.Name] = []
+            if isinstance(stmt, ast.Assign):
+                names = [t for t in stmt.targets if isinstance(t, ast.Name)]
+            elif (isinstance(stmt, ast.AnnAssign)
+                  and isinstance(stmt.target, ast.Name)):
+                names = [stmt.target]
+            for n in names:
+                if n.id.isupper() and _ambiguous(n.id):
+                    yield (n.lineno, n.col_offset,
+                           f"module constant {n.id!r} names a quantity but "
+                           f"not its unit; add a suffix")

@@ -32,7 +32,7 @@ def _sim(spec: str, coll: str, failures: str = "", size: str = "s64MiB"):
     token = f"{spec}/coll={coll}:{size}" + (f"/{failures}" if failures else "")
     sc = R.parse_scenario(token)
     net = sc.network()
-    return NS.simulate_schedule(net, sc.schedule(net), link_bw=C.LINK_BW)
+    return NS.simulate_schedule(net, sc.schedule(net), link_bps=C.LINK_BPS)
 
 
 # ---------------------------------------------------------------------------
@@ -141,7 +141,7 @@ def test_dependencies_sequence_phases():
     overlap), and independent phases do overlap."""
     net = F.build_hxmesh(2, 2, 4, 4)
     sched = R.parse_scenario("hx2-4x4/coll=hierarchical:s64MiB").schedule(net)
-    report = NS.simulate_schedule(net, sched, link_bw=C.LINK_BW)
+    report = NS.simulate_schedule(net, sched, link_bps=C.LINK_BPS)
     spans = {name: (s, e) for name, s, e in report.phase_spans}
     assert spans["hier/cols-fwd"][0] >= spans["hier/rows-fwd"][1]
     # the two row phases run concurrently

@@ -51,7 +51,7 @@ def test_schedule_replay_conserves_bytes(token):
     conservation is exact, not approximate."""
     sc = R.parse_scenario(token)
     net = sc.network()
-    report = simulate_packet_schedule(net, sc.schedule(net), link_bw=1.0)
+    report = simulate_packet_schedule(net, sc.schedule(net), link_bps=1.0)
     assert np.isfinite(report.time) and report.time > 0
     assert report.conservation_error() == 0.0
     np.testing.assert_array_equal(report.delivered, report.flow_bytes)
@@ -67,11 +67,11 @@ def test_single_flow_converges_to_alpha_beta():
     sched = NS.CommSchedule(
         name="single", alpha=0.0,
         phases=(NS.Phase(name="p0", flows=((0, 1, size),)),))
-    fluid = NS.simulate_schedule(net, sched, link_bw=1.0).time
+    fluid = NS.simulate_schedule(net, sched, link_bps=1.0).time
     errs = []
     for p in (4096, 1024, 256):
         t = simulate_packet_schedule(
-            net, sched, link_bw=1.0, config=PacketConfig(packet=p)).time
+            net, sched, link_bps=1.0, config=PacketConfig(packet_bytes=p)).time
         errs.append(abs(t - fluid) / fluid)
     assert errs[0] > errs[-1]  # shrinking packets tighten the agreement
     assert errs[-1] <= 0.05
@@ -85,7 +85,7 @@ def test_packet_budget_guard():
     sched = sc.schedule(net)
     assert estimate_packets(sched, 512) > PacketConfig().max_packets
     with pytest.raises(ValueError, match="envelope"):
-        simulate_packet_schedule(net, sched, link_bw=1.0)
+        simulate_packet_schedule(net, sched, link_bps=1.0)
 
 
 def test_unroutable_flows_complete_instantly():
@@ -93,7 +93,7 @@ def test_unroutable_flows_complete_instantly():
     contract) and are counted, not dropped silently."""
     sc = R.parse_scenario("torus-4x4/coll=ring:s1MiB/fail=nodes:2:seed1")
     net = sc.network()
-    report = simulate_packet_schedule(net, sc.schedule(net), link_bw=1.0)
+    report = simulate_packet_schedule(net, sc.schedule(net), link_bps=1.0)
     assert np.isfinite(report.time)
     assert report.conservation_error() == 0.0
 
@@ -194,8 +194,8 @@ def test_link_eff_derates_transfer_time():
     sched = NS.CommSchedule(
         name="single", alpha=0.0,
         phases=(NS.Phase(name="p0", flows=((0, 1, float(2 ** 20)),)),))
-    base = NS.simulate_schedule(net, sched, link_bw=1.0).time
-    half = NS.simulate_schedule(net, sched, link_bw=1.0,
+    base = NS.simulate_schedule(net, sched, link_bps=1.0).time
+    half = NS.simulate_schedule(net, sched, link_bps=1.0,
                                 link_eff=0.5).time
     assert half == pytest.approx(2.0 * base, rel=1e-9)
 
@@ -216,8 +216,8 @@ def test_link_eff_validated():
     net = _net("torus-4x4")
     sc = R.parse_scenario("torus-4x4/coll=ring:s1MiB")
     with pytest.raises(ValueError, match="link_eff"):
-        NS.simulate_schedule(net, sc.schedule(net), link_bw=1.0,
+        NS.simulate_schedule(net, sc.schedule(net), link_bps=1.0,
                              link_eff=1.5)
     with pytest.raises(ValueError, match="link_eff"):
-        NS.simulate_schedule(net, sc.schedule(net), link_bw=1.0,
+        NS.simulate_schedule(net, sc.schedule(net), link_bps=1.0,
                              link_eff=0.0)

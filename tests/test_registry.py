@@ -211,7 +211,7 @@ def test_profile_measured_vs_calibrated():
     assert exotic.table_name is None
     with pytest.raises(ValueError):
         exotic.profile(measured=False)
-    assert 0 < exotic.profile().global_bw <= 1.0
+    assert 0 < exotic.profile().global_bw_frac <= 1.0
 
 
 def test_get_profile_accepts_names_and_specs():
@@ -284,10 +284,10 @@ def test_measured_profile_matches_paper_table2():
         t = R.parse(name)
         paper = C.PAPER_TABLE2_BANDWIDTH[t.table_name]
         p = t.profile()
-        err = abs(p.global_bw - paper["alltoall"]) / paper["alltoall"]
+        err = abs(p.global_bw_frac - paper["alltoall"]) / paper["alltoall"]
         if band is not None:
             assert err <= band, (
-                f"{name}: measured alltoall {p.global_bw:.4f} vs paper "
+                f"{name}: measured alltoall {p.global_bw_frac:.4f} vs paper "
                 f"{paper['alltoall']} drifted ({err:.1%} > {band:.0%})"
             )
         else:
@@ -295,7 +295,7 @@ def test_measured_profile_matches_paper_table2():
             # cap must land the calibrated fraction strictly inside
             # (paper, fluid) and strictly closer to the paper than the
             # raw fluid value — torus_gap_measured, by measurement.
-            fluid = p.global_bw
+            fluid = p.global_bw_frac
             cal = R.measured_fraction(f"{name}/alltoall/fidelity=calibrated")
             assert paper["alltoall"] < cal < fluid, (
                 f"{name}: calibrated alltoall {cal:.4f} outside "

@@ -293,7 +293,7 @@ def test_profile_uses_scenario_cache(tmp_cache):
     data = json.load(open(tmp_cache))
     assert set(data["entries"]) >= {
         "hx2-4x4/alltoall", "hx2-4x4/ring-allreduce", "hx2-4x4/bisection"}
-    assert p.global_bw == pytest.approx(data["entries"]["hx2-4x4/alltoall"])
+    assert p.global_bw_frac == pytest.approx(data["entries"]["hx2-4x4/alltoall"])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,511 @@
+"""simlint: golden fixtures per rule, suppression handling, the JSON
+report contract, the whole-repo zero-findings gate, and the
+PYTHONHASHSEED determinism regression the SET-ITER fixes guarantee.
+
+The fixture tests are the seeded-fault self-tests of the acceptance
+contract: each rule gets one known-bad snippet (must fire) and one
+known-clean snippet (must stay silent), and the two satellite
+determinism fixes are re-broken in memory to prove SET-ITER would catch
+a revert.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro import simlint
+from repro.simlint import config as SLC
+from repro.simlint import report as SLR
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def rules_fired(sources, suppressed=False):
+    """Rule names with >= 1 (un)suppressed finding over virtual sources."""
+    res = simlint.lint_sources(sources)
+    pool = res.suppressed if suppressed else res.unsuppressed
+    return {f.rule for f in pool}
+
+
+# ---------------------------------------------------------------------------
+# Rule registry mirrors the repo idiom
+# ---------------------------------------------------------------------------
+
+
+def test_rule_inventory():
+    assert set(simlint.RULES) == {
+        "SET-ITER", "UNSEEDED-RNG", "WALL-CLOCK",
+        "QUEUE-INTERNALS", "PAST-PUSH",
+        "UNIT-MIX", "UNIT-ASSIGN", "UNIT-AMBIG",
+        "SCENARIO-LIT",
+    }
+    groups = {r.group for r in simlint.RULES.values()}
+    assert groups == {"determinism", "events", "units", "scenario"}
+
+
+def test_register_rule_rejects_duplicates():
+    with pytest.raises(ValueError, match="duplicate"):
+        simlint.register_rule(
+            "SET-ITER", "determinism", "dup", scope=("src/",))(lambda ctx: iter(()))
+
+
+# ---------------------------------------------------------------------------
+# determinism: SET-ITER
+# ---------------------------------------------------------------------------
+
+SET_ITER_BAD = """\
+def drain(queue):
+    pending = {3, 1, 2}
+    for item in pending:
+        queue.append(item)
+"""
+
+SET_ITER_CLEAN = """\
+def drain(queue):
+    pending = {3, 1, 2}
+    for item in sorted(pending):
+        queue.append(item)
+    return len(pending), max(pending)
+"""
+
+
+def test_set_iter_fires_on_bad():
+    fired = rules_fired({"src/repro/netsim/fake.py": SET_ITER_BAD})
+    assert "SET-ITER" in fired
+
+
+def test_set_iter_silent_on_clean():
+    fired = rules_fired({"src/repro/netsim/fake.py": SET_ITER_CLEAN})
+    assert "SET-ITER" not in fired
+
+
+def test_set_iter_out_of_scope_silent():
+    # the rule only covers the simulator subsystems
+    fired = rules_fired({"src/repro/launch/fake.py": SET_ITER_BAD})
+    assert "SET-ITER" not in fired
+
+
+def test_set_iter_scoped_per_function():
+    # a set-typed local in one function must not taint a same-named
+    # array in another (the traffic.py `act` case)
+    src = (
+        "def a():\n"
+        "    act = {1, 2}\n"
+        "    return sorted(act)\n"
+        "def b(net):\n"
+        "    act = net.active_endpoints()\n"
+        "    return [e for e in act]\n"
+    )
+    assert "SET-ITER" not in rules_fired({"src/repro/core/fake.py": src})
+
+
+def test_set_iter_tracks_attributes_cross_file():
+    decl = "class A:\n    def __init__(self):\n        self.failed = set()\n"
+    use = "def f(alloc):\n    return [x for x in alloc.failed]\n"
+    fired = rules_fired({
+        "src/repro/core/fake_a.py": decl,
+        "src/repro/cluster/fake_b.py": use,
+    })
+    assert "SET-ITER" in fired
+
+
+def test_set_iter_catches_reverted_satellite_fixes():
+    # re-break the two shipped determinism fixes in memory: a revert of
+    # either must light SET-ITER up again
+    # .failed is declared set-typed in allocation.py: both files go in so
+    # the cross-file attribute collection sees the declaration
+    alloc = (REPO / "src/repro/core/allocation.py").read_text()
+    sim = (REPO / "src/repro/cluster/simulator.py").read_text()
+    broken = sim.replace("for r, c in sorted(self.alloc.failed):",
+                         "for r, c in self.alloc.failed:")
+    assert broken != sim
+    fired = rules_fired({"src/repro/core/allocation.py": alloc,
+                         "src/repro/cluster/simulator.py": broken})
+    assert "SET-ITER" in fired
+
+    eng = (REPO / "src/repro/netsim/engine.py").read_text()
+    broken = eng.replace("for v in sorted(frontier):", "for v in frontier:")
+    assert broken != eng
+    fired = rules_fired({"src/repro/netsim/engine.py": broken})
+    assert "SET-ITER" in fired
+
+
+# ---------------------------------------------------------------------------
+# determinism: UNSEEDED-RNG / WALL-CLOCK
+# ---------------------------------------------------------------------------
+
+RNG_BAD = """\
+import numpy as np
+def draw():
+    rng = np.random.default_rng()
+    return rng.random()
+"""
+
+RNG_CLEAN = """\
+import numpy as np
+def draw(seed):
+    rng = np.random.default_rng(seed)
+    return rng.random()
+"""
+
+
+def test_unseeded_rng():
+    path = "src/repro/core/fake.py"
+    assert "UNSEEDED-RNG" in rules_fired({path: RNG_BAD})
+    assert "UNSEEDED-RNG" not in rules_fired({path: RNG_CLEAN})
+    # module-global state is flagged even with no constructor in sight
+    assert "UNSEEDED-RNG" in rules_fired(
+        {path: "import numpy as np\nx = np.random.rand(3)\n"})
+    assert "UNSEEDED-RNG" in rules_fired(
+        {path: "import random\nx = random.random()\n"})
+
+
+WALL_BAD = """\
+import time
+def stamp():
+    return time.time()
+"""
+
+WALL_CLEAN = """\
+def stamp(loop):
+    return loop.now
+"""
+
+
+def test_wall_clock():
+    path = "src/repro/netsim/fake.py"
+    assert "WALL-CLOCK" in rules_fired({path: WALL_BAD})
+    assert "WALL-CLOCK" not in rules_fired({path: WALL_CLEAN})
+
+
+def test_wall_clock_allowlisted_in_launch():
+    # launch CLIs legitimately report real elapsed time
+    assert "WALL-CLOCK" not in rules_fired(
+        {"src/repro/launch/dryrun.py": WALL_BAD})
+    reason = SLC.allowlisted("WALL-CLOCK", "src/repro/launch/dryrun.py")
+    assert reason and "wall-clock" in reason
+
+
+# ---------------------------------------------------------------------------
+# events: QUEUE-INTERNALS / PAST-PUSH
+# ---------------------------------------------------------------------------
+
+QUEUE_BAD = """\
+def cheat(queue, t):
+    queue.now = t
+    queue._heap.clear()
+"""
+
+QUEUE_CLEAN = """\
+def fine(queue, t):
+    queue.advance(t)
+    return queue.pending()
+"""
+
+
+def test_queue_internals():
+    path = "src/repro/cluster/fake.py"
+    assert "QUEUE-INTERNALS" in rules_fired({path: QUEUE_BAD})
+    assert "QUEUE-INTERNALS" not in rules_fired({path: QUEUE_CLEAN})
+    # timecore itself is the one module allowed to touch its internals
+    assert "QUEUE-INTERNALS" not in rules_fired(
+        {"src/repro/core/timecore.py": QUEUE_BAD})
+
+
+PAST_PUSH_BAD = """\
+def handler(loop, dt):
+    loop.push(loop.now - dt, 0)
+"""
+
+PAST_PUSH_CLEAN = """\
+def handler(loop, dt):
+    loop.push(loop.now + dt, 0)
+"""
+
+
+def test_past_push():
+    path = "src/repro/netsim/fake.py"
+    assert "PAST-PUSH" in rules_fired({path: PAST_PUSH_BAD})
+    assert "PAST-PUSH" not in rules_fired({path: PAST_PUSH_CLEAN})
+
+
+# ---------------------------------------------------------------------------
+# units: UNIT-MIX / UNIT-ASSIGN / UNIT-AMBIG
+# ---------------------------------------------------------------------------
+
+UNIT_PATH = "src/repro/netsim/engine.py"  # virtual file in the audited set
+
+UNIT_MIX_BAD = """\
+def total(flow_bytes, t_s):
+    return flow_bytes + t_s
+"""
+
+UNIT_MIX_CLEAN = """\
+def total(flow_bytes, link_bps, t_s):
+    return flow_bytes / link_bps + t_s
+"""
+
+
+def test_unit_mix():
+    assert "UNIT-MIX" in rules_fired({UNIT_PATH: UNIT_MIX_BAD})
+    assert "UNIT-MIX" not in rules_fired({UNIT_PATH: UNIT_MIX_CLEAN})
+    # comparisons across units are flagged too
+    assert "UNIT-MIX" in rules_fired(
+        {UNIT_PATH: "def f(a_cycles, b_s):\n    return a_cycles < b_s\n"})
+    # units rules only audit the declared unit-critical modules
+    assert "UNIT-MIX" not in rules_fired(
+        {"src/repro/core/fake.py": UNIT_MIX_BAD})
+
+
+def test_unit_assign():
+    bad = "def f(n_cycles):\n    t_s = n_cycles\n    return t_s\n"
+    clean = ("def f(n_cycles, hz):\n    t_s = n_cycles / hz\n"
+             "    return t_s\n")
+    kw_bad = "def f(g, n_cycles):\n    return g(t_s=n_cycles)\n"
+    assert "UNIT-ASSIGN" in rules_fired({UNIT_PATH: bad})
+    assert "UNIT-ASSIGN" not in rules_fired({UNIT_PATH: clean})
+    assert "UNIT-ASSIGN" in rules_fired({UNIT_PATH: kw_bad})
+
+
+def test_unit_ambig():
+    bad = "def send(size, rate):\n    return size / rate\n"
+    clean = "def send(size_bytes, rate_bps):\n    return size_bytes / rate_bps\n"
+    assert "UNIT-AMBIG" in rules_fired({UNIT_PATH: bad})
+    assert "UNIT-AMBIG" not in rules_fired({UNIT_PATH: clean})
+    const_bad = "LINK_BW = 50e9\n"
+    field_bad = "class C:\n    packet: int = 512\n"
+    assert "UNIT-AMBIG" in rules_fired({UNIT_PATH: const_bad})
+    assert "UNIT-AMBIG" in rules_fired({UNIT_PATH: field_bad})
+
+
+# ---------------------------------------------------------------------------
+# scenario literals
+# ---------------------------------------------------------------------------
+
+SCENARIO_BAD = """\
+def test_typo():
+    run("hx2-4x4/alltoalll")
+"""
+
+SCENARIO_CLEAN = """\
+def test_ok():
+    run("hx2-4x4/alltoall/fail=boards:1:seed7")
+    run("torus-8x8/coll=ring:s64MiB")
+"""
+
+SCENARIO_NEGATIVE = """\
+import pytest
+MALFORMED_SPECS = ["hx2-4x4/nope"]
+def test_rejects():
+    with pytest.raises(ValueError):
+        parse("hx2-4x4/alltoall/alltoall")
+"""
+
+
+def test_scenario_literal_rule():
+    path = "tests/test_fake.py"
+    assert "SCENARIO-LIT" in rules_fired({path: SCENARIO_BAD})
+    assert "SCENARIO-LIT" not in rules_fired({path: SCENARIO_CLEAN})
+    # deliberate negative-test literals are exempt in both idioms
+    assert "SCENARIO-LIT" not in rules_fired({path: SCENARIO_NEGATIVE})
+    # source files outside tests/benchmarks/examples are out of scope
+    assert "SCENARIO-LIT" not in rules_fired(
+        {"src/repro/core/fake.py": SCENARIO_BAD})
+
+
+def test_scenario_rule_reads_markdown_fences():
+    doc = ("# Design\n\n```\n"
+           "python -m repro.launch hx2-4x4/alltoalll\n"
+           "```\n")
+    res = simlint.lint_sources({"DESIGN.md": doc})
+    assert any(f.rule == "SCENARIO-LIT" for f in res.unsuppressed)
+    ok = doc.replace("alltoalll", "alltoall")
+    res = simlint.lint_sources({"DESIGN.md": ok})
+    assert not any(f.rule == "SCENARIO-LIT" for f in res.unsuppressed)
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+
+def test_line_suppression():
+    src = SCENARIO_BAD.replace(
+        'run("hx2-4x4/alltoalll")',
+        'run("hx2-4x4/alltoalll")  # simlint: ignore[SCENARIO-LIT]')
+    res = simlint.lint_sources({"tests/test_fake.py": src})
+    assert not res.unsuppressed
+    assert [f.rule for f in res.suppressed] == ["SCENARIO-LIT"]
+    assert res.suppression_comments == 1
+
+
+def test_line_suppression_is_rule_specific():
+    src = SCENARIO_BAD.replace(
+        'run("hx2-4x4/alltoalll")',
+        'run("hx2-4x4/alltoalll")  # simlint: ignore[SET-ITER]')
+    res = simlint.lint_sources({"tests/test_fake.py": src})
+    assert [f.rule for f in res.unsuppressed] == ["SCENARIO-LIT"]
+
+
+def test_file_suppression():
+    src = "# simlint: ignore-file[SET-ITER]\n" + SET_ITER_BAD
+    res = simlint.lint_sources({"src/repro/netsim/fake.py": src})
+    assert not res.unsuppressed
+    assert {f.rule for f in res.suppressed} == {"SET-ITER"}
+
+
+# ---------------------------------------------------------------------------
+# JSON report contract
+# ---------------------------------------------------------------------------
+
+
+def load_schema():
+    return json.loads((REPO / "benchmarks/schema.json").read_text())
+
+
+def test_report_round_trip():
+    res = simlint.lint_sources({
+        "src/repro/netsim/bad.py": SET_ITER_BAD,
+        "tests/test_fake.py": SCENARIO_CLEAN,
+    })
+    report = SLR.build_report(res, runtime_s=0.01)
+    # survives JSON serialization and validates against the schema block
+    report = json.loads(json.dumps(report))
+    assert SLR.validate_report(report, load_schema()) == []
+    assert report["counts"]["SET-ITER"] >= 1
+    assert report["n_findings"] == len(res.unsuppressed)
+
+
+def test_report_validation_catches_corruption():
+    res = simlint.lint_sources({"src/repro/netsim/bad.py": SET_ITER_BAD})
+    schema = load_schema()
+    good = SLR.build_report(res, runtime_s=0.01)
+
+    broken = json.loads(json.dumps(good))
+    del broken["counts"]
+    assert any("counts" in e for e in SLR.validate_report(broken, schema))
+
+    broken = json.loads(json.dumps(good))
+    broken["n_findings"] = 99
+    assert any("n_findings" in e for e in SLR.validate_report(broken, schema))
+
+    broken = json.loads(json.dumps(good))
+    del broken["rules"]["SET-ITER"]
+    errs = SLR.validate_report(broken, schema)
+    assert any("SET-ITER" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# the whole-repo gate (what CI enforces)
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_lint_clean():
+    res = simlint.lint_paths(
+        ["src", "tests", "benchmarks", "examples"], base=REPO)
+    assert res.parse_errors == []
+    assert [f.format() for f in res.unsuppressed] == []
+    # the explicit-suppression budget of the acceptance contract
+    assert res.suppression_comments <= SLC.SUPPRESSION_BUDGET
+    # the run covered the tree (engines, tests, docs), not a subset
+    assert res.files_scanned > 50
+    report = SLR.build_report(res, runtime_s=0.0)
+    assert SLR.validate_report(report, load_schema()) == []
+
+
+# ---------------------------------------------------------------------------
+# PYTHONHASHSEED regression for the satellite determinism fixes
+# ---------------------------------------------------------------------------
+
+_HASHSEED_PROBE = r"""
+import json, sys
+from repro.core import registry
+from repro.core.allocation import HxMeshAllocator, Job
+from repro.cluster.simulator import ClusterSimulator, SimConfig
+from repro.cluster.traces import poisson_trace
+from repro.cluster.policies import POLICIES
+
+out = {}
+
+# allocator block enumeration under failures
+alloc = HxMeshAllocator(6, 6)
+for rc in [(0, 1), (3, 2), (5, 5)]:
+    alloc.fail_board(*rc)
+placed = {}
+for jid, (u, v) in [(1, (2, 2)), (2, (3, 1)), (3, (1, 4))]:
+    pl = alloc.allocate(Job(jid=jid, u=u, v=v), aspect=True)
+    placed[str(jid)] = [sorted(pl.rows), sorted(pl.cols)] if pl else None
+out["placements"] = placed
+
+# degraded-fabric schedule replay (netsim frontier iteration)
+sc = registry.parse_scenario("hx2-4x4/ring-allreduce/fail=boards:1:seed3")
+out["fraction"] = round(sc.fraction(), 12)
+
+# cluster scheduler with churn (alloc.failed iteration in probes)
+trace = poisson_trace(25, 6, 6, load=1.3, seed=7)
+cfg = SimConfig(6, 6, fail_rate=2.0 / (36 * 300.0), repair_time=40.0,
+                probe_interval=60.0, seed=3)
+res = ClusterSimulator(cfg, POLICIES["greedy"]).run(trace)
+out["utilization"] = round(res.utilization(), 12)
+out["finished"] = sorted(
+    jid for jid, r in res.records.items() if r.status == "finished")
+out["probes"] = [[round(t, 9), tok] for t, tok in res.probe_log]
+
+json.dump(out, sys.stdout, sort_keys=True)
+"""
+
+
+def test_identical_results_across_hashseeds():
+    """The allocator, the degraded-fabric netsim replay and the cluster
+    scheduler must produce byte-identical results whatever the hash
+    seed — the regression the sorted() satellite fixes pin down."""
+    outputs = []
+    for seed in ("0", "1", "4242"):
+        env = dict(os.environ,
+                   PYTHONHASHSEED=seed,
+                   PYTHONPATH=str(REPO / "src"))
+        proc = subprocess.run(
+            [sys.executable, "-c", _HASHSEED_PROBE],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=300)
+        assert proc.returncode == 0, proc.stderr
+        outputs.append(proc.stdout)
+    assert outputs[0] == outputs[1] == outputs[2]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_gate_and_json(tmp_path):
+    report_path = tmp_path / "simlint.json"
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.simlint",
+         "src", "tests", "benchmarks", "examples",
+         "--json", str(report_path)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(report_path.read_text())
+    assert SLR.validate_report(report, load_schema()) == []
+    assert report["files_scanned"] > 50
+    assert report["runtime_s"] > 0
+
+
+def test_cli_fails_on_findings(tmp_path):
+    bad = tmp_path / "bad_scenario_test.py"
+    # a tests/-shaped path is needed for scope: lint the file via a
+    # stub tree
+    tree = tmp_path / "tree"
+    (tree / "tests").mkdir(parents=True)
+    (tree / "tests" / "test_bad.py").write_text(SCENARIO_BAD)
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.simlint", "tests", "--no-docs"],
+        capture_output=True, text=True, env=env, cwd=tree, timeout=300)
+    assert proc.returncode == 1
+    assert "SCENARIO-LIT" in proc.stdout
