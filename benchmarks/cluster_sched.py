@@ -107,25 +107,25 @@ def _compute_bw(sc: S.Scenario) -> list[dict]:
     horizon = max(j.arrival for j in trace)
     cfg = SimConfig.for_topology(
         sc.topology,
-        fail_rate=sc.opts["expected_failures"] / (base.x * base.y * horizon),
-        repair_time=horizon / 10,
-        probe_interval=horizon / n_probes,
+        fail_rate_hz=sc.opts["expected_failures"] / (base.x * base.y * horizon),
+        repair_time_s=horizon / 10,
+        probe_interval_s=horizon / n_probes,
         seed=sc.seed,
         probe_collective="ring:s16MiB",  # netsim per-job timelines
     )
     _, policy = FIG8_LADDER[-1]  # +locality: the full heuristic stack
     res = simulate(trace, cfg, policy)
     rows = []
-    observed = [rec for rec in res.records.values() if rec.achieved_bw]
+    observed = [rec for rec in res.records.values() if rec.achieved_bw_frac]
     for rec in sorted(observed, key=lambda r: r.job.jid)[:max_job_rows]:
         rows.append({
             "kind": "bw",
             "jid": rec.job.jid,
             "workload": rec.job.workload,
             "boards": rec.job.size,
-            "allocated": round(rec.allocated_bw, 3),
-            "achieved_mean": round(statistics.mean(rec.achieved_bw), 3),
-            "achieved_min": round(min(rec.achieved_bw), 3),
+            "allocated": round(rec.allocated_bw_frac, 3),
+            "achieved_mean": round(statistics.mean(rec.achieved_bw_frac), 3),
+            "achieved_min": round(min(rec.achieved_bw_frac), 3),
             "evictions": rec.n_evictions,
             "remaps": rec.n_remaps,
             # the reproducible address of the job's last measurement
@@ -135,10 +135,10 @@ def _compute_bw(sc: S.Scenario) -> list[dict]:
         rows.append({"kind": "bw", "truncated": True,
                      "shown": max_job_rows, "observed": len(observed)})
     s = res.summary()
-    alloc_mean = (statistics.mean(r.allocated_bw for r in observed)
+    alloc_mean = (statistics.mean(r.allocated_bw_frac for r in observed)
                   if observed else 0.0)
     ach_mean = (
-        statistics.mean(statistics.mean(r.achieved_bw) for r in observed)
+        statistics.mean(statistics.mean(r.achieved_bw_frac) for r in observed)
         if observed else 0.0
     )
     timed = [rec for rec in res.records.values() if rec.bw_timeline]

@@ -41,9 +41,9 @@ def main() -> None:
 
     cfg = SimConfig(
         x, y,
-        fail_rate=4.0 / (x * y * horizon),  # ~4 board failures over the run
-        repair_time=horizon / 10,
-        probe_interval=horizon / 6,  # 6 flow-level bandwidth probes
+        fail_rate_hz=4.0 / (x * y * horizon),  # ~4 board failures over the run
+        repair_time_s=horizon / 10,
+        probe_interval_s=horizon / 6,  # 6 flow-level bandwidth probes
         seed=0,
     )
     for policy_name in ("fifo", "best-fit"):
@@ -55,13 +55,13 @@ def main() -> None:
                     "mean_fragmentation"):
             if key in s:
                 print(f"  {key:20s} {s[key]:.3f}")
-        observed = [r for r in res.records.values() if r.achieved_bw]
+        observed = [r for r in res.records.values() if r.achieved_bw_frac]
         if observed:
-            alloc = statistics.mean(r.allocated_bw for r in observed)
+            alloc = statistics.mean(r.allocated_bw_frac for r in observed)
             ach = statistics.mean(
-                statistics.mean(r.achieved_bw) for r in observed)
-            print(f"  {'allocated_bw (mean)':20s} {alloc:.3f}")
-            print(f"  {'achieved_bw (mean)':20s} {ach:.3f}   "
+                statistics.mean(r.achieved_bw_frac) for r in observed)
+            print(f"  {'allocated_bw_frac (mean)':20s} {alloc:.3f}")
+            print(f"  {'achieved_bw_frac (mean)':20s} {ach:.3f}   "
                   f"({len(observed)} jobs probed)")
 
     # -- priorities + deadlines + preemption + measured contention --------

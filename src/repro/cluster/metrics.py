@@ -18,6 +18,7 @@ Pure functions over the simulator's outputs:
 
 from __future__ import annotations
 
+import math
 import statistics
 from typing import TYPE_CHECKING, Iterable, Sequence
 
@@ -46,21 +47,21 @@ def time_weighted_utilization(
         return 0.0
     if t_end is None:
         t_end = samples[-1][0]
-    num = 0.0
     span = t_end - samples[0][0]
     if span <= 0:
         return 0.0
+    terms: list[float] = []
     for (t0, busy, working, _q), nxt in zip(samples, samples[1:]):
         t1 = min(nxt[0], t_end)
         if t1 > t0 and working > 0:
-            num += (t1 - t0) * busy / working
+            terms.append((t1 - t0) * busy / working)
         if nxt[0] >= t_end:
             break
     else:
         t0, busy, working, _q = samples[-1]
         if t_end > t0 and working > 0:
-            num += (t_end - t0) * busy / working
-    return num / span
+            terms.append((t_end - t0) * busy / working)
+    return math.fsum(terms) / span
 
 
 def job_stats(records: Iterable["JobRecord"]) -> dict[str, float]:
@@ -89,7 +90,7 @@ def job_stats(records: Iterable["JobRecord"]) -> dict[str, float]:
             continue
         n_finished += 1
         n_evicted += 1 if rec.n_evictions else 0
-        slowdowns.append((rec.end - rec.job.arrival) / max(rec.job.duration, 1e-9))
+        slowdowns.append((rec.end - rec.job.arrival) / max(rec.job.duration_s, 1e-9))
     out = {
         "finished": float(n_finished),
         "evicted_jobs": float(n_evicted),

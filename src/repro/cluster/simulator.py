@@ -17,11 +17,11 @@ queue/clock the netsim engine uses):
 * **placement** — delegated to a :class:`repro.cluster.policies.Policy`
   over the :class:`repro.core.allocation.HxMeshAllocator` board state
   (or the shape-free pool for ``ft``/``df`` specs);
-* **failure churn** — a random working board fails at rate ``fail_rate``
+* **failure churn** — a random working board fails at rate ``fail_rate_hz``
   per board-second; the evicted job is remapped to a fresh virtual
   sub-HxMesh immediately (fail-in-place) or requeued at the front; repairs
   return boards after an exponential delay;
-* **bandwidth probes** — every ``probe_interval`` simulated seconds *while
+* **bandwidth probes** — every ``probe_interval_s`` simulated seconds *while
   jobs are still arriving* (like failure churn, probing stops at the last
   arrival; a job that would otherwise go unobserved gets one sample at
   completion) the shared fabric (with its current failures) is loaded
@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import math
 import random
 
 from repro.cluster import metrics as M
@@ -90,9 +91,9 @@ class JobRecord:
     # remap changes the placement, achieved samples restart alongside the
     # freshly computed allocated value, so the two always compare like for
     # like.
-    allocated_bw: float | None = None  # isolated sub-HxMesh fraction
-    allocated_token: int = -1  # placement the allocated_bw was computed for
-    achieved_bw: list[float] = dataclasses.field(default_factory=list)
+    allocated_bw_frac: float | None = None  # isolated sub-HxMesh fraction
+    allocated_token: int = -1  # placement the allocated_bw_frac was computed for
+    achieved_bw_frac: list[float] = dataclasses.field(default_factory=list)
     # registry scenario string of the fabric state at the last probe that
     # observed this job (topology / traffic / current failure set) — the
     # reproducible address of the measurement
@@ -120,11 +121,11 @@ class JobRecord:
         time over the job's epochs — 1.0 means co-tenants never slowed
         this job (the sub-mesh isolation claim), < 1.0 measures how much
         shared-fabric contention cost it.  ``None`` without replay data."""
-        num = den = 0.0
-        for (_t0, dt, cont, iso) in self.iter_samples:
-            if cont > 0 and dt > 0:
-                num += dt * (iso / cont)
-                den += dt
+        pairs = [(dt, dt * (iso / cont))
+                 for (_t0, dt, cont, iso) in self.iter_samples
+                 if cont > 0 and dt > 0]
+        den = math.fsum(dt for dt, _ in pairs)
+        num = math.fsum(term for _, term in pairs)
         return float(num / den) if den > 0 else None
 
 
@@ -152,9 +153,9 @@ class SimConfig:
     y: int  # board rows
     board_a: int = 2  # accelerators per board, x
     board_b: int = 2  # accelerators per board, y
-    fail_rate: float = 0.0  # board failures per board-second
-    repair_time: float = 0.0  # mean exponential repair delay; 0 = no repair
-    probe_interval: float | None = None  # flowsim probe cadence (probes
+    fail_rate_hz: float = 0.0  # board failures per board-second
+    repair_time_s: float = 0.0  # mean exponential repair delay; 0 = no repair
+    probe_interval_s: float | None = None  # flowsim probe cadence (probes
     # fire only up to the last arrival, like the failure churn)
     seed: int = 0
     topology: str | None = None  # registry spec string
@@ -227,7 +228,7 @@ class SimResult:
         }
         out.update(M.job_stats(self.records.values()))
         if self.fragmentation_samples:
-            out["mean_fragmentation"] = sum(
+            out["mean_fragmentation"] = math.fsum(
                 f for _, f in self.fragmentation_samples
             ) / len(self.fragmentation_samples)
         fracs = [float(f) for rec in self.records.values()
@@ -304,10 +305,10 @@ class ClusterSimulator:
         for job in trace:
             self._push(job.arrival, EV_ARRIVAL, job)
         self.last_arrival = max(j.arrival for j in trace)
-        if self.cfg.fail_rate > 0:
+        if self.cfg.fail_rate_hz > 0:
             self._push(self._next_fail_time(0.0), EV_FAIL, None)
-        if self.cfg.probe_interval and self.cfg.probe_interval <= self.last_arrival:
-            self._push(self.cfg.probe_interval, EV_PROBE, None)
+        if self.cfg.probe_interval_s and self.cfg.probe_interval_s <= self.last_arrival:
+            self._push(self.cfg.probe_interval_s, EV_PROBE, None)
         self._sample(0.0)
         t = self.loop.run()
         if self.cfg.replay_collective:
@@ -337,7 +338,7 @@ class ClusterSimulator:
             rec.status = "rejected"
             self.audit.append(AuditEvent(t, "reject", job.jid, ()))
         else:
-            self.queue.append(QueueEntry(job=job, remaining=job.duration))
+            self.queue.append(QueueEntry(job=job, remaining=job.duration_s))
             self._schedule_pass(t)
         self._sample(t)
 
@@ -348,7 +349,7 @@ class ClusterSimulator:
         a no-backfill FIFO line forever."""
         if not self.policy.can_ever_fit(self.alloc, job.to_alloc_job()):
             return True
-        return self.cfg.repair_time <= 0 and not self._fits_surviving(job, probe)
+        return self.cfg.repair_time_s <= 0 and not self._fits_surviving(job, probe)
 
     def _on_finish(self, t: float, jid: int, token: int) -> None:
         rec = self.records[jid]
@@ -422,14 +423,14 @@ class ClusterSimulator:
         if working:
             r, c = self.rng.choice(working)
             self._fail_board(t, r, c)
-            if self.cfg.repair_time > 0:
-                delay = self.rng.expovariate(1.0 / self.cfg.repair_time)
+            if self.cfg.repair_time_s > 0:
+                delay = self.rng.expovariate(1.0 / self.cfg.repair_time_s)
                 self._push(t + delay, EV_REPAIR, (r, c))
         if t < self.last_arrival:  # churn only while jobs still arrive
             self._push(self._next_fail_time(t), EV_FAIL, None)
         # the shrunken grid may have made queued jobs hopeless (they would
         # block a no-backfill line forever) ...
-        if self.cfg.repair_time <= 0 and self.queue:
+        if self.cfg.repair_time_s <= 0 and self.queue:
             probe = self._surviving_probe()  # one grid replay for the sweep
             keep: list[QueueEntry] = []
             for entry in self.queue:
@@ -629,10 +630,10 @@ class ClusterSimulator:
     # -- failure churn & probes ----------------------------------------------
 
     def _next_fail_time(self, t: float) -> float:
-        # fail_rate is per *working* board-second; only surviving boards
+        # fail_rate_hz is per *working* board-second; only surviving boards
         # contribute hazard
         working = self.alloc.x * self.alloc.y - len(self.alloc.failed)
-        rate = self.cfg.fail_rate * max(1, working)
+        rate = self.cfg.fail_rate_hz * max(1, working)
         return t + self.rng.expovariate(rate)
 
     def _net_now(self) -> F.Network:
@@ -684,15 +685,15 @@ class ClusterSimulator:
         for jid, frac in achieved.items():
             rec = self.records[jid]
             if rec.allocated_token != rec.token:  # new or re-placed job
-                rec.achieved_bw = []  # samples of the old placement
-                rec.allocated_bw = M.allocated_bandwidth(net, jobs_eps[jid])
+                rec.achieved_bw_frac = []  # samples of the old placement
+                rec.allocated_bw_frac = M.allocated_bandwidth(net, jobs_eps[jid])
                 rec.allocated_token = rec.token
-            rec.achieved_bw.append(frac)
+            rec.achieved_bw_frac.append(frac)
             rec.probe_scenario = scenario
         if self.cfg.probe_collective:
             self._probe_collective_timelines(t, net, jobs_eps)
         self.frag_samples.append((t, M.fragmentation(self.alloc)))
-        nxt = t + self.cfg.probe_interval
+        nxt = t + self.cfg.probe_interval_s
         if nxt <= self.last_arrival:
             self._push(nxt, EV_PROBE, None)
 

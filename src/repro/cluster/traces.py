@@ -36,7 +36,7 @@ from repro.core.allocation import JOB_SIZE_DISTRIBUTION, Job, _divisors
 @dataclasses.dataclass(frozen=True)
 class TraceJob:
     """One job of a trace: a ``u × v``-board request arriving at ``arrival``
-    with ``duration`` seconds of service time.
+    with ``duration_s`` seconds of service time.
 
     ``scenario`` is the canonical registry scenario string of the fabric
     the job's duration was calibrated for (``"hx2-16x16/alltoall"``; empty
@@ -57,7 +57,7 @@ class TraceJob:
     arrival: float
     u: int
     v: int
-    duration: float
+    duration_s: float
     workload: str = "GPT-3"
     iterations: int = 0
     scenario: str = ""
@@ -81,24 +81,25 @@ _MID_MIX = [("CosmoFlow", 0.4), ("ResNet-152", 0.4), ("GPT-3", 0.2)]
 _SMALL_MIX = [("DLRM", 0.5), ("ResNet-152", 0.5)]
 
 
-def _workload_for(size: int, rng: random.Random) -> str:
-    mix = _LARGE_MIX if size >= 32 else _MID_MIX if size >= 8 else _SMALL_MIX
+def _workload_for(n_boards: int, rng: random.Random) -> str:
+    mix = (_LARGE_MIX if n_boards >= 32
+           else _MID_MIX if n_boards >= 8 else _SMALL_MIX)
     names, weights = zip(*mix)
     return rng.choices(names, weights)[0]
 
 
 def _sample_shape(
-    size: int, x: int, y: int, rng: random.Random, max_aspect: int = 8
+    n_boards: int, x: int, y: int, rng: random.Random, max_aspect: int = 8
 ) -> tuple[int, int] | None:
-    """Draw a ``u × v`` shape of ``size`` boards uniformly over the
+    """Draw a ``u × v`` shape of ``n_boards`` boards uniformly over the
     aspect-bounded factorizations that fit a ``y × x`` board grid, or
     ``None`` when none fits (the size is skipped).  Jobs request genuinely
     rectangular shapes — that is what makes the transpose heuristic matter."""
     shapes = [
-        (u, size // u)
-        for u in _divisors(size)
-        if max(u, size // u) / min(u, size // u) <= max_aspect
-        and u <= y and size // u <= x
+        (u, n_boards // u)
+        for u in _divisors(n_boards)
+        if max(u, n_boards // u) / min(u, n_boards // u) <= max_aspect
+        and u <= y and n_boards // u <= x
     ]
     if not shapes:
         return None
@@ -133,12 +134,12 @@ def _generate(
     mu = _log_mu(mean_iterations, sigma_iterations)
     raw: list[tuple[int, int, str, int, float]] = []
     while len(raw) < n_jobs:
-        size = rng.choices(sizes, weights)[0]
-        shape = _sample_shape(size, x, y, rng, max_aspect)
+        n_boards = rng.choices(sizes, weights)[0]
+        shape = _sample_shape(n_boards, x, y, rng, max_aspect)
         if shape is None:
             continue
         u, v = shape
-        wl = _workload_for(size, rng)
+        wl = _workload_for(n_boards, rng)
         iters = max(1, int(rng.lognormvariate(mu, sigma_iterations)))
         dur = commodel.job_duration_s(wl, iters, topology)
         raw.append((u, v, wl, iters, dur))
@@ -157,7 +158,7 @@ def _generate(
                 if prio_classes else 0)
         deadline = (t + deadline_slack * dur
                     if deadline_slack is not None else None)
-        jobs.append(TraceJob(jid=jid, arrival=t, u=u, v=v, duration=dur,
+        jobs.append(TraceJob(jid=jid, arrival=t, u=u, v=v, duration_s=dur,
                              workload=wl, iterations=iters,
                              scenario=scenario, priority=prio,
                              deadline=deadline))
@@ -250,6 +251,7 @@ def save_trace(jobs: list[TraceJob], path: str) -> None:
     with open(path, "w") as fh:
         for j in jobs:
             d = dataclasses.asdict(j)
+            d["duration"] = d.pop("duration_s")  # wire key is stable
             if j.priority == 0:
                 del d["priority"]
             if j.deadline is None:
@@ -264,5 +266,7 @@ def load_trace(path: str) -> list[TraceJob]:
             line = line.strip()
             if not line:
                 continue
-            jobs.append(TraceJob(**json.loads(line)))
+            rec = json.loads(line)
+            rec["duration_s"] = rec.pop("duration")
+            jobs.append(TraceJob(**rec))
     return sorted(jobs, key=lambda j: (j.arrival, j.jid))

@@ -38,6 +38,7 @@ allreduce lands within 5% of the α-β ``commodel`` prediction.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -167,8 +168,8 @@ class FootprintCache:
             rt += 1
             if len(ds) + len(dt_) > budget:
                 return None
-        total = sum(nps[v] * npt[v] for v, d in ds.items()
-                    if d == dist - 1 and dt_.get(v) == 1)
+        total = math.fsum(nps[v] * npt[v] for v, d in ds.items()
+                          if d == dist - 1 and dt_.get(v) == 1)
         if total <= 0:  # pragma: no cover - dist certified above
             return np.zeros(0, dtype=np.int64), np.zeros(0)
         found: dict[int, float] = {}
@@ -391,12 +392,10 @@ class SimReport:
     def group_mean_rate(self, group: str) -> float:
         """Time-weighted mean aggregate rate of one group over its own
         active intervals (bytes/s)."""
-        num = dur = 0.0
-        for t0, t1, rates in self.timeline:
-            r = rates.get(group, 0.0)
-            if r > 0:
-                num += r * (t1 - t0)
-                dur += t1 - t0
+        spans = [(t1 - t0, r) for t0, t1, rates in self.timeline
+                 if (r := rates.get(group, 0.0)) > 0]
+        dur = math.fsum(w for w, _ in spans)
+        num = math.fsum(w * r for w, r in spans)
         return num / dur if dur > 0 else 0.0
 
 

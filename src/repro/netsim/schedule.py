@@ -43,6 +43,7 @@ topology grammars, canonical and round-tripping through
 from __future__ import annotations
 
 import dataclasses
+import math
 import re
 from typing import Callable
 
@@ -53,8 +54,8 @@ from repro.core import flowsim as F
 from repro.core import hamiltonian as ham
 
 PLANES = C.PLANES  # the fabric graph is one of these planes
-DEFAULT_SIZE = 100 * 2 ** 20  # canonical forms omit the default payload
-DEFAULT_TRAFFIC_SIZE = 4 * 2 ** 20  # demand_schedule per-unit-volume bytes
+DEFAULT_SIZE_BYTES = 100 * 2 ** 20  # canonical forms omit the default payload
+DEFAULT_TRAFFIC_SIZE_BYTES = 4 * 2 ** 20  # demand_schedule per-unit-volume bytes
 
 
 # ---------------------------------------------------------------------------
@@ -92,8 +93,8 @@ class CommSchedule:
 
     @property
     def total_bytes(self) -> float:
-        return sum(b * max(1, ph.repeat)
-                   for ph in self.phases for (_, _, b) in ph.flows)
+        return math.fsum(b * max(1, ph.repeat)
+                         for ph in self.phases for (_, _, b) in ph.flows)
 
     @property
     def n_flows(self) -> int:
@@ -169,18 +170,18 @@ def _ring_phase(order, step_bytes: float, repeat: int, name: str,
 # ---------------------------------------------------------------------------
 
 
-def lower_ring(net: F.Network, size_pl: float,
+def lower_ring(net: F.Network, size_pl_bytes: float,
                group: str = "") -> tuple[Phase, ...]:
     """Pipelined unidirectional ring: 2(p-1) steps of S/p (§V-A2b)."""
     order = ring_order(net)
     p = len(order)
     if p < 2:
         return ()
-    return (_ring_phase(order, size_pl / p, 2 * (p - 1), "ring",
+    return (_ring_phase(order, size_pl_bytes / p, 2 * (p - 1), "ring",
                         group=group),)
 
 
-def lower_bidir(net: F.Network, size_pl: float,
+def lower_bidir(net: F.Network, size_pl_bytes: float,
                 group: str = "") -> tuple[Phase, ...]:
     """Bidirectional ring: halves travel in opposite directions (§V-A2b),
     two concurrent phases on the two link directions."""
@@ -188,7 +189,7 @@ def lower_bidir(net: F.Network, size_pl: float,
     p = len(order)
     if p < 2:
         return ()
-    step = size_pl / (2 * p)
+    step = size_pl_bytes / (2 * p)
     return (
         _ring_phase(order, step, 2 * (p - 1), "bidir/fwd", group=group),
         _ring_phase(order, step, 2 * (p - 1), "bidir/rev", reverse=True,
@@ -196,7 +197,7 @@ def lower_bidir(net: F.Network, size_pl: float,
     )
 
 
-def lower_hamiltonian(net: F.Network, size_pl: float,
+def lower_hamiltonian(net: F.Network, size_pl_bytes: float,
                       group: str = "") -> tuple[Phase, ...]:
     """Dual edge-disjoint Hamiltonian cycles, each bidirectional: four
     concurrent quarter-size rings driving all four per-plane ports
@@ -207,14 +208,14 @@ def lower_hamiltonian(net: F.Network, size_pl: float,
         return ()
     geo = F._grid_geometry(net)
     if geo is None or len(act) != net.n_endpoints:
-        return lower_bidir(net, size_pl, group)
+        return lower_bidir(net, size_pl_bytes, group)
     r, c, gid = geo
     try:
         red, green = ham.dual_cycles(r, c)
     except ValueError:
-        return lower_bidir(net, size_pl, group)
+        return lower_bidir(net, size_pl_bytes, group)
     p = r * c
-    step = size_pl / (4 * p)
+    step = size_pl_bytes / (4 * p)
     phases = []
     for cyc, tag in ((red, "red"), (green, "green")):
         order = [gid(i, j) for i, j in cyc]
@@ -264,7 +265,7 @@ def _torus_instance(rows_of, n_rows: int, n_cols: int, data: float,
     return tuple(phases)
 
 
-def lower_torus(net: F.Network, size_pl: float,
+def lower_torus(net: F.Network, size_pl_bytes: float,
                 group: str = "") -> tuple[Phase, ...]:
     """2D-torus allreduce (§V-A2c): row reduce-scatter → column
     bidirectional allreduce → row allgather, with two transposed
@@ -275,8 +276,8 @@ def lower_torus(net: F.Network, size_pl: float,
         return ()
     r, c, gid = _virtual_grid(net)
     if r < 2 or c < 2:
-        return lower_bidir(net, size_pl, group)
-    half = size_pl / 2
+        return lower_bidir(net, size_pl_bytes, group)
+    half = size_pl_bytes / 2
     inst_a = _torus_instance(lambda i, j: gid(i, j), r, c, half, 0, "a",
                              group)
     inst_b = _torus_instance(lambda i, j: gid(j, i), c, r, half,
@@ -284,7 +285,7 @@ def lower_torus(net: F.Network, size_pl: float,
     return inst_a + inst_b
 
 
-def lower_hierarchical(net: F.Network, size_pl: float,
+def lower_hierarchical(net: F.Network, size_pl_bytes: float,
                        group: str = "") -> tuple[Phase, ...]:
     """Hierarchical 2-axis allreduce: bidirectional rings along every
     grid row, then along every column (the 2-axis ``bidir`` dispatch of
@@ -294,9 +295,9 @@ def lower_hierarchical(net: F.Network, size_pl: float,
         return ()
     r, c, gid = _virtual_grid(net)
     if r < 2 or c < 2:
-        return lower_bidir(net, size_pl, group)
-    row_step = size_pl / (2 * c)
-    col_step = size_pl / (2 * r)
+        return lower_bidir(net, size_pl_bytes, group)
+    row_step = size_pl_bytes / (2 * c)
+    col_step = size_pl_bytes / (2 * r)
     rows_fwd = tuple((gid(i, j), gid(i, (j + 1) % c), row_step)
                      for i in range(r) for j in range(c))
     rows_rev = tuple((gid(i, (j + 1) % c), gid(i, j), row_step)
@@ -327,7 +328,7 @@ class CollectiveFamily:
     """One collective-leg family: a name, a lowering, an α-β model."""
 
     name: str
-    lower: Callable[..., tuple[Phase, ...]]  # lower(net, size_pl, group="")
+    lower: Callable[..., tuple[Phase, ...]]  # lower(net, size_pl_bytes, group="")
     model: Callable[..., float] | None = None  # model(p, size) -> seconds
     doc: str = ""
 
@@ -347,7 +348,7 @@ def collective_grammar() -> str:
     return (f"coll=<algo>[:s<size>] with algo in [{names}] and size "
             "an integer byte count with optional KiB|MiB|GiB suffix "
             "(default "
-            f"{_fmt_size(DEFAULT_SIZE)})")
+            f"{_fmt_size(DEFAULT_SIZE_BYTES)})")
 
 
 # ---------------------------------------------------------------------------
@@ -377,10 +378,11 @@ class CollectiveSpec:
     """
 
     algo: str
-    size: int = DEFAULT_SIZE  # full allreduce payload, bytes
+    size_bytes: int = DEFAULT_SIZE_BYTES  # full allreduce payload
 
     def __str__(self) -> str:
-        tail = f":s{_fmt_size(self.size)}" if self.size != DEFAULT_SIZE else ""
+        tail = f":s{_fmt_size(self.size_bytes)}" \
+            if self.size_bytes != DEFAULT_SIZE_BYTES else ""
         return f"coll={self.algo}{tail}"
 
     @property
@@ -391,7 +393,8 @@ class CollectiveSpec:
                  alpha: float = C.ALPHA, group: str = "") -> CommSchedule:
         """Lower onto a concrete fabric: one plane's share of the payload
         (all ``planes`` run the same schedule independently)."""
-        phases = self.family.lower(net, self.size / planes, group=group)
+        phases = self.family.lower(net, self.size_bytes / planes,
+                                   group=group)
         return CommSchedule(name=str(self), phases=phases, alpha=alpha)
 
     def model_time(self, p: int) -> float | None:
@@ -399,7 +402,7 @@ class CollectiveSpec:
         ``None`` for families without a closed form."""
         if self.family.model is None:
             return None
-        return self.family.model(p, float(self.size))
+        return self.family.model(p, float(self.size_bytes))
 
 
 def parse_collective(token) -> CollectiveSpec:
@@ -421,7 +424,7 @@ def parse_collective(token) -> CollectiveSpec:
         raise ValueError(
             f"unknown collective algorithm {algo!r}; grammar: "
             f"{collective_grammar()}")
-    size = DEFAULT_SIZE
+    size_bytes = DEFAULT_SIZE_BYTES
     seen_size = False
     for part in parts[1:]:
         m = _SIZE_RE.fullmatch(part)
@@ -432,10 +435,10 @@ def parse_collective(token) -> CollectiveSpec:
         if seen_size:
             raise ValueError(f"duplicate size param in {token!r}")
         seen_size = True
-        size = int(m[1]) * dict(_UNITS)[m[2] or "B"]
-        if size <= 0:
+        size_bytes = int(m[1]) * dict(_UNITS)[m[2] or "B"]
+        if size_bytes <= 0:
             raise ValueError(f"collective size must be positive: {part!r}")
-    return CollectiveSpec(algo=algo, size=size)
+    return CollectiveSpec(algo=algo, size_bytes=size_bytes)
 
 
 def lower(spec, net: F.Network, planes: int = PLANES,
@@ -444,18 +447,20 @@ def lower(spec, net: F.Network, planes: int = PLANES,
     return parse_collective(spec).schedule(net, planes, alpha, group)
 
 
-def demand_schedule(net: F.Network, dem, size: int = DEFAULT_TRAFFIC_SIZE,
+def demand_schedule(net: F.Network, dem,
+                    size_bytes: int = DEFAULT_TRAFFIC_SIZE_BYTES,
                     planes: int = PLANES, alpha: float = C.ALPHA,
                     name: str = "traffic", group: str = "") -> CommSchedule:
     """Lower a steady-state traffic :class:`repro.core.traffic.Demand`
     into a one-shot, single-phase schedule: every nonzero demand entry
-    becomes one concurrent ``(src, dst, size * volume / planes)`` flow.
+    becomes one concurrent ``(src, dst, size_bytes * volume / planes)``
+    flow.
 
     This is how traffic-only scenarios become time-domain runnable at
     packet fidelity (``torus-4x4/alltoall/fidelity=packet``): the packet
     engine replays the burst and its completion time carries the
     queueing/backpressure signal the steady-state fraction averages out.
-    ``size`` is deliberately small (default 4 MiB per unit volume) so
+    ``size_bytes`` is deliberately small (default 4 MiB per unit volume) so
     small fabrics stay inside the packet-count envelope."""
     flows: list[tuple[int, int, float]] = []
     chunk = 256
@@ -466,7 +471,7 @@ def demand_schedule(net: F.Network, dem, size: int = DEFAULT_TRAFFIC_SIZE,
             nz = np.nonzero(rows[k])[0]
             for t in nz:
                 flows.append((int(s), int(t),
-                              size * float(rows[k][t]) / planes))
+                              size_bytes * float(rows[k][t]) / planes))
     phases = (Phase(name=name, flows=tuple(flows), group=group),) \
         if flows else ()
     return CommSchedule(name=name, phases=phases, alpha=alpha)
@@ -485,12 +490,12 @@ def schedule_for_endpoints(spec, net: F.Network, endpoints,
     if p < 2:
         return CommSchedule(name=f"{cs}@{group or 'job'}", phases=(),
                             alpha=alpha)
-    size_pl = cs.size / planes
+    size_pl_bytes = cs.size_bytes / planes
     if cs.algo == "ring":
-        phases = (_ring_phase(order, size_pl / p, 2 * (p - 1), "ring",
+        phases = (_ring_phase(order, size_pl_bytes / p, 2 * (p - 1), "ring",
                               group=group),)
     else:
-        step = size_pl / (2 * p)
+        step = size_pl_bytes / (2 * p)
         phases = (
             _ring_phase(order, step, 2 * (p - 1), "bidir/fwd", group=group),
             _ring_phase(order, step, 2 * (p - 1), "bidir/rev", reverse=True,

@@ -8,7 +8,7 @@ string per experiment.  Runtime tests sample a few configurations;
 ``simlint`` checks the *source* for whole classes of bug before any
 simulation runs, and CI gates on zero unsuppressed findings.
 
-Four rule groups (registered in a rule registry mirroring
+Five rule groups (registered in a rule registry mirroring
 ``registry.register_family`` / ``traffic.register_traffic``):
 
 * **determinism** — iteration over sets feeding simulator state
@@ -18,10 +18,16 @@ Four rule groups (registered in a rule registry mirroring
   internals or the clock outside the handler API (``QUEUE-INTERNALS``)
   and handlers that push events into the past (``PAST-PUSH``);
 * **units** — the suffix unit convention (``_bytes``/``_s``/``_cycles``/
-  ``_bps``/``_frac``/...): mixed-unit arithmetic (``UNIT-MIX``),
-  unconverted cross-unit assignment (``UNIT-ASSIGN``), and ambiguous
-  bare names like ``size``/``rate``/``packet`` in the audited unit
-  modules (``UNIT-AMBIG``);
+  ``_bps``/``_frac``/``_hz``/...): mixed-unit arithmetic
+  (``UNIT-MIX``), unconverted cross-unit assignment (``UNIT-ASSIGN``),
+  ambiguous bare names like ``size``/``rate``/``packet`` in the audited
+  unit modules (``UNIT-AMBIG``), plus the dataflow pass of
+  :mod:`repro.simlint.dataflow` — inferred-unit conflicts through
+  locals, call sites and returns (``UNIT-FLOW``), and functions whose
+  branches return conflicting units (``UNIT-RETURN``);
+* **numerics** — order-sensitive float accumulation over iterables
+  with no ordering guarantee (``FLOAT-ACCUM``; remedies ``math.fsum``
+  or ``sorted(...)``);
 * **scenario** — every scenario-shaped string literal in tests,
   benchmarks, examples and the fenced code blocks of ``DESIGN.md`` /
   ``ROADMAP.md`` must parse through ``registry.parse_scenario``
@@ -30,6 +36,7 @@ Four rule groups (registered in a rule registry mirroring
 CLI::
 
     python -m repro.simlint src tests benchmarks examples --json report.json
+    python -m repro.simlint --fix [--check] src tests benchmarks examples
 
 Per-line suppression: ``# simlint: ignore[RULE]`` on the reported line;
 per-file: ``# simlint: ignore-file[RULE]``.  Both are counted in the
@@ -54,3 +61,4 @@ from repro.simlint import determinism as _determinism  # noqa: F401,E402
 from repro.simlint import events as _events  # noqa: F401,E402
 from repro.simlint import units as _units  # noqa: F401,E402
 from repro.simlint import scenario as _scenario  # noqa: F401,E402
+from repro.simlint import dataflow as _dataflow  # noqa: F401,E402

@@ -4,6 +4,11 @@ Exits 0 when every finding is suppressed (or there are none), 1 when
 unsuppressed findings remain, 2 on usage errors.  ``--json`` writes the
 schema-validated report (see ``benchmarks/schema.json``,
 ``simlint_report`` block); ``--list-rules`` prints the rule inventory.
+
+``--fix`` applies the conservative autofixes (:mod:`repro.simlint.fixer`
+— ``sorted(...)`` wraps and unambiguous suffix renames) in place, then
+lints the fixed tree.  ``--fix --check`` writes nothing and exits 1 if
+the fixer *would* change anything — the CI idempotence gate.
 """
 
 from __future__ import annotations
@@ -32,12 +37,39 @@ def main(argv: list[str] | None = None) -> int:
                         help="print the rule inventory and exit")
     parser.add_argument("--no-docs", action="store_true",
                         help="skip DESIGN.md/ROADMAP.md fenced-block scan")
+    parser.add_argument("--fix", action="store_true",
+                        help="apply conservative autofixes (sorted() "
+                             "wraps, suffix renames) before linting")
+    parser.add_argument("--check", action="store_true",
+                        help="with --fix: write nothing, exit 1 if any "
+                             "fix is pending (CI idempotence gate)")
     args = parser.parse_args(argv)
+
+    if args.check and not args.fix:
+        parser.error("--check requires --fix")
 
     if args.list_rules:
         for name, rule in sorted(RULES.items()):
             print(f"{name:16s} [{rule.group}] {rule.description}")
         return 0
+
+    if args.fix:
+        from repro.simlint.fixer import fix_paths
+
+        fres = fix_paths(args.paths or ["src", "tests", "benchmarks",
+                                        "examples"], check=args.check)
+        verb = "would fix" if args.check else "fixed"
+        for plan in fres.plans:
+            details = [f"{plan.n_wraps} sorted() wrap(s)"] \
+                if plan.n_wraps else []
+            details += [f"{q}: {old} -> {new}"
+                        for q, old, new in plan.renames]
+            print(f"{verb} {plan.rel}: {'; '.join(details)}")
+        print(f"simlint --fix: {fres.n_wraps} wraps, {fres.n_renames} "
+              f"renames in {len(fres.plans)} of {fres.files_scanned} "
+              f"files", file=sys.stderr)
+        if args.check:
+            return 1 if fres.plans else 0
 
     t0 = time.perf_counter()
     result = lint_paths(args.paths or ["src", "tests", "benchmarks",

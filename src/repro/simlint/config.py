@@ -31,12 +31,23 @@ EVENT_SCOPE = ("src/", "tests/", "benchmarks/", "examples/")
 EVENT_SCOPE_EXCLUDE = ("src/repro/core/timecore.py",)
 
 # The unit-suffix convention is enforced on the modules where bytes,
-# seconds, cycles and rate fractions meet (DESIGN.md §12).
+# seconds, cycles and rate fractions meet (DESIGN.md §12).  Since v2 the
+# audited surface covers the whole simulation stack: all of netsim/ and
+# cluster/ (schedules, the cluster scheduler, metrics, traces) on top of
+# the original engine/spec modules.
 UNIT_SCOPE = (
     "src/repro/core/commodel.py",
-    "src/repro/netsim/engine.py",
+    "src/repro/netsim/",
     "src/repro/packetsim/engine.py",
     "src/repro/packetsim/spec.py",
+    "src/repro/cluster/",
+)
+
+# Float accumulation order is audited where reductions feed recorded
+# metrics: the waterfill/metrics-style loops of netsim and cluster.
+FLOAT_SCOPE = (
+    "src/repro/netsim/",
+    "src/repro/cluster/",
 )
 
 # Scenario string literals are validated wherever experiments are named.

@@ -1,0 +1,1106 @@
+"""Dataflow unit inference and numeric-stability rules (simlint v2).
+
+The v1 unit rules (:mod:`repro.simlint.units`) only see a unit where a
+*suffixed name* is used.  This module adds an intra-procedural, scope-
+aware dataflow pass that propagates unit "types" through assignments,
+augmented assignments, arithmetic, returns and call sites, so findings
+fire on unsuffixed locals and cross-function flows too:
+
+* the **unit algebra** — ``bytes / bps -> s``, ``bps * s -> bytes``,
+  ``bytes * frac -> bytes``, ``x / x -> frac``, ``s + cycles -> ERROR``
+  — evaluated over an abstract value per local variable;
+* **two-phase signature collection** — a ``prepare`` hook first infers a
+  per-module signature (parameter units from suffixes, return unit from
+  the dataflow over the body) for every function on the audited surface,
+  then the per-file check resolves call sites against those signatures;
+* three rules on the same facts:
+
+  - ``UNIT-FLOW`` (units): additive arithmetic, assignment or call-site
+    binding where *inferred* units conflict (at least one operand's unit
+    comes from the dataflow, so v1's ``UNIT-MIX``/``UNIT-ASSIGN`` would
+    miss it);
+  - ``UNIT-RETURN`` (units): a function whose return statements infer
+    conflicting physical units across branches;
+  - ``FLOAT-ACCUM`` (numerics): order-sensitive float accumulation
+    (``acc += ...`` or builtin ``sum(...)``) over an iterable with no
+    local ordering guarantee — sets, dict views, attributes, or
+    order-opaque parameters.  The remedies are ``math.fsum`` (order-
+    independent, correctly rounded), ``sorted(...)``, or an explicit
+    ``# simlint: ignore[FLOAT-ACCUM]``.
+
+Every finding carries a *provenance* string describing the inference
+chain, surfaced in the v2 JSON report.
+
+Assignments between the time sub-units (``s``/``ms``/``us``) are never
+flagged by the dataflow (a scaling conversion like ``t_ms = t_s * 1e3``
+is invisible to the algebra); additive mixing of them still is.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Iterator
+
+from repro.simlint import config
+from repro.simlint.framework import FileContext, register_rule
+from repro.simlint.units import unit_of_name
+
+# -- abstract value domain ---------------------------------------------------
+
+#: Physical units the algebra reasons about (``1/s`` has no name suffix
+#: of its own besides ``_hz``; it arises from ``1 / t_s``).
+PHYSICAL_UNITS = frozenset({
+    "bytes", "s", "ms", "us", "cycles", "bytes/s", "frac",
+    "packets", "hops", "1/s",
+})
+
+_TIME_FAMILY = frozenset({"s", "ms", "us"})
+
+# Type-ish (dimensionless) tags the pass also tracks, mostly so that
+# integer counters and numpy arrays can be *exempted* from FLOAT-ACCUM.
+_NUMERIC = frozenset({"int", "float", "bool"})
+
+
+@dataclass(frozen=True)
+class Val:
+    """An abstract value: a unit/type tag plus how we know it."""
+
+    tag: str | None  # physical unit, type tag, or None = unknown
+    why: str = ""
+
+    @property
+    def physical(self) -> bool:
+        return self.tag in PHYSICAL_UNITS
+
+    @property
+    def floatish(self) -> bool:
+        return self.tag == "float" or self.tag in PHYSICAL_UNITS
+
+
+UNKNOWN = Val(None)
+
+
+def _suffix_val(name: str, kind: str) -> Val | None:
+    u = unit_of_name(name)
+    if u is None:
+        return None
+    return Val(u, f"{kind} {name!r} carries [{u}]")
+
+
+# -- the unit algebra --------------------------------------------------------
+
+
+def add_units(left: Val, right: Val) -> tuple[Val, str | None]:
+    """Abstract ``+``/``-``.  Returns (result, conflict-message)."""
+    lt, rt = left.tag, right.tag
+    if lt in PHYSICAL_UNITS and rt in PHYSICAL_UNITS:
+        if lt == rt:
+            return Val(lt, f"[{lt}] + [{rt}]"), None
+        return Val(None, "conflict"), (
+            f"adds [{lt}] to [{rt}]")
+    if lt in PHYSICAL_UNITS:
+        return left, None  # unit + bare number: a constant in that unit
+    if rt in PHYSICAL_UNITS:
+        return right, None
+    if lt == rt == "int":
+        return Val("int"), None
+    if lt in _NUMERIC and rt in _NUMERIC:
+        return Val("float"), None
+    return UNKNOWN, None
+
+
+def mul_units(left: Val, right: Val) -> Val:
+    """Abstract ``*`` — how units convert."""
+    lt, rt = left.tag, right.tag
+    for a, b in ((lt, rt), (rt, lt)):
+        other = right if a is lt else left
+        if a == "frac" and b in PHYSICAL_UNITS and b != "frac":
+            return Val(b, f"[{b}] * [frac] -> [{b}]")
+        if a in ("bytes/s",) and b == "s":
+            return Val("bytes", "[bytes/s] * [s] -> [bytes]")
+        if a == "1/s" and b == "s":
+            return Val("float", "[1/s] * [s] -> dimensionless")
+    if lt in PHYSICAL_UNITS and (rt in _NUMERIC or rt is None):
+        return Val(lt, f"[{lt}] * number -> [{lt}]") \
+            if rt in _NUMERIC else UNKNOWN
+    if rt in PHYSICAL_UNITS and (lt in _NUMERIC or lt is None):
+        return Val(rt, f"number * [{rt}] -> [{rt}]") \
+            if lt in _NUMERIC else UNKNOWN
+    if lt == "frac" and rt == "frac":
+        return Val("frac")
+    if lt == rt == "int":
+        return Val("int")
+    if lt in _NUMERIC and rt in _NUMERIC:
+        return Val("float")
+    return UNKNOWN
+
+
+def div_units(left: Val, right: Val) -> Val:
+    """Abstract ``/`` — the conversion workhorse."""
+    lt, rt = left.tag, right.tag
+    if lt in PHYSICAL_UNITS and lt == rt:
+        return Val("frac", f"[{lt}] / [{lt}] -> [frac]")
+    if lt == "bytes" and rt == "bytes/s":
+        return Val("s", "[bytes] / [bytes/s] -> [s]")
+    if lt == "bytes" and rt == "s":
+        return Val("bytes/s", "[bytes] / [s] -> [bytes/s]")
+    if lt in PHYSICAL_UNITS and rt == "frac":
+        return Val(lt, f"[{lt}] / [frac] -> [{lt}]")
+    if lt in PHYSICAL_UNITS and (rt in _NUMERIC):
+        return Val(lt, f"[{lt}] / number -> [{lt}]")
+    if (lt in _NUMERIC) and rt == "s":
+        return Val("1/s", "number / [s] -> [1/s]")
+    if lt in _NUMERIC and rt in _NUMERIC:
+        return Val("float")
+    return UNKNOWN
+
+
+def binop_units(op: ast.operator, left: Val,
+                right: Val) -> tuple[Val, str | None]:
+    """Dispatch one abstract binary operation; (result, conflict)."""
+    if isinstance(op, (ast.Add, ast.Sub)):
+        return add_units(left, right)
+    if isinstance(op, ast.Mult):
+        return mul_units(left, right), None
+    if isinstance(op, ast.Div):
+        return div_units(left, right), None
+    if isinstance(op, ast.FloorDiv):
+        if left.tag in PHYSICAL_UNITS and left.tag == right.tag:
+            return Val("int"), None
+        if left.tag in PHYSICAL_UNITS and right.tag in _NUMERIC:
+            return Val(left.tag), None
+        if left.tag == right.tag == "int":
+            return Val("int"), None
+        return UNKNOWN, None
+    if isinstance(op, ast.Mod):
+        if left.tag in PHYSICAL_UNITS:
+            return Val(left.tag), None
+        if left.tag == right.tag == "int":
+            return Val("int"), None
+        return UNKNOWN, None
+    if isinstance(op, ast.Pow):
+        if left.tag == "int" and right.tag == "int":
+            return Val("int"), None
+        if left.tag in _NUMERIC and right.tag in _NUMERIC:
+            return Val("float"), None
+        return UNKNOWN, None
+    return UNKNOWN, None
+
+
+# -- inferred signatures (two-phase) -----------------------------------------
+
+
+@dataclass
+class Signature:
+    """Inferred interface of one function on the audited surface."""
+
+    rel: str
+    qualname: str
+    lineno: int
+    params: list[tuple[str, str | None]] = field(default_factory=list)
+    kwonly: dict[str, str | None] = field(default_factory=dict)
+    return_unit: str | None = None
+    return_units: list[tuple[str, int]] = field(default_factory=list)
+
+
+# (module rel, qualname) -> Signature, rebuilt by the prepare hook.
+SIGNATURES: dict[tuple[str, str], Signature] = {}
+
+# module rel -> {local alias -> ("mod", rel) | ("fn", rel, name)}
+_IMPORTS: dict[str, dict[str, tuple]] = {}
+
+_ARRAY_CTORS = {"zeros", "ones", "full", "empty", "asarray", "array",
+                "arange", "linspace", "fromiter", "zeros_like",
+                "ones_like", "full_like"}
+
+_PRESERVE_CALLS = {"abs", "float", "min", "max"}  # unit-preserving
+
+
+def _module_rel(modname: str) -> str | None:
+    """``repro.netsim.schedule`` -> ``src/repro/netsim/schedule.py``."""
+    if not modname.startswith("repro"):
+        return None
+    return "src/" + modname.replace(".", "/") + ".py"
+
+
+def _collect_imports(ctx: FileContext) -> dict[str, tuple]:
+    out: dict[str, tuple] = {}
+    tree = ctx.tree
+    if tree is None:
+        return out
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                rel = _module_rel(alias.name)
+                if rel is not None:
+                    out[alias.asname or alias.name.split(".")[0]] = \
+                        ("mod", rel)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            mod_rel = _module_rel(node.module)
+            if mod_rel is None:
+                continue
+            for alias in node.names:
+                sub_rel = _module_rel(f"{node.module}.{alias.name}")
+                name = alias.asname or alias.name
+                # ``from repro.netsim import schedule`` imports a module;
+                # ``from repro.netsim.schedule import demand_schedule`` a
+                # function — record both, the resolver checks which exists.
+                out[name] = ("fn_or_mod", mod_rel, alias.name, sub_rel)
+    return out
+
+
+def resolve_call(rel: str, func: ast.expr,
+                 class_name: str | None) -> Signature | None:
+    """Best-effort resolution of a call target to an inferred signature."""
+    imports = _IMPORTS.get(rel, {})
+    if isinstance(func, ast.Name):
+        sig = SIGNATURES.get((rel, func.id))
+        if sig is not None:
+            return sig
+        tgt = imports.get(func.id)
+        if tgt and tgt[0] == "fn_or_mod":
+            return SIGNATURES.get((tgt[1], tgt[2]))
+        return None
+    if isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name):
+        base = func.value.id
+        if base == "self" and class_name:
+            return SIGNATURES.get((rel, f"{class_name}.{func.attr}"))
+        tgt = imports.get(base)
+        if tgt is None:
+            return None
+        if tgt[0] == "mod":
+            return SIGNATURES.get((tgt[1], func.attr))
+        if tgt[0] == "fn_or_mod":
+            # base was itself a module import via ``from pkg import mod``
+            return SIGNATURES.get((tgt[3], func.attr))
+    return None
+
+
+# -- iteration-order classification (FLOAT-ACCUM) ----------------------------
+
+_ORDERED_ANNS = ("list", "tuple", "List", "Tuple")
+_OPAQUE_ANNS = ("Sequence", "Iterable", "Collection", "Iterator",
+                "set", "frozenset", "Set", "FrozenSet", "dict",
+                "Dict", "Mapping", "KeysView", "ValuesView", "ItemsView")
+
+
+def _ann_head(ann: ast.expr | None) -> str | None:
+    if ann is None:
+        return None
+    text = ast.unparse(ann)
+    return text.split("[", 1)[0].strip()
+
+
+class _OrderInfo:
+    """Per-function evidence about which names iterate in a known order."""
+
+    def __init__(self) -> None:
+        self.ordered: set[str] = set()  # locally-built lists/tuples/ranges
+        self.unordered: dict[str, str] = {}  # name -> hazard kind
+        self.opaque_params: dict[str, str] = {}  # param -> hazard kind
+
+
+def order_hazard(node: ast.expr, info: _OrderInfo) -> str | None:
+    """Why iterating ``node`` has no locally-evident order (or None)."""
+    if isinstance(node, ast.Set):
+        return "a set literal"
+    if isinstance(node, ast.SetComp):
+        return "a set comprehension"
+    if isinstance(node, (ast.List, ast.Tuple, ast.ListComp)):
+        return None
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name):
+            if f.id in ("set", "frozenset"):
+                return f"a {f.id}() result"
+            if f.id in ("sorted", "range", "list", "tuple", "reversed",
+                        "min", "max"):
+                return None
+            if f.id in ("enumerate", "zip"):
+                for a in node.args:
+                    h = order_hazard(a, info)
+                    if h is not None:
+                        return h
+                return None
+            return None  # unknown call: stay quiet
+        if isinstance(f, ast.Attribute):
+            if f.attr in ("keys", "values", "items"):
+                return f"a dict .{f.attr}() view"
+            return None
+        return None
+    if isinstance(node, ast.Name):
+        if node.id in info.unordered:
+            return info.unordered[node.id]
+        if node.id in info.ordered:
+            return None
+        if node.id in info.opaque_params:
+            return info.opaque_params[node.id]
+        return None  # unknown local: stay quiet
+    if isinstance(node, ast.Attribute):
+        return (f"attribute .{node.attr} (no local ordering evidence; "
+                f"materialize with sorted(...) or fold with math.fsum)")
+    if isinstance(node, ast.Subscript):
+        return order_hazard(node.value, info)
+    if isinstance(node, ast.GeneratorExp):
+        return order_hazard(node.generators[0].iter, info)
+    return None
+
+
+def _collect_order_info(fn: ast.AST) -> _OrderInfo:
+    """Scan one function (or module) body for ordering evidence."""
+    info = _OrderInfo()
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        args = (fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs)
+        for a in args:
+            if a.arg in ("self", "cls"):
+                continue
+            head = _ann_head(a.annotation)
+            if head in _ORDERED_ANNS:
+                info.ordered.add(a.arg)
+            elif head in _OPAQUE_ANNS or head is None:
+                info.opaque_params[a.arg] = (
+                    f"parameter {a.arg!r} with no ordering guarantee "
+                    f"(annotation {head or 'missing'})")
+    for node in _scope_stmts(fn):
+        targets: list[ast.expr] = []
+        value: ast.expr | None = None
+        ann: ast.expr | None = None
+        if isinstance(node, ast.Assign):
+            targets, value = list(node.targets), node.value
+        elif isinstance(node, ast.AnnAssign):
+            targets, value, ann = [node.target], node.value, node.annotation
+        else:
+            continue
+        for t in targets:
+            if not isinstance(t, ast.Name):
+                continue
+            head = _ann_head(ann)
+            if isinstance(value, (ast.List, ast.ListComp, ast.Tuple)):
+                info.ordered.add(t.id)
+            elif isinstance(value, ast.Call) and isinstance(
+                    value.func, ast.Name) and value.func.id in (
+                        "sorted", "list", "tuple", "range"):
+                info.ordered.add(t.id)
+            elif isinstance(value, (ast.Set, ast.SetComp)):
+                info.unordered[t.id] = f"set {t.id!r}"
+            elif isinstance(value, ast.Call) and isinstance(
+                    value.func, ast.Name) and value.func.id in (
+                        "set", "frozenset"):
+                info.unordered[t.id] = f"set {t.id!r}"
+            elif isinstance(value, (ast.Dict, ast.DictComp)):
+                info.unordered[t.id] = f"dict {t.id!r}"
+            elif head in _ORDERED_ANNS:
+                info.ordered.add(t.id)
+            elif head in ("set", "frozenset", "Set", "FrozenSet"):
+                info.unordered[t.id] = f"set {t.id!r}"
+            elif head in ("dict", "Dict", "Mapping"):
+                info.unordered[t.id] = f"dict {t.id!r}"
+    return info
+
+
+def _scope_stmts(scope: ast.AST):
+    """Child statements of ``scope`` without entering nested scopes."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# -- the per-function dataflow pass ------------------------------------------
+
+
+@dataclass
+class RawFinding:
+    kind: str  # "flow" | "return" | "accum"
+    line: int
+    col: int
+    message: str
+    provenance: str
+    #: For FLOAT-ACCUM sites whose hazard is a locally-evident set or
+    #: dict view, the iterable expression a ``sorted(...)`` wrap fixes.
+    wrap_node: ast.expr | None = None
+
+
+#: unit -> the canonical name suffix the fixer renames to
+UNIT_SUFFIX = {
+    "bytes": "bytes", "s": "s", "ms": "ms", "us": "us",
+    "cycles": "cycles", "bytes/s": "bps", "frac": "frac",
+    "packets": "pkts", "hops": "hops", "1/s": "hz",
+}
+
+
+def _wrappable(node: ast.expr, info: _OrderInfo) -> bool:
+    """True when ``sorted(node)`` is a syntactically safe autofix: the
+    hazard is a locally-evident set or dict view (attributes and opaque
+    parameters are *not* auto-wrapped — sorting an arbitrary iterable of
+    unknown element type is not conservatively safe)."""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in ("set", "frozenset"):
+            return True
+        if isinstance(f, ast.Attribute) and f.attr in (
+                "keys", "values", "items"):
+            return True
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in info.unordered
+    if isinstance(node, ast.GeneratorExp):
+        return _wrappable(node.generators[0].iter, info)
+    return False
+
+
+def _is_bare_suffixed(node: ast.expr) -> bool:
+    """True when v1's UNIT-MIX/UNIT-ASSIGN already see this operand."""
+    if isinstance(node, ast.Name):
+        return unit_of_name(node.id) is not None
+    if isinstance(node, ast.Attribute):
+        return unit_of_name(node.attr) is not None
+    return False
+
+
+class _FnInfer:
+    """One forward pass over a function body, tracking Val per local."""
+
+    def __init__(self, ctx_rel: str, fn: ast.AST,
+                 module_env: dict[str, Val],
+                 class_name: str | None = None,
+                 resolve_calls: bool = True) -> None:
+        self.rel = ctx_rel
+        self.fn = fn
+        self.class_name = class_name
+        self.resolve_calls = resolve_calls
+        self.env: dict[str, Val] = dict(module_env)
+        self.findings: list[RawFinding] = []
+        self.returns: list[tuple[Val, int]] = []
+        self.order_info = _collect_order_info(fn)
+        self.hazard_stack: list[tuple[str, int, ast.expr]] = []
+        # local name -> every inferred tag assigned to it (fixer input)
+        self.local_units: dict[str, set[str | None]] = {}
+        self._reported: set[tuple[int, int, str]] = set()
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = (fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs)
+            for a in args:
+                v = _suffix_val(a.arg, "parameter")
+                if v is not None:
+                    self.env[a.arg] = v
+                else:
+                    head = _ann_head(a.annotation)
+                    if head in ("int",):
+                        self.env[a.arg] = Val("int")
+                    elif head in ("float",):
+                        self.env[a.arg] = Val("float")
+
+    # -- expression inference ------------------------------------------------
+
+    def infer(self, node: ast.expr | None) -> Val:
+        if node is None:
+            return UNKNOWN
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, bool):
+                return Val("bool")
+            if isinstance(node.value, int):
+                return Val("int")
+            if isinstance(node.value, float):
+                return Val("float")
+            if isinstance(node.value, str):
+                return Val("str")
+            return UNKNOWN
+        if isinstance(node, ast.Name):
+            if node.id in self.env:
+                return self.env[node.id]
+            return _suffix_val(node.id, "name") or UNKNOWN
+        if isinstance(node, ast.Attribute):
+            self.infer(node.value)
+            return _suffix_val(node.attr, "attribute") or UNKNOWN
+        if isinstance(node, ast.BinOp):
+            left, right = self.infer(node.left), self.infer(node.right)
+            out, conflict = binop_units(node.op, left, right)
+            if conflict is not None and not (
+                    _is_bare_suffixed(node.left)
+                    and _is_bare_suffixed(node.right)):
+                self._report(
+                    "flow", node.lineno, node.col_offset,
+                    f"inferred unit conflict: {conflict}",
+                    self._prov(node.left, left) + "; "
+                    + self._prov(node.right, right))
+            return out
+        if isinstance(node, ast.UnaryOp):
+            return self.infer(node.operand)
+        if isinstance(node, ast.BoolOp):
+            vals = [self.infer(v) for v in node.values]
+            return self._join(vals)
+        if isinstance(node, ast.IfExp):
+            self.infer(node.test)
+            return self._join([self.infer(node.body),
+                               self.infer(node.orelse)])
+        if isinstance(node, ast.Compare):
+            vals = [self.infer(v) for v in [node.left, *node.comparators]]
+            operands = [node.left, *node.comparators]
+            for (a, va), (b, vb) in zip(zip(operands, vals),
+                                        zip(operands[1:], vals[1:])):
+                if (va.physical and vb.physical and va.tag != vb.tag
+                        and not (_is_bare_suffixed(a)
+                                 and _is_bare_suffixed(b))):
+                    self._report(
+                        "flow", node.lineno, node.col_offset,
+                        f"compares [{va.tag}] with [{vb.tag}]",
+                        self._prov(a, va) + "; " + self._prov(b, vb))
+            return Val("bool")
+        if isinstance(node, ast.Call):
+            return self._infer_call(node)
+        if isinstance(node, ast.Subscript):
+            base = self.infer(node.value)
+            if isinstance(node.slice, ast.Slice):
+                return base if base.tag in ("list", "tuple", "array",
+                                            "str") else UNKNOWN
+            if base.tag == "array":
+                return UNKNOWN
+            return UNKNOWN
+        if isinstance(node, (ast.List, ast.ListComp)):
+            self._walk_comp(node)
+            return Val("list")
+        if isinstance(node, ast.Tuple):
+            for e in node.elts:
+                self.infer(e)
+            return Val("tuple")
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            self._walk_comp(node)
+            return Val("set")
+        if isinstance(node, (ast.Dict, ast.DictComp)):
+            self._walk_comp(node)
+            return Val("dict")
+        if isinstance(node, ast.GeneratorExp):
+            self._walk_comp(node)
+            return Val("gen")
+        if isinstance(node, ast.JoinedStr):
+            return Val("str")
+        if isinstance(node, ast.Lambda):
+            return UNKNOWN
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.infer(child)
+        return UNKNOWN
+
+    def _walk_comp(self, node: ast.expr) -> None:
+        """Infer inside comprehensions (targets bound unknown)."""
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            for gen in node.generators:
+                self.infer(gen.iter)
+                self._bind_target(gen.target, UNKNOWN)
+                for cond in gen.ifs:
+                    self.infer(cond)
+            if isinstance(node, ast.DictComp):
+                self.infer(node.key)
+                self.infer(node.value)
+            else:
+                self.infer(node.elt)
+        elif isinstance(node, (ast.List, ast.Set)):
+            for e in node.elts:
+                self.infer(e)
+        elif isinstance(node, ast.Dict):
+            for k, v in zip(node.keys, node.values):
+                if k is not None:
+                    self.infer(k)
+                self.infer(v)
+
+    def _comp_elt_val(self, node: ast.expr) -> Val:
+        """Element value of a generator/comprehension argument."""
+        if isinstance(node, (ast.GeneratorExp, ast.ListComp, ast.SetComp)):
+            for gen in node.generators:
+                self._bind_target(gen.target, UNKNOWN)
+            return self.infer(node.elt)
+        return UNKNOWN
+
+    def _infer_call(self, node: ast.Call) -> Val:
+        func = node.func
+        for kw in node.keywords:
+            self.infer(kw.value)
+        # builtin shortcuts
+        if isinstance(func, ast.Name):
+            argv = [self.infer(a) for a in node.args]
+            if func.id == "len":
+                return Val("int")
+            if func.id in ("int", "round") and len(node.args) == 1:
+                return Val("int")
+            if func.id in _PRESERVE_CALLS and node.args:
+                inner = argv[0]
+                if func.id in ("min", "max") and len(node.args) > 1:
+                    inner = self._join(argv)
+                if inner.physical:
+                    return Val(inner.tag,
+                               f"{func.id}() preserves [{inner.tag}]")
+                return Val("float") if func.id == "float" else inner
+            if func.id == "sum" and node.args:
+                self._check_sum_order(node, remedy_free=False)
+                elt = self._comp_elt_val(node.args[0])
+                if elt.physical:
+                    return Val(elt.tag, f"sum over [{elt.tag}] elements")
+                if elt.tag in ("int", "bool"):
+                    return Val("int")
+                return Val("float") if elt.tag == "float" else UNKNOWN
+            if func.id == "sorted":
+                for a in node.args:
+                    self.infer(a)
+                return Val("list")
+            if func.id in ("list", "tuple", "set", "frozenset", "dict"):
+                for a in node.args:
+                    self.infer(a)
+                return Val({"list": "list", "tuple": "tuple",
+                            "set": "set", "frozenset": "set",
+                            "dict": "dict"}[func.id])
+            sig = resolve_call(self.rel, func, self.class_name) \
+                if self.resolve_calls else None
+            if sig is not None:
+                self._check_call_site(node, sig, argv)
+                if sig.return_unit is not None:
+                    return Val(sig.return_unit,
+                               f"returned by {sig.qualname}() "
+                               f"[{sig.return_unit}]")
+            return UNKNOWN
+        if isinstance(func, ast.Attribute):
+            argv = [self.infer(a) for a in node.args]
+            base = func.value
+            if isinstance(base, ast.Name) and base.id in ("np", "numpy"):
+                if func.attr in _ARRAY_CTORS:
+                    return Val("array")
+                return UNKNOWN
+            if isinstance(base, ast.Name) and base.id == "math":
+                if func.attr == "fsum" and node.args:
+                    # the FLOAT-ACCUM remedy: order-independent
+                    elt = self._comp_elt_val(node.args[0])
+                    if elt.physical:
+                        return Val(elt.tag)
+                    return Val("float")
+            self.infer(base)
+            sig = resolve_call(self.rel, func, self.class_name) \
+                if self.resolve_calls else None
+            if sig is not None:
+                self._check_call_site(node, sig, argv)
+                if sig.return_unit is not None:
+                    return Val(sig.return_unit,
+                               f"returned by {sig.qualname}() "
+                               f"[{sig.return_unit}]")
+            return UNKNOWN
+        self.infer(func)
+        for a in node.args:
+            self.infer(a)
+        return UNKNOWN
+
+    def _check_call_site(self, node: ast.Call, sig: Signature,
+                         argv: list[Val]) -> None:
+        """Positional/keyword unit conflicts against an inferred sig."""
+        params = sig.params
+        if params and params[0][0] in ("self", "cls"):
+            params = params[1:]
+        for (pname, punit), arg_node, v in zip(params, node.args, argv):
+            if punit is None or not v.physical or punit == v.tag:
+                continue
+            if punit in _TIME_FAMILY and v.tag in _TIME_FAMILY:
+                continue
+            self._report(
+                "flow", arg_node.lineno, arg_node.col_offset,
+                f"argument for {sig.qualname}({pname}=...) [{punit}] "
+                f"gets [{v.tag}]",
+                self._prov(arg_node, v)
+                + f"; signature inferred from {sig.rel}:{sig.lineno}")
+        named = dict(params) | sig.kwonly
+        for kw in node.keywords:
+            if kw.arg is None or _is_bare_suffixed(kw.value):
+                continue  # bare suffixed names are UNIT-ASSIGN's job
+            punit = named.get(kw.arg)
+            v = self.infer(kw.value)
+            if punit is None or not v.physical or punit == v.tag:
+                continue
+            if punit in _TIME_FAMILY and v.tag in _TIME_FAMILY:
+                continue
+            self._report(
+                "flow", kw.value.lineno, kw.value.col_offset,
+                f"keyword {sig.qualname}({kw.arg}=...) [{punit}] "
+                f"gets [{v.tag}]",
+                self._prov(kw.value, v)
+                + f"; signature inferred from {sig.rel}:{sig.lineno}")
+
+    def _check_sum_order(self, node: ast.Call, remedy_free: bool) -> None:
+        """FLOAT-ACCUM for ``sum(...)`` over an order-hazardous iterable."""
+        if remedy_free or not node.args:
+            return
+        arg = node.args[0]
+        if isinstance(arg, (ast.GeneratorExp, ast.ListComp, ast.SetComp)):
+            hazard, hazard_iter = None, None
+            for gen in arg.generators:
+                hazard = order_hazard(gen.iter, self.order_info)
+                if hazard:
+                    hazard_iter = gen.iter
+                    break
+            elt = self._comp_elt_val(arg)
+            if hazard and elt.tag not in ("int", "bool"):
+                self._report(
+                    "accum", node.lineno, node.col_offset,
+                    f"sum() folds floats over {hazard}; use math.fsum "
+                    f"or sorted(...)",
+                    f"element inferred [{elt.tag or 'unknown'}]",
+                    wrap_node=hazard_iter if hazard_iter is not None
+                    and _wrappable(hazard_iter, self.order_info) else None)
+        else:
+            hazard = order_hazard(arg, self.order_info)
+            if hazard:
+                self._report(
+                    "accum", node.lineno, node.col_offset,
+                    f"sum() folds floats over {hazard}; use math.fsum "
+                    f"or sorted(...)", "element order unspecified",
+                    wrap_node=arg
+                    if _wrappable(arg, self.order_info) else None)
+
+    # -- statements ----------------------------------------------------------
+
+    def run(self) -> None:
+        body = getattr(self.fn, "body", [])
+        self.exec_stmts(body)
+
+    def exec_stmts(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self.exec_stmt(stmt)
+
+    def exec_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested scopes analyzed separately
+        if isinstance(stmt, ast.Assign):
+            v = self.infer(stmt.value)
+            for t in stmt.targets:
+                self._assign(t, stmt.value, v, stmt)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                v = self.infer(stmt.value)
+                self._assign(stmt.target, stmt.value, v, stmt)
+            elif isinstance(stmt.target, ast.Name):
+                head = _ann_head(stmt.annotation)
+                if head in ("int", "float"):
+                    self.env[stmt.target.id] = Val(head)
+                elif head in _ORDERED_ANNS:
+                    self.env[stmt.target.id] = Val("list")
+        elif isinstance(stmt, ast.AugAssign):
+            self._aug_assign(stmt)
+        elif isinstance(stmt, ast.Return):
+            v = self.infer(stmt.value)
+            if stmt.value is not None:
+                self.returns.append((v, stmt.lineno))
+        elif isinstance(stmt, ast.For):
+            hazard = order_hazard(stmt.iter, self.order_info)
+            self.infer(stmt.iter)
+            self._bind_loop_target(stmt.target, stmt.iter)
+            if hazard:
+                self.hazard_stack.append((hazard, stmt.lineno, stmt.iter))
+            self.exec_stmts(stmt.body)
+            if hazard:
+                self.hazard_stack.pop()
+            self.exec_stmts(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            self.infer(stmt.test)
+            self.exec_stmts(stmt.body)
+            self.exec_stmts(stmt.orelse)
+        elif isinstance(stmt, ast.If):
+            self.infer(stmt.test)
+            self.exec_stmts(stmt.body)
+            self.exec_stmts(stmt.orelse)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self.infer(item.context_expr)
+            self.exec_stmts(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.exec_stmts(stmt.body)
+            for h in stmt.handlers:
+                self.exec_stmts(h.body)
+            self.exec_stmts(stmt.orelse)
+            self.exec_stmts(stmt.finalbody)
+        elif isinstance(stmt, ast.Expr):
+            self.infer(stmt.value)
+        elif isinstance(stmt, (ast.Assert,)):
+            self.infer(stmt.test)
+        elif isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                self.infer(stmt.exc)
+
+    def _assign(self, target: ast.expr, value: ast.expr, v: Val,
+                stmt: ast.stmt) -> None:
+        if isinstance(target, ast.Name):
+            tu = unit_of_name(target.id)
+            if (tu is not None and v.physical and v.tag != tu
+                    and not _is_bare_suffixed(value)
+                    and not (tu in _TIME_FAMILY and v.tag in _TIME_FAMILY)):
+                self._report(
+                    "flow", stmt.lineno, stmt.col_offset,
+                    f"assigns inferred [{v.tag}] to {target.id} [{tu}]",
+                    self._prov(value, v))
+            self.env[target.id] = Val(tu) if tu is not None else v
+            if tu is None:
+                self.local_units.setdefault(target.id, set()).add(v.tag)
+        elif isinstance(target, ast.Attribute):
+            tu = unit_of_name(target.attr)
+            if (tu is not None and v.physical and v.tag != tu
+                    and not _is_bare_suffixed(value)
+                    and not (tu in _TIME_FAMILY and v.tag in _TIME_FAMILY)):
+                self._report(
+                    "flow", stmt.lineno, stmt.col_offset,
+                    f"assigns inferred [{v.tag}] to .{target.attr} [{tu}]",
+                    self._prov(value, v))
+        elif isinstance(target, ast.Tuple):
+            for el in target.elts:
+                self._bind_target(el, UNKNOWN)
+
+    def _aug_assign(self, stmt: ast.AugAssign) -> None:
+        v = self.infer(stmt.value)
+        if isinstance(stmt.target, ast.Name):
+            name = stmt.target.id
+            cur = self.env.get(name) or _suffix_val(name, "name") or UNKNOWN
+            out, conflict = binop_units(stmt.op, cur, v)
+            if (conflict is not None
+                    and isinstance(stmt.op, (ast.Add, ast.Sub))
+                    and not (_is_bare_suffixed(stmt.target)
+                             and _is_bare_suffixed(stmt.value))):
+                self._report(
+                    "flow", stmt.lineno, stmt.col_offset,
+                    f"augmented assignment {conflict}",
+                    self._prov(stmt.target, cur) + "; "
+                    + self._prov(stmt.value, v))
+            if (isinstance(stmt.op, (ast.Add, ast.Sub))
+                    and self.hazard_stack and cur.floatish):
+                hazard, loop_line, iter_node = self.hazard_stack[-1]
+                self._report(
+                    "accum", stmt.lineno, stmt.col_offset,
+                    f"order-sensitive float accumulation into {name!r} "
+                    f"inside the loop at line {loop_line} over {hazard}; "
+                    f"fold with math.fsum or iterate sorted(...)",
+                    f"accumulator inferred [{cur.tag}]",
+                    wrap_node=iter_node
+                    if _wrappable(iter_node, self.order_info) else None)
+            if unit_of_name(name) is None:
+                self.env[name] = out
+                self.local_units.setdefault(name, set()).add(out.tag)
+        else:
+            self.infer(stmt.target)
+
+    def _bind_target(self, target: ast.expr, v: Val) -> None:
+        if isinstance(target, ast.Name):
+            if unit_of_name(target.id) is None:
+                self.env[target.id] = v
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind_target(el, UNKNOWN)
+
+    def _bind_loop_target(self, target: ast.expr, it: ast.expr) -> None:
+        v = UNKNOWN
+        if (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+                and it.func.id == "range"):
+            v = Val("int")
+        self._bind_target(target, v)
+
+    # -- plumbing ------------------------------------------------------------
+
+    def _join(self, vals: list[Val]) -> Val:
+        tags = {v.tag for v in vals}
+        if len(tags) == 1:
+            return vals[0]
+        if tags <= _NUMERIC:
+            return Val("float")
+        return UNKNOWN
+
+    def _prov(self, node: ast.expr, v: Val) -> str:
+        try:
+            text = ast.unparse(node)
+        except Exception:  # pragma: no cover - unparse is total on exprs
+            text = "<expr>"
+        if len(text) > 40:
+            text = text[:37] + "..."
+        why = f" ({v.why})" if v.why else ""
+        return f"`{text}` inferred [{v.tag or 'unknown'}]{why}"
+
+    def _report(self, kind: str, line: int, col: int, message: str,
+                provenance: str,
+                wrap_node: ast.expr | None = None) -> None:
+        key = (line, col, kind)
+        if key in self._reported:
+            return
+        self._reported.add(key)
+        self.findings.append(RawFinding(kind=kind, line=line, col=col,
+                                        message=message,
+                                        provenance=provenance,
+                                        wrap_node=wrap_node))
+
+
+# -- per-module analysis -----------------------------------------------------
+
+
+def _module_env(tree: ast.Module) -> dict[str, Val]:
+    env: dict[str, Val] = {}
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            name = stmt.targets[0].id
+            v = _suffix_val(name, "constant")
+            if v is not None:
+                env[name] = v
+    return env
+
+
+def _iter_functions(tree: ast.Module):
+    """Yield (qualname, class_name, node) for every function."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node.name, None, node
+            for sub in ast.walk(node):
+                if sub is not node and isinstance(
+                        sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield f"{node.name}.<locals>.{sub.name}", None, sub
+        elif isinstance(node, ast.ClassDef):
+            for stmt in node.body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield f"{node.name}.{stmt.name}", node.name, stmt
+
+
+def _signature_of(rel: str, qualname: str, class_name: str | None,
+                  fn: ast.FunctionDef, module_env: dict[str, Val],
+                  resolve_calls: bool) -> Signature:
+    sig = Signature(rel=rel, qualname=qualname, lineno=fn.lineno)
+    args = fn.args.posonlyargs + fn.args.args
+    for a in args:
+        sig.params.append((a.arg, unit_of_name(a.arg)))
+    for a in fn.args.kwonlyargs:
+        sig.kwonly[a.arg] = unit_of_name(a.arg)
+    inf = _FnInfer(rel, fn, module_env, class_name=class_name,
+                   resolve_calls=resolve_calls)
+    inf.run()
+    units = []
+    for v, line in inf.returns:
+        if v.physical:
+            units.append((v.tag, line))
+    sig.return_units = units
+    distinct = {u for u, _ in units}
+    if len(distinct) == 1 and len(units) == len(inf.returns):
+        sig.return_unit = units[0][0]
+    return sig
+
+
+def _analyze(ctx: FileContext) -> list[RawFinding]:
+    """Full dataflow over one file; cached on the context object."""
+    cached = getattr(ctx, "_dataflow_findings", None)
+    if cached is not None:
+        return cached
+    findings: list[RawFinding] = []
+    tree = ctx.tree
+    if tree is None or not isinstance(tree, ast.Module):
+        ctx._dataflow_findings = findings  # type: ignore[attr-defined]
+        return findings
+    module_env = _module_env(tree)
+    for qualname, class_name, fn in _iter_functions(tree):
+        inf = _FnInfer(ctx.rel, fn, module_env, class_name=class_name)
+        inf.run()
+        findings.extend(inf.findings)
+        distinct: dict[str, int] = {}
+        for v, line in inf.returns:
+            if v.physical and v.tag not in distinct:
+                distinct[v.tag] = line
+        if len(distinct) > 1:
+            units = ", ".join(f"[{u}] at line {ln}"
+                              for u, ln in sorted(distinct.items()))
+            findings.append(RawFinding(
+                kind="return", line=fn.lineno, col=fn.col_offset,
+                message=f"function {qualname!r} returns conflicting "
+                        f"inferred units: {units}",
+                provenance=f"{len(inf.returns)} return statement(s) "
+                           f"analyzed"))
+    ctx._dataflow_findings = findings  # type: ignore[attr-defined]
+    return findings
+
+
+# -- prepare hook: two-phase signature collection ----------------------------
+
+
+def _prepare_signatures(contexts: list[FileContext]) -> None:
+    """Phase 1: infer signatures for every function on the audited
+    surface (two rounds so one level of call chaining resolves), and
+    reset the per-file analysis cache."""
+    SIGNATURES.clear()
+    _IMPORTS.clear()
+    for ctx in contexts:
+        if hasattr(ctx, "_dataflow_findings"):
+            del ctx._dataflow_findings
+        _IMPORTS[ctx.rel] = _collect_imports(ctx)
+    for resolve_calls in (False, True):
+        for ctx in contexts:
+            tree = ctx.tree
+            if tree is None or not isinstance(tree, ast.Module):
+                continue
+            module_env = _module_env(tree)
+            for qualname, class_name, fn in _iter_functions(tree):
+                SIGNATURES[(ctx.rel, qualname)] = _signature_of(
+                    ctx.rel, qualname, class_name, fn, module_env,
+                    resolve_calls=resolve_calls)
+
+
+def n_inferred_signatures() -> int:
+    """Signatures collected by the last prepare (report v2 metadata)."""
+    return len(SIGNATURES)
+
+
+# -- the rules ---------------------------------------------------------------
+
+
+@register_rule(
+    "UNIT-FLOW", "units",
+    "dataflow-inferred unit conflict: arithmetic, assignment or call "
+    "argument where propagated units disagree (bytes/s/cycles/bps/frac)",
+    scope=config.UNIT_SCOPE, prepare=_prepare_signatures)
+def check_unit_flow(ctx: FileContext) -> Iterator[tuple]:
+    for f in _analyze(ctx):
+        if f.kind == "flow":
+            yield (f.line, f.col, f.message, f.provenance)
+
+
+@register_rule(
+    "UNIT-RETURN", "units",
+    "function whose return statements infer conflicting physical units "
+    "across branches",
+    scope=config.UNIT_SCOPE)
+def check_unit_return(ctx: FileContext) -> Iterator[tuple]:
+    for f in _analyze(ctx):
+        if f.kind == "return":
+            yield (f.line, f.col, f.message, f.provenance)
+
+
+@register_rule(
+    "FLOAT-ACCUM", "numerics",
+    "order-sensitive float accumulation (+= or sum()) over an iterable "
+    "with no local ordering guarantee; use math.fsum or sorted(...)",
+    scope=config.FLOAT_SCOPE)
+def check_float_accum(ctx: FileContext) -> Iterator[tuple]:
+    for f in _analyze(ctx):
+        if f.kind == "accum":
+            yield (f.line, f.col, f.message, f.provenance)
+
+
+def raw_findings(ctx: FileContext) -> list[RawFinding]:
+    """The dataflow facts for one file (fixer entry point)."""
+    return _analyze(ctx)
+
+
+def function_inferences(ctx: FileContext):
+    """Yield ``(qualname, fn, infer)`` per function with the dataflow
+    pass already run — the fixer reads ``infer.local_units`` to propose
+    suffix renames."""
+    tree = ctx.tree
+    if tree is None or not isinstance(tree, ast.Module):
+        return
+    module_env = _module_env(tree)
+    for qualname, class_name, fn in _iter_functions(tree):
+        inf = _FnInfer(ctx.rel, fn, module_env, class_name=class_name)
+        inf.run()
+        yield qualname, fn, inf

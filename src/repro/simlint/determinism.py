@@ -149,12 +149,10 @@ def _prepare_set_attrs(contexts: list[FileContext]) -> None:
         _SET_ATTRS.update(attrs)
 
 
-@register_rule(
-    "SET-ITER", "determinism",
-    "iteration over a set without an explicit ordering; wrap the "
-    "iterable in sorted(...) so results cannot depend on hash order",
-    scope=config.SIM_SCOPE, prepare=_prepare_set_attrs)
-def check_set_iter(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+def iter_set_sites(ctx: FileContext) -> Iterator[tuple[ast.expr, str, str]]:
+    """Yield ``(iter_node, kind, where)`` for every unordered set
+    iteration — shared by the SET-ITER check and the ``--fix`` rewriter
+    (which wraps ``iter_node``'s span in ``sorted(...)``)."""
     tree = ctx.tree
     if tree is None:
         return
@@ -188,9 +186,7 @@ def check_set_iter(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
         if key in seen:
             return
         seen.add(key)
-        yield (iter_node.lineno, iter_node.col_offset,
-               f"{where} iterates {kind} without an explicit ordering; "
-               f"wrap in sorted(...)")
+        yield (iter_node, kind, where)
 
     for node in ast.walk(tree):
         if isinstance(node, ast.For):
@@ -207,6 +203,18 @@ def check_set_iter(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
               and node.func.id in ("list", "tuple") and node.args):
             # list(s)/tuple(s) freeze the nondeterministic order
             yield from flag(node.args[0], f"{node.func.id}() call")
+
+
+@register_rule(
+    "SET-ITER", "determinism",
+    "iteration over a set without an explicit ordering; wrap the "
+    "iterable in sorted(...) so results cannot depend on hash order",
+    scope=config.SIM_SCOPE, prepare=_prepare_set_attrs)
+def check_set_iter(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    for node, kind, where in iter_set_sites(ctx):
+        yield (node.lineno, node.col_offset,
+               f"{where} iterates {kind} without an explicit ordering; "
+               f"wrap in sorted(...)")
 
 
 # -- UNSEEDED-RNG ------------------------------------------------------------

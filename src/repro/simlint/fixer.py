@@ -1,0 +1,318 @@
+"""Conservative autofixes for simlint findings (``--fix``).
+
+libcst-free by design: fix sites come from the same shared AST the
+rules use (exact spans via ``lineno``/``col_offset`` and their ``end_``
+twins), and fixes are applied as raw byte splices, last-to-first, so
+earlier offsets stay valid and every untouched byte — comments,
+formatting, string quoting — survives verbatim.  Two fix classes only,
+each chosen so the rewrite is behavior-preserving on the sites the
+rules flag and convergent (``--fix`` twice == ``--fix`` once):
+
+* **sorted-wrap** — the iterable of a flagged ``SET-ITER`` site, or of
+  a ``FLOAT-ACCUM`` site whose hazard is a locally-evident set or dict
+  view, is wrapped in ``sorted(...)``.  Attributes and order-opaque
+  parameters are *never* auto-wrapped (no local evidence that sorting
+  is meaningful there) — those sites keep firing until a human picks
+  ``math.fsum``, ``sorted(...)`` or a suppression.
+* **suffix-rename** — a function-local whose stem is quantity-shaped
+  (``size``/``rate``/``dt``/...) and whose every assignment infers the
+  *same* physical unit is renamed to ``<name>_<suffix>``.  The rename
+  is skipped unless it is provably safe: the name is not a parameter,
+  not declared ``global``/``nonlocal``, not referenced in any nested
+  scope, the new name is unused in the function, and the function does
+  not call ``locals``/``globals``/``vars``/``eval``/``exec``.
+
+Suppressed sites (``# simlint: ignore[...]``) and allowlisted files are
+left alone — a recorded human judgement outranks the autofixer.  Every
+rewritten file is re-parsed before it is accepted; a fix that does not
+round-trip through ``ast.parse`` is discarded wholesale.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable
+
+from repro.simlint import config
+from repro.simlint.dataflow import (
+    PHYSICAL_UNITS,
+    UNIT_SUFFIX,
+    function_inferences,
+    raw_findings,
+)
+from repro.simlint.determinism import iter_set_sites
+from repro.simlint.framework import (
+    FileContext,
+    RULES,
+    _collect_files,
+    _relpath,
+)
+from repro.simlint.units import _ambiguous
+
+# Functions that reflect over the local namespace; renames inside them
+# could be observable, so the fixer refuses.
+_REFLECTION = {"locals", "globals", "vars", "eval", "exec"}
+
+
+@dataclass
+class FilePlan:
+    """Planned rewrite of one file."""
+
+    rel: str
+    new_text: str
+    n_wraps: int = 0
+    n_renames: int = 0
+    renames: list[tuple[str, str, str]] = field(default_factory=list)
+    # (qualname, old, new) for the report
+
+
+@dataclass
+class FixResult:
+    """Outcome of one ``--fix`` (or ``--fix --check``) run."""
+
+    plans: list[FilePlan]
+    files_scanned: int = 0
+
+    @property
+    def n_wraps(self) -> int:
+        return sum(p.n_wraps for p in self.plans)
+
+    @property
+    def n_renames(self) -> int:
+        return sum(p.n_renames for p in self.plans)
+
+    @property
+    def changed(self) -> dict[str, str]:
+        return {p.rel: p.new_text for p in self.plans}
+
+
+# -- span arithmetic ---------------------------------------------------------
+
+
+def _line_starts(data: bytes) -> list[int]:
+    starts = [0]
+    for i, b in enumerate(data):
+        if b == 0x0A:
+            starts.append(i + 1)
+    return starts
+
+
+def _offset(starts: list[int], line: int, col: int) -> int:
+    """Byte offset of (1-based line, ast byte col)."""
+    return starts[line - 1] + col
+
+
+def _node_span(starts: list[int],
+               node: ast.AST) -> tuple[int, int] | None:
+    if getattr(node, "end_lineno", None) is None:
+        return None
+    return (_offset(starts, node.lineno, node.col_offset),
+            _offset(starts, node.end_lineno, node.end_col_offset))
+
+
+def _apply(data: bytes,
+           splices: list[tuple[int, int, bytes]]) -> bytes:
+    """Apply (start, end, replacement) byte splices, last-to-first.
+    Ties on start are broken by larger end first, so a replacement at a
+    position is spliced before an insertion at the same position (the
+    insertion then lands *before* the replaced text — exactly what a
+    ``sorted(`` wrap around a renamed name needs)."""
+    out = data
+    for start, end, new in sorted(splices,
+                                  key=lambda s: (s[0], s[1]),
+                                  reverse=True):
+        out = out[:start] + new + out[end:]
+    return out
+
+
+# -- fix planning ------------------------------------------------------------
+
+
+def _wrap_spans(ctx: FileContext,
+                starts: list[int]) -> list[tuple[int, int]]:
+    """Byte spans to wrap in ``sorted(...)``: SET-ITER sites plus
+    FLOAT-ACCUM sites with a locally-evident set/dict-view hazard."""
+    spans: list[tuple[int, int]] = []
+    seen: set[tuple[int, int]] = set()
+
+    def add(node: ast.expr) -> None:
+        span = _node_span(starts, node)
+        if span is not None and span not in seen:
+            seen.add(span)
+            spans.append(span)
+
+    rule = RULES.get("SET-ITER")
+    if (rule is not None and rule.applies_to(ctx)
+            and config.allowlisted("SET-ITER", ctx.rel) is None):
+        for node, _kind, _where in iter_set_sites(ctx):
+            if not ctx.is_suppressed("SET-ITER", node.lineno):
+                add(node)
+
+    rule = RULES.get("FLOAT-ACCUM")
+    if (rule is not None and rule.applies_to(ctx)
+            and config.allowlisted("FLOAT-ACCUM", ctx.rel) is None):
+        for f in raw_findings(ctx):
+            if (f.kind == "accum" and f.wrap_node is not None
+                    and not ctx.is_suppressed("FLOAT-ACCUM", f.line)):
+                add(f.wrap_node)
+    return spans
+
+
+def _scope_names(node: ast.AST) -> set[str]:
+    """Every identifier mentioned anywhere under ``node``."""
+    out: set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            out.add(sub.id)
+        elif isinstance(sub, ast.arg):
+            out.add(sub.arg)
+        elif isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+            out.add(sub.name)
+    return out
+
+
+def _rename_candidates(ctx: FileContext) -> list[
+        tuple[str, ast.AST, str, str]]:
+    """(qualname, fn, old, new) renames that are provably safe."""
+    out: list[tuple[str, ast.AST, str, str]] = []
+    for qualname, fn, inf in function_inferences(ctx):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)}
+        declared: set[str] = set()
+        reflective = False
+        nested_names: set[str] = set()
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.Global, ast.Nonlocal)):
+                declared.update(sub.names)
+            elif (isinstance(sub, ast.Call)
+                  and isinstance(sub.func, ast.Name)
+                  and sub.func.id in _REFLECTION):
+                reflective = True
+            elif sub is not fn and isinstance(
+                    sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda, ast.ClassDef)):
+                nested_names |= _scope_names(sub)
+        if reflective:
+            continue
+        all_names = _scope_names(fn)
+        for name, tags in sorted(inf.local_units.items()):
+            if name in params or name in declared or name in nested_names:
+                continue
+            if not _ambiguous(name):
+                continue
+            if len(tags) != 1:
+                continue
+            (unit,) = tags
+            if unit not in PHYSICAL_UNITS or unit not in UNIT_SUFFIX:
+                continue
+            new = f"{name}_{UNIT_SUFFIX[unit]}"
+            if new in all_names:
+                continue
+            out.append((qualname, fn, name, new))
+    return out
+
+
+def _rename_spans(starts: list[int], fn: ast.AST, old: str,
+                  new: str) -> list[tuple[int, int, bytes]]:
+    """Replacement splices for every ``old`` Name node in ``fn`` (nested
+    scopes were already ruled out by the candidate filter)."""
+    splices: list[tuple[int, int, bytes]] = []
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Name) and sub.id == old:
+            span = _node_span(starts, sub)
+            if span is not None:
+                splices.append((span[0], span[1], new.encode("utf-8")))
+    return splices
+
+
+def plan_file(ctx: FileContext) -> FilePlan | None:
+    """The full rewrite of one file, or ``None`` when nothing to fix."""
+    if not ctx.is_python or ctx.tree is None:
+        return None
+    data = ctx.text.encode("utf-8")
+    starts = _line_starts(data)
+    splices: list[tuple[int, int, bytes]] = []
+
+    wraps = _wrap_spans(ctx, starts)
+    for start, end in wraps:
+        splices.append((start, start, b"sorted("))
+        splices.append((end, end, b")"))
+
+    renames: list[tuple[str, str, str]] = []
+    n_renames = 0
+    if config.in_scope(ctx.rel, config.UNIT_SCOPE):
+        for qualname, fn, old, new in _rename_candidates(ctx):
+            spans = _rename_spans(starts, fn, old, new)
+            if spans:
+                splices.extend(spans)
+                renames.append((qualname, old, new))
+                n_renames += 1
+
+    if not splices:
+        return None
+    new_text = _apply(data, splices).decode("utf-8")
+    try:
+        ast.parse(new_text)
+    except SyntaxError:  # pragma: no cover - splices are span-exact
+        return None
+    if new_text == ctx.text:
+        return None
+    return FilePlan(rel=ctx.rel, new_text=new_text, n_wraps=len(wraps),
+                    n_renames=n_renames, renames=renames)
+
+
+# -- entry points ------------------------------------------------------------
+
+
+def _run_prepares(contexts: list[FileContext]) -> None:
+    for name in sorted(RULES):
+        rule = RULES[name]
+        if rule.prepare is not None:
+            rule.prepare([c for c in contexts if rule.applies_to(c)])
+
+
+def fix_contexts(contexts: list[FileContext]) -> FixResult:
+    _run_prepares(contexts)
+    plans = []
+    for ctx in contexts:
+        plan = plan_file(ctx)
+        if plan is not None:
+            plans.append(plan)
+    return FixResult(plans=plans, files_scanned=len(contexts))
+
+
+def fix_sources(sources: dict[str, str]) -> FixResult:
+    """Fix in-memory sources keyed by virtual repo-relative path — the
+    fixture-test entry point (nothing is written anywhere)."""
+    contexts = [FileContext(rel=rel, text=text)
+                for rel, text in sorted(sources.items())]
+    return fix_contexts(contexts)
+
+
+def fix_paths(roots: Iterable[str], base: Path | None = None,
+              check: bool = False) -> FixResult:
+    """Fix every Python file under ``roots``.  With ``check=True``
+    nothing is written; the result reports what *would* change."""
+    base = Path.cwd() if base is None else base
+    files = [f for f in _collect_files(list(roots), base)
+             if f.suffix == ".py"]
+    contexts: list[FileContext] = []
+    paths: dict[str, Path] = {}
+    for f in files:
+        try:
+            text = f.read_text(encoding="utf-8")
+        except (OSError, UnicodeDecodeError):  # pragma: no cover
+            continue
+        rel = _relpath(f, base)
+        contexts.append(FileContext(rel=rel, text=text))
+        paths[rel] = f
+    result = fix_contexts(contexts)
+    if not check:
+        for plan in result.plans:
+            paths[plan.rel].write_text(plan.new_text, encoding="utf-8")
+    return result

@@ -34,6 +34,7 @@ class Finding:
     col: int  # 0-based
     message: str
     suppressed: bool = False
+    provenance: str | None = None  # inference chain (dataflow rules)
 
     def format(self) -> str:
         tag = " (suppressed)" if self.suppressed else ""
@@ -156,9 +157,11 @@ class FileContext:
 
 # -- rule registry -----------------------------------------------------------
 
-# A rule's check() yields (line, col, message) triples; the driver wraps
-# them into Findings and applies scope + allowlist + suppressions.
-CheckFn = Callable[[FileContext], Iterator[tuple[int, int, str]]]
+# A rule's check() yields (line, col, message) triples — or
+# (line, col, message, provenance) quadruples for the dataflow rules —
+# and the driver wraps them into Findings and applies scope + allowlist
+# + suppressions.
+CheckFn = Callable[[FileContext], Iterator[tuple]]
 PrepareFn = Callable[[list[FileContext]], None]
 
 
@@ -294,11 +297,14 @@ def lint_contexts(contexts: list[FileContext],
                 continue
             if config.allowlisted(rule.name, ctx.rel) is not None:
                 continue
-            for line, col, message in rule.check(ctx):
+            for item in rule.check(ctx):
+                line, col, message = item[0], item[1], item[2]
+                provenance = item[3] if len(item) > 3 else None
                 findings.append(Finding(
                     rule=rule.name, group=rule.group, path=ctx.rel,
                     line=line, col=col, message=message,
-                    suppressed=ctx.is_suppressed(rule.name, line)))
+                    suppressed=ctx.is_suppressed(rule.name, line),
+                    provenance=provenance))
 
     findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     return LintResult(findings=findings, files_scanned=len(contexts),

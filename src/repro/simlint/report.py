@@ -12,9 +12,12 @@ from __future__ import annotations
 
 from typing import Any
 
+from repro.simlint.dataflow import n_inferred_signatures
 from repro.simlint.framework import RULES, LintResult
 
-REPORT_VERSION = 1
+# v2: per-finding inferred-unit provenance and the number of signatures
+# the two-phase dataflow collected over the audited surface.
+REPORT_VERSION = 2
 
 
 def build_report(result: LintResult, runtime_s: float | None = None) -> dict:
@@ -33,6 +36,7 @@ def build_report(result: LintResult, runtime_s: float | None = None) -> dict:
         "n_findings": len(result.unsuppressed),
         "n_suppressed": len(result.suppressed),
         "suppression_comments": result.suppression_comments,
+        "n_inferred_signatures": n_inferred_signatures(),
         "parse_errors": [
             {"path": path, "error": err} for path, err in result.parse_errors
         ],
@@ -45,6 +49,7 @@ def build_report(result: LintResult, runtime_s: float | None = None) -> dict:
                 "col": f.col,
                 "message": f.message,
                 "suppressed": f.suppressed,
+                "provenance": f.provenance,
             }
             for f in result.findings
         ],
@@ -114,6 +119,10 @@ def validate_report(report: Any, schema: dict) -> list[str]:
     if counted != n_unsup:
         errors.append(
             f"counts sum to {counted} but {n_unsup} unsuppressed findings")
+
+    n_sigs = report["n_inferred_signatures"]
+    if not (isinstance(n_sigs, int) and n_sigs >= 0):
+        errors.append("n_inferred_signatures must be a non-negative int")
 
     budget = spec.get("max_suppression_comments")
     if budget is not None and report["suppression_comments"] > budget:

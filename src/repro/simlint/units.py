@@ -36,6 +36,7 @@ _SUFFIX_UNIT = {
     "pkts": "packets",
     "packets": "packets",
     "hops": "hops",
+    "hz": "1/s",
 }
 
 # stems that name a quantity without naming its unit

@@ -29,11 +29,11 @@ from repro.cluster.traces import TraceJob
 from repro.core import allocation as A
 
 
-def _run(n_jobs=80, x=8, y=8, fail_rate=0.0, repair_time=0.0, seed=0,
-         policy=None, probe_interval=None, trace=None, load=1.4):
+def _run(n_jobs=80, x=8, y=8, fail_rate_hz=0.0, repair_time_s=0.0, seed=0,
+         policy=None, probe_interval_s=None, trace=None, load=1.4):
     trace = trace or poisson_trace(n_jobs, x, y, load=load, seed=seed)
-    cfg = SimConfig(x, y, fail_rate=fail_rate, repair_time=repair_time,
-                    probe_interval=probe_interval, seed=seed)
+    cfg = SimConfig(x, y, fail_rate_hz=fail_rate_hz, repair_time_s=repair_time_s,
+                    probe_interval_s=probe_interval_s, seed=seed)
     return simulate(trace, cfg, policy or POLICIES["greedy"]), trace
 
 
@@ -100,7 +100,7 @@ def test_trace_jobs_carry_scenario_strings(tmp_path):
     save_trace(load_trace(str(path)), str(path2))
     assert path2.read_text() == text
     # non-default values do serialize and survive the round-trip
-    hot = TraceJob(jid=7, arrival=0.0, u=1, v=1, duration=1.0,
+    hot = TraceJob(jid=7, arrival=0.0, u=1, v=1, duration_s=1.0,
                    priority=2, deadline=9.5)
     save_trace([hot], str(path2))
     assert "priority" in path2.read_text()
@@ -121,7 +121,7 @@ def test_trace_determinism_and_shape_fit():
     assert a == b
     assert a != c
     assert all(j.u <= 16 and j.v <= 16 for j in a)
-    assert all(j.duration > 0 and j.arrival >= 0 for j in a)
+    assert all(j.duration_s > 0 and j.arrival >= 0 for j in a)
     arrivals = [j.arrival for j in a]
     assert arrivals == sorted(arrivals)
 
@@ -157,8 +157,8 @@ def test_conservation_no_churn():
 def test_conservation_under_churn(policy_name):
     trace = poisson_trace(80, 8, 8, load=1.5, seed=11)
     horizon = max(j.arrival for j in trace)
-    cfg = SimConfig(8, 8, fail_rate=20.0 / (64 * horizon),
-                    repair_time=horizon / 5, seed=2)
+    cfg = SimConfig(8, 8, fail_rate_hz=20.0 / (64 * horizon),
+                    repair_time_s=horizon / 5, seed=2)
     res = ClusterSimulator(cfg, POLICIES[policy_name]).run(trace)
     _replay_audit(res.audit, 8, 8)
     assert res.n_failures > 0
@@ -175,8 +175,8 @@ def test_eviction_remaps_or_requeues():
     their records say so."""
     trace = poisson_trace(60, 8, 8, load=1.2, seed=4)
     horizon = max(j.arrival for j in trace)
-    cfg = SimConfig(8, 8, fail_rate=60.0 / (64 * horizon),
-                    repair_time=horizon / 4, seed=7)
+    cfg = SimConfig(8, 8, fail_rate_hz=60.0 / (64 * horizon),
+                    repair_time_s=horizon / 4, seed=7)
     res = ClusterSimulator(cfg, POLICIES["greedy"]).run(trace)
     _replay_audit(res.audit, 8, 8)
     evicted = [r for r in res.records.values() if r.n_evictions]
@@ -191,8 +191,8 @@ def test_eviction_unblocks_queue_and_rejects_unfittable_victim():
     """A failure that evicts a big job must let waiting jobs use the freed
     boards, and a victim that can no longer fit the shrunken grid must be
     rejected instead of deadlocking a FIFO line forever."""
-    trace = [TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=1000.0),
-             TraceJob(jid=1, arrival=0.1, u=1, v=1, duration=5.0)]
+    trace = [TraceJob(jid=0, arrival=0.0, u=4, v=4, duration_s=1000.0),
+             TraceJob(jid=1, arrival=0.1, u=1, v=1, duration_s=5.0)]
     sim = ClusterSimulator(SimConfig(4, 4, seed=0), POLICIES["fifo"])
     sim._push(0.2, 2, None)  # inject one EV_FAIL after both arrivals
     res = sim.run(trace)
@@ -205,9 +205,9 @@ def test_queued_jobs_rejected_when_grid_shrinks():
     """A failure that permanently shrinks the grid (no repairs) must also
     reject *already queued* jobs that can no longer fit — otherwise they
     block a no-backfill FIFO line forever."""
-    trace = [TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=1000.0),
-             TraceJob(jid=1, arrival=0.1, u=4, v=4, duration=5.0),
-             TraceJob(jid=2, arrival=0.2, u=1, v=1, duration=5.0)]
+    trace = [TraceJob(jid=0, arrival=0.0, u=4, v=4, duration_s=1000.0),
+             TraceJob(jid=1, arrival=0.1, u=4, v=4, duration_s=5.0),
+             TraceJob(jid=2, arrival=0.2, u=1, v=1, duration_s=5.0)]
     sim = ClusterSimulator(SimConfig(4, 4, seed=0), POLICIES["fifo"])
     sim._push(0.3, 2, None)  # one EV_FAIL after all arrivals
     res = sim.run(trace)
@@ -218,7 +218,7 @@ def test_queued_jobs_rejected_when_grid_shrinks():
 
 
 def test_unplaceable_job_rejected():
-    trace = [TraceJob(jid=0, arrival=0.0, u=9, v=9, duration=1.0)]
+    trace = [TraceJob(jid=0, arrival=0.0, u=9, v=9, duration_s=1.0)]
     res = simulate(trace, SimConfig(8, 8), POLICIES["greedy"])
     assert res.records[0].status == "rejected"
     res2 = simulate(trace, SimConfig(16, 16), POLICIES["greedy"])
@@ -226,7 +226,7 @@ def test_unplaceable_job_rejected():
 
 
 def test_simulation_determinism():
-    kw = dict(n_jobs=50, fail_rate=0.01, repair_time=5.0, seed=9)
+    kw = dict(n_jobs=50, fail_rate_hz=0.01, repair_time_s=5.0, seed=9)
     r1, _ = _run(**kw)
     r2, _ = _run(**kw)
     assert r1.audit == r2.audit
@@ -328,18 +328,18 @@ def test_bandwidth_probes_record_isolation():
     bandwidth equals the allocated (isolated) bandwidth — §III-E measured."""
     trace = poisson_trace(40, 4, 4, load=1.3, seed=1)
     horizon = max(j.arrival for j in trace)
-    cfg = SimConfig(4, 4, probe_interval=horizon / 5,
-                    fail_rate=3.0 / (16 * horizon), repair_time=horizon / 5,
+    cfg = SimConfig(4, 4, probe_interval_s=horizon / 5,
+                    fail_rate_hz=3.0 / (16 * horizon), repair_time_s=horizon / 5,
                     seed=3)
     res = ClusterSimulator(cfg, POLICIES["greedy"]).run(trace)
-    observed = [r for r in res.records.values() if r.achieved_bw]
+    observed = [r for r in res.records.values() if r.achieved_bw_frac]
     assert res.n_probes > 0 and observed
     for rec in observed:
-        assert 0.0 < rec.allocated_bw <= 1.0
-        for frac in rec.achieved_bw:
+        assert 0.0 < rec.allocated_bw_frac <= 1.0
+        for frac in rec.achieved_bw_frac:
             assert 0.0 < frac <= 1.0
-            assert frac <= rec.allocated_bw + 1e-9
-    gaps = [rec.allocated_bw - statistics.mean(rec.achieved_bw)
+            assert frac <= rec.allocated_bw_frac + 1e-9
+    gaps = [rec.allocated_bw_frac - statistics.mean(rec.achieved_bw_frac)
             for rec in observed]
     assert max(abs(g) for g in gaps) < 1e-9
     assert res.fragmentation_samples
@@ -359,8 +359,8 @@ def test_preemption_requeues_victim_with_remaining_work():
     from repro.cluster.policies import GreedyPolicy
 
     trace = [
-        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=100.0),
-        TraceJob(jid=1, arrival=5.0, u=2, v=2, duration=10.0, priority=1),
+        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration_s=100.0),
+        TraceJob(jid=1, arrival=5.0, u=2, v=2, duration_s=10.0, priority=1),
     ]
     pol = GreedyPolicy(name="preempt", preempt=True)
     res = ClusterSimulator(SimConfig(4, 4, seed=0), pol).run(trace)
@@ -384,16 +384,16 @@ def test_no_preemption_when_job_fits_or_flag_off():
     from repro.cluster.policies import GreedyPolicy
 
     trace = [
-        TraceJob(jid=0, arrival=0.0, u=2, v=2, duration=100.0),
-        TraceJob(jid=1, arrival=5.0, u=2, v=2, duration=10.0, priority=1),
+        TraceJob(jid=0, arrival=0.0, u=2, v=2, duration_s=100.0),
+        TraceJob(jid=1, arrival=5.0, u=2, v=2, duration_s=10.0, priority=1),
     ]
     res = ClusterSimulator(
         SimConfig(4, 4, seed=0), GreedyPolicy(name="p", preempt=True)
     ).run(trace)
     assert res.n_preemptions == 0  # both fit side by side
     trace2 = [
-        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=100.0),
-        TraceJob(jid=1, arrival=5.0, u=2, v=2, duration=10.0, priority=1),
+        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration_s=100.0),
+        TraceJob(jid=1, arrival=5.0, u=2, v=2, duration_s=10.0, priority=1),
     ]
     res2 = ClusterSimulator(
         SimConfig(4, 4, seed=0), GreedyPolicy(name="np", preempt=False)
@@ -408,8 +408,8 @@ def test_preemption_never_evicts_equal_or_higher_priority():
     from repro.cluster.policies import GreedyPolicy
 
     trace = [
-        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=50.0, priority=1),
-        TraceJob(jid=1, arrival=5.0, u=4, v=4, duration=10.0, priority=1),
+        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration_s=50.0, priority=1),
+        TraceJob(jid=1, arrival=5.0, u=4, v=4, duration_s=10.0, priority=1),
     ]
     res = ClusterSimulator(
         SimConfig(4, 4, seed=0), GreedyPolicy(name="p", preempt=True)
@@ -423,9 +423,9 @@ def test_deadline_miss_accounting():
     (or never finished) is missed, deadline keys appear only when the trace
     carries deadlines."""
     trace = [
-        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=10.0, deadline=100.0),
-        TraceJob(jid=1, arrival=0.1, u=4, v=4, duration=10.0, deadline=5.0),
-        TraceJob(jid=2, arrival=0.2, u=1, v=1, duration=1.0),  # no deadline
+        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration_s=10.0, deadline=100.0),
+        TraceJob(jid=1, arrival=0.1, u=4, v=4, duration_s=10.0, deadline=5.0),
+        TraceJob(jid=2, arrival=0.2, u=1, v=1, duration_s=1.0),  # no deadline
     ]
     res = simulate(trace, SimConfig(4, 4, seed=0), POLICIES["greedy"])
     s = res.summary()
@@ -449,16 +449,16 @@ def test_trace_generator_priority_deadline_knobs():
                         priorities=[(0, 0.7), (1, 0.3)], deadline_slack=4.0)
     assert {j.priority for j in hot} == {0, 1}
     for j in hot:
-        assert j.deadline == pytest.approx(j.arrival + 4.0 * j.duration)
+        assert j.deadline == pytest.approx(j.arrival + 4.0 * j.duration_s)
 
 
 def test_priority_orders_queue_ahead_of_fifo():
     """With a backlog, a later-arriving high-priority job starts before
     earlier low-priority peers even without preemption."""
     trace = [
-        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration=10.0),
-        TraceJob(jid=1, arrival=1.0, u=4, v=4, duration=10.0),
-        TraceJob(jid=2, arrival=2.0, u=4, v=4, duration=10.0, priority=5),
+        TraceJob(jid=0, arrival=0.0, u=4, v=4, duration_s=10.0),
+        TraceJob(jid=1, arrival=1.0, u=4, v=4, duration_s=10.0),
+        TraceJob(jid=2, arrival=2.0, u=4, v=4, duration_s=10.0, priority=5),
     ]
     res = simulate(trace, SimConfig(4, 4, seed=0), POLICIES["fifo"])
     assert res.records[2].start < res.records[1].start
@@ -480,7 +480,7 @@ def test_pool_topology_runs_under_scheduler():
     _replay_audit(res.audit, cfg.x, cfg.y)
     assert all(r.status == "finished" for r in res.records.values())
     # a 9x9=81-slot request exceeds the 64-slot pool and is rejected
-    res2 = simulate([TraceJob(jid=0, arrival=0.0, u=9, v=9, duration=1.0)],
+    res2 = simulate([TraceJob(jid=0, arrival=0.0, u=9, v=9, duration_s=1.0)],
                     cfg, POLICIES["greedy"])
     assert res2.records[0].status == "rejected"
 
@@ -493,7 +493,7 @@ def test_pool_topology_runs_under_scheduler():
 def test_probe_timeline_completion_sample_covers_short_jobs():
     """Satellite fix: a job that starts and completes between two probe
     instants still gets one bw_timeline point, recorded at completion."""
-    cfg = SimConfig.for_topology("hx2-4x4", probe_interval=1e6, seed=1,
+    cfg = SimConfig.for_topology("hx2-4x4", probe_interval_s=1e6, seed=1,
                                  probe_collective="ring:s16MiB")
     trace = poisson_trace(10, cfg.x, cfg.y, load=1.0, seed=1)
     res = simulate(trace, cfg, POLICIES["greedy"])

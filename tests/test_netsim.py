@@ -322,7 +322,7 @@ def test_cluster_probe_timelines():
     from repro.cluster import FIG8_LADDER, SimConfig, poisson_trace, simulate
 
     cfg = SimConfig.for_topology(
-        "hx2-4x4", fail_rate=0.001, repair_time=50.0, probe_interval=2.0,
+        "hx2-4x4", fail_rate_hz=0.001, repair_time_s=50.0, probe_interval_s=2.0,
         seed=1, probe_collective="ring:s16MiB")
     trace = poisson_trace(12, cfg.x, cfg.y, load=1.2, seed=1)
     res = simulate(trace, cfg, FIG8_LADDER[-1][1])

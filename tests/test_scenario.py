@@ -324,15 +324,15 @@ def test_cluster_probes_log_parseable_scenarios():
     from repro.cluster import FIG8_LADDER, SimConfig, poisson_trace, simulate
 
     cfg = SimConfig.for_topology(
-        "hx2-4x4", fail_rate=0.001, repair_time=50.0,
-        probe_interval=2.0, seed=1)
+        "hx2-4x4", fail_rate_hz=0.001, repair_time_s=50.0,
+        probe_interval_s=2.0, seed=1)
     trace = poisson_trace(12, cfg.x, cfg.y, load=1.2, seed=1)
     res = simulate(trace, cfg, FIG8_LADDER[-1][1])
     assert res.n_probes > 0 and len(res.probe_log) == res.n_probes
     for _, token in res.probe_log:
         sc = R.parse_scenario(token)
         assert sc.topology.spec == "hx2-4x4"
-    observed = [r for r in res.records.values() if r.achieved_bw]
+    observed = [r for r in res.records.values() if r.achieved_bw_frac]
     assert observed
     for rec in observed:
         assert rec.probe_scenario in {tok for _, tok in res.probe_log}

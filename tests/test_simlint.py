@@ -9,6 +9,7 @@ determinism fixes are re-broken in memory to prove SET-ITER would catch
 a revert.
 """
 
+import ast
 import json
 import os
 import subprocess
@@ -19,6 +20,8 @@ import pytest
 
 from repro import simlint
 from repro.simlint import config as SLC
+from repro.simlint import dataflow as SLD
+from repro.simlint import fixer as SLF
 from repro.simlint import report as SLR
 
 REPO = Path(__file__).resolve().parent.parent
@@ -41,10 +44,12 @@ def test_rule_inventory():
         "SET-ITER", "UNSEEDED-RNG", "WALL-CLOCK",
         "QUEUE-INTERNALS", "PAST-PUSH",
         "UNIT-MIX", "UNIT-ASSIGN", "UNIT-AMBIG",
+        "UNIT-FLOW", "UNIT-RETURN", "FLOAT-ACCUM",
         "SCENARIO-LIT",
     }
     groups = {r.group for r in simlint.RULES.values()}
-    assert groups == {"determinism", "events", "units", "scenario"}
+    assert groups == {"determinism", "events", "units", "scenario",
+                      "numerics"}
 
 
 def test_register_rule_rejects_duplicates():
@@ -283,6 +288,343 @@ def test_unit_ambig():
 
 
 # ---------------------------------------------------------------------------
+# dataflow: the unit algebra (per-operator tables)
+# ---------------------------------------------------------------------------
+
+
+def test_unit_algebra_add():
+    V = SLD.Val
+    table = [
+        # lt, rt, result tag, conflicts?
+        ("bytes", "bytes", "bytes", False),
+        ("s", "cycles", None, True),
+        ("s", "ms", None, True),  # time sub-units never add silently
+        ("bytes", "int", "bytes", False),  # unit + bare constant
+        ("float", "frac", "frac", False),
+        ("int", "int", "int", False),
+        ("int", "float", "float", False),
+        (None, None, None, False),
+    ]
+    for lt, rt, out, conflicts in table:
+        v, conflict = SLD.add_units(V(lt), V(rt))
+        assert v.tag == out, (lt, rt, v.tag)
+        assert (conflict is not None) == conflicts, (lt, rt, conflict)
+
+
+def test_unit_algebra_mul():
+    V = SLD.Val
+    table = [
+        ("frac", "bytes", "bytes"),
+        ("bytes", "frac", "bytes"),
+        ("bytes/s", "s", "bytes"),
+        ("s", "bytes/s", "bytes"),
+        ("1/s", "s", "float"),  # dimensionless
+        ("bytes", "int", "bytes"),
+        ("float", "cycles", "cycles"),
+        ("frac", "frac", "frac"),
+        ("int", "int", "int"),
+        ("int", "float", "float"),
+        ("bytes", None, None),  # unknown operand poisons
+    ]
+    for lt, rt, out in table:
+        assert SLD.mul_units(V(lt), V(rt)).tag == out, (lt, rt)
+
+
+def test_unit_algebra_div():
+    V = SLD.Val
+    table = [
+        ("bytes", "bytes", "frac"),  # x / x -> fraction
+        ("bytes", "bytes/s", "s"),  # the transfer-time conversion
+        ("bytes", "s", "bytes/s"),
+        ("s", "frac", "s"),
+        ("cycles", "int", "cycles"),
+        ("int", "s", "1/s"),  # rates
+        ("float", "float", "float"),
+        ("s", None, None),
+    ]
+    for lt, rt, out in table:
+        assert SLD.div_units(V(lt), V(rt)).tag == out, (lt, rt)
+
+
+def test_unit_algebra_binop_dispatch():
+    V = SLD.Val
+    v, c = SLD.binop_units(ast.FloorDiv(), V("bytes"), V("bytes"))
+    assert v.tag == "int" and c is None  # whole packets
+    v, _ = SLD.binop_units(ast.Mod(), V("bytes"), V("int"))
+    assert v.tag == "bytes"
+    v, _ = SLD.binop_units(ast.Pow(), V("int"), V("int"))
+    assert v.tag == "int"
+    v, c = SLD.binop_units(ast.Sub(), V("s"), V("cycles"))
+    assert c is not None
+
+
+# ---------------------------------------------------------------------------
+# dataflow: UNIT-FLOW / UNIT-RETURN
+# ---------------------------------------------------------------------------
+
+UNIT_FLOW_BAD = """\
+def total(t_s, n_cycles):
+    elapsed = t_s * 2.0
+    budget = n_cycles * 2
+    return elapsed + budget
+"""
+
+UNIT_FLOW_CLEAN = """\
+def drain(size_bytes, link_bps):
+    t = size_bytes / link_bps
+    rem_s = 2.0
+    return t + rem_s
+"""
+
+
+def test_unit_flow_fires_through_locals():
+    # both operands are unsuffixed locals: v1's UNIT-MIX cannot see the
+    # conflict, the dataflow can
+    fired = rules_fired({UNIT_PATH: UNIT_FLOW_BAD})
+    assert "UNIT-FLOW" in fired
+    assert "UNIT-MIX" not in fired
+
+
+def test_unit_flow_silent_on_converted():
+    assert "UNIT-FLOW" not in rules_fired({UNIT_PATH: UNIT_FLOW_CLEAN})
+
+
+def test_unit_flow_assignment_conflict():
+    bad = "def f(n_cycles):\n    t_s = n_cycles * 2\n    return t_s\n"
+    assert "UNIT-FLOW" in rules_fired({UNIT_PATH: bad})
+    # time-family rescaling is a conversion, not a conflict
+    ok = "def f(t_s):\n    t_ms = t_s * 1e3\n    return t_ms\n"
+    assert "UNIT-FLOW" not in rules_fired({UNIT_PATH: ok})
+
+
+def test_unit_return_conflicting_branches():
+    bad = ("def latency(fast, t_s, n_cycles):\n"
+           "    if fast:\n        return t_s\n"
+           "    return n_cycles\n")
+    ok = ("def latency(fast, t_s):\n"
+          "    if fast:\n        return t_s / 2\n"
+          "    return t_s\n")
+    assert "UNIT-RETURN" in rules_fired({UNIT_PATH: bad})
+    assert "UNIT-RETURN" not in rules_fired({UNIT_PATH: ok})
+
+
+# ---------------------------------------------------------------------------
+# dataflow: cross-function signature inference
+# ---------------------------------------------------------------------------
+
+SIG_LIB = """\
+def drain_time(size_bytes, link_bps):
+    return size_bytes / link_bps
+"""
+
+SIG_USE_BAD = """\
+from repro.netsim.lib import drain_time
+
+
+def bad_arg(t_s, link_bps):
+    return drain_time(t_s, link_bps)
+
+
+def bad_assign(x_bytes, link_bps):
+    d_bytes = drain_time(x_bytes, link_bps)
+    return d_bytes
+"""
+
+SIG_USE_CLEAN = """\
+from repro.netsim.lib import drain_time
+
+
+def ok(x_bytes, link_bps):
+    t_s = drain_time(x_bytes, link_bps)
+    return t_s
+"""
+
+
+def test_signature_inference_flags_call_and_return_flows():
+    res = simlint.lint_sources({"src/repro/netsim/lib.py": SIG_LIB,
+                                "src/repro/netsim/use.py": SIG_USE_BAD})
+    flows = [f for f in res.unsuppressed if f.rule == "UNIT-FLOW"]
+    assert {f.path for f in flows} == {"src/repro/netsim/use.py"}
+    msgs = "\n".join(f.message for f in flows)
+    # the [s] argument bound to the [bytes] parameter...
+    assert "size_bytes" in msgs and "[s]" in msgs
+    # ...and the [s] return value assigned to a [bytes] name
+    assert "d_bytes" in msgs
+    provs = "\n".join(f.provenance or "" for f in flows)
+    assert "signature inferred from src/repro/netsim/lib.py" in provs
+
+
+def test_signature_inference_silent_on_clean_use():
+    res = simlint.lint_sources({"src/repro/netsim/lib.py": SIG_LIB,
+                                "src/repro/netsim/use.py": SIG_USE_CLEAN})
+    assert not [f for f in res.unsuppressed if f.rule == "UNIT-FLOW"]
+
+
+# ---------------------------------------------------------------------------
+# numerics: FLOAT-ACCUM
+# ---------------------------------------------------------------------------
+
+ACCUM_PATH = "src/repro/cluster/fake.py"  # in the FLOAT_SCOPE surface
+
+ACCUM_BAD = """\
+def level(loads):
+    total = 0.0
+    for name in {"a", "bb", "ccc"}:
+        total += len(name) * 0.5
+    return total
+"""
+
+ACCUM_SUM_BAD = """\
+def footprint(loads):
+    return sum(v * 2.0 for v in loads.values())
+"""
+
+ACCUM_CLEAN = """\
+import math
+
+
+def level(loads):
+    total = 0.0
+    for x in sorted({1.5, 2.5}):
+        total += x
+    return total + math.fsum(v * 2.0 for v in loads.values())
+
+
+def count(loads):
+    n = 0
+    for _ in loads.values():
+        n += 1
+    return n
+
+
+def over_list(samples: list) -> float:
+    acc = 0.0
+    for s in samples:
+        acc += s
+    return acc
+"""
+
+
+def test_float_accum_fires_on_unordered_loops_and_sums():
+    assert "FLOAT-ACCUM" in rules_fired({ACCUM_PATH: ACCUM_BAD})
+    assert "FLOAT-ACCUM" in rules_fired({ACCUM_PATH: ACCUM_SUM_BAD})
+
+
+def test_float_accum_remedies_are_silent():
+    # sorted(...) loops, math.fsum folds, integer counters and
+    # list-evidenced iterables are all fine
+    assert "FLOAT-ACCUM" not in rules_fired({ACCUM_PATH: ACCUM_CLEAN})
+
+
+def test_float_accum_scope_is_netsim_and_cluster():
+    assert "FLOAT-ACCUM" not in rules_fired(
+        {"src/repro/packetsim/fake.py": ACCUM_BAD})
+
+
+def test_float_accum_catches_reverted_fsum_fixes():
+    # re-break the shipped math.fsum fixes in memory: a revert of any
+    # must light FLOAT-ACCUM up again
+    eng = (REPO / "src/repro/netsim/engine.py").read_text()
+    broken = eng.replace("total = math.fsum(", "total = sum(")
+    assert broken != eng
+    assert "FLOAT-ACCUM" in rules_fired(
+        {"src/repro/netsim/engine.py": broken})
+
+    sched = (REPO / "src/repro/netsim/schedule.py").read_text()
+    broken = sched.replace("return math.fsum(", "return sum(")
+    assert broken != sched
+    assert "FLOAT-ACCUM" in rules_fired(
+        {"src/repro/netsim/schedule.py": broken})
+
+    sim = (REPO / "src/repro/cluster/simulator.py").read_text()
+    broken = sim.replace('out["mean_fragmentation"] = math.fsum(',
+                         'out["mean_fragmentation"] = sum(')
+    assert broken != sim
+    assert "FLOAT-ACCUM" in rules_fired(
+        {"src/repro/cluster/simulator.py": broken})
+
+
+# ---------------------------------------------------------------------------
+# the autofixer (--fix)
+# ---------------------------------------------------------------------------
+
+
+def test_fixer_wraps_set_iteration():
+    res = SLF.fix_sources({"src/repro/netsim/fake.py": SET_ITER_BAD})
+    assert res.n_wraps == 1 and res.n_renames == 0
+    assert "for item in sorted(pending):" in res.plans[0].new_text
+
+
+def test_fixer_wraps_dict_view_sum():
+    res = SLF.fix_sources({ACCUM_PATH: ACCUM_SUM_BAD})
+    assert res.n_wraps == 1
+    assert "sorted(loads.values())" in res.plans[0].new_text
+
+
+def test_fixer_renames_unambiguous_locals():
+    src = ("LINK_BPS = 25e9\n\n\n"
+           "def drain(msg_bytes):\n"
+           "    size = msg_bytes * 0.5\n"
+           "    dt = size / LINK_BPS\n"
+           "    return dt\n")
+    res = SLF.fix_sources({"src/repro/netsim/fake.py": src})
+    fixed = res.plans[0].new_text
+    assert "size_bytes = msg_bytes * 0.5" in fixed
+    assert "dt_s = size_bytes / LINK_BPS" in fixed
+    assert ("drain", "dt", "dt_s") in res.plans[0].renames
+    assert ("drain", "size", "size_bytes") in res.plans[0].renames
+
+
+def test_fixer_rename_safety_rules():
+    # a local whose assignments infer *different* units is left alone
+    mixed = ("def f(t_s, n_bytes):\n"
+             "    dt = t_s * 2.0\n"
+             "    dt = n_bytes * 2.0\n"
+             "    return dt\n")
+    assert SLF.fix_sources({"src/repro/netsim/fake.py": mixed}).plans == []
+    # a local referenced from a nested scope is left alone
+    nested = ("def f(msg_bytes):\n"
+              "    size = msg_bytes * 2.0\n"
+              "    def g():\n"
+              "        return size\n"
+              "    return g\n")
+    assert SLF.fix_sources({"src/repro/netsim/fake.py": nested}).plans == []
+
+
+def test_fixer_respects_suppressions():
+    src = SET_ITER_BAD.replace(
+        "for item in pending:",
+        "for item in pending:  # simlint: ignore[SET-ITER]")
+    assert SLF.fix_sources({"src/repro/netsim/fake.py": src}).plans == []
+
+
+def test_fixer_idempotent_and_round_trip():
+    sources = {
+        "src/repro/netsim/fake.py": SET_ITER_BAD,
+        ACCUM_PATH: ACCUM_SUM_BAD,
+    }
+    res1 = SLF.fix_sources(sources)
+    fixed = dict(sources)
+    fixed.update(res1.changed)
+    # every rewrite round-trips through the parser
+    for text in fixed.values():
+        ast.parse(text)
+    # the fixed tree is clean for the auto-fixed rules...
+    relint = simlint.lint_sources(fixed)
+    assert not [f for f in relint.unsuppressed
+                if f.rule in ("SET-ITER", "FLOAT-ACCUM")]
+    # ...and a second --fix pass has nothing left to do (idempotence)
+    assert SLF.fix_sources(fixed).plans == []
+
+
+def test_repo_fixer_has_nothing_pending():
+    # the CI gate: at HEAD, --fix --check must be a no-op
+    res = SLF.fix_paths(["src", "tests", "benchmarks", "examples"],
+                        base=REPO, check=True)
+    assert [p.rel for p in res.plans] == []
+
+
+# ---------------------------------------------------------------------------
 # scenario literals
 # ---------------------------------------------------------------------------
 
@@ -380,6 +722,19 @@ def test_report_round_trip():
     assert report["n_findings"] == len(res.unsuppressed)
 
 
+def test_report_v2_provenance_and_signatures():
+    res = simlint.lint_sources({"src/repro/netsim/lib.py": SIG_LIB,
+                                "src/repro/netsim/use.py": SIG_USE_BAD})
+    report = json.loads(json.dumps(SLR.build_report(res, runtime_s=0.01)))
+    assert report["version"] == 2
+    assert SLR.validate_report(report, load_schema()) == []
+    # every function on the audited surface got an inferred signature
+    assert report["n_inferred_signatures"] == 3
+    flows = [f for f in report["findings"] if f["rule"] == "UNIT-FLOW"]
+    assert flows
+    assert all("inferred" in (f["provenance"] or "") for f in flows)
+
+
 def test_report_validation_catches_corruption():
     res = simlint.lint_sources({"src/repro/netsim/bad.py": SET_ITER_BAD})
     schema = load_schema()
@@ -447,8 +802,8 @@ out["fraction"] = round(sc.fraction(), 12)
 
 # cluster scheduler with churn (alloc.failed iteration in probes)
 trace = poisson_trace(25, 6, 6, load=1.3, seed=7)
-cfg = SimConfig(6, 6, fail_rate=2.0 / (36 * 300.0), repair_time=40.0,
-                probe_interval=60.0, seed=3)
+cfg = SimConfig(6, 6, fail_rate_hz=2.0 / (36 * 300.0), repair_time_s=40.0,
+                probe_interval_s=60.0, seed=3)
 res = ClusterSimulator(cfg, POLICIES["greedy"]).run(trace)
 out["utilization"] = round(res.utilization(), 12)
 out["finished"] = sorted(

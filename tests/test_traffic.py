@@ -324,9 +324,10 @@ def test_register_traffic_extensible():
         net = FABRICS["hx2-4x4"]()
         dem = spec.demand(net)
         assert dem.n_sources == 1
-        # reachable through the scenario grammar end to end
-        # the family is registered three lines up, invisible to simlint
-        sc = R.parse_scenario("hx2-4x4/test-onesie:vol2")  # simlint: ignore[SCENARIO-LIT]
+        # reachable through the scenario grammar end to end; built from
+        # fam.name because the literal would only parse while the
+        # family is registered
+        sc = R.parse_scenario(f"hx2-4x4/{fam.name}:vol2")
         assert R.parse_scenario(str(sc)) == sc
     finally:
         del TR.TRAFFIC_FAMILIES["test-onesie"]
