@@ -1,0 +1,91 @@
+"""Perf-trend report: diff a ``run.py --quick --json`` report against the
+recorded wall-time trajectory.
+
+Every suite in the report carries ``seconds`` (wall time of its quick
+run).  ``BENCH_obs.json`` records the same numbers from the machine that
+last refreshed the baselines (``quick_suite_s``).  This tool prints a
+regression table — one row per suite with baseline, current, and ratio —
+and classifies each row:
+
+* ``ok``    ratio <= 1.5x (or the suite is faster),
+* ``WARN``  ratio in (1.5x, 3.0x] — suspicious, not fatal,
+* ``FAIL``  ratio > 3.0x — a real regression (exit 1),
+* ``new``   no baseline recorded (or baseline too small to ratio).
+
+CI runs this as a *non-blocking* step (``continue-on-error``): absolute
+wall times vary across runners, so the table is a trend signal for the
+human reading the log, not a gate.  Suites faster than
+``--min-baseline`` seconds (default 0.05) are reported as ``new`` —
+ratios of sub-50ms timings are noise.
+
+Usage:  python benchmarks/bench_report.py bench.json [--baseline BENCH_obs.json]
+"""
+
+import argparse
+import json
+import sys
+
+WARN_RATIO = 1.5
+FAIL_RATIO = 3.0
+
+
+def compare(report: dict, baseline: dict, min_baseline: float = 0.05):
+    """One ``(suite, base_s, cur_s, ratio, status)`` row per suite in the
+    report; ratio/status are ``None``/``"new"`` without a usable
+    baseline."""
+    base = baseline.get("quick_suite_s", {})
+    rows = []
+    for name, s in report.get("suites", {}).items():
+        cur = float(s.get("seconds", 0.0))
+        b = base.get(name)
+        if b is None or b < min_baseline:
+            rows.append((name, b, cur, None, "new"))
+            continue
+        ratio = cur / b
+        status = ("FAIL" if ratio > FAIL_RATIO
+                  else "WARN" if ratio > WARN_RATIO else "ok")
+        rows.append((name, b, cur, ratio, status))
+    return rows
+
+
+def render(rows) -> str:
+    head = f"{'suite':<18} {'base_s':>8} {'cur_s':>8} {'ratio':>7}  status"
+    lines = [head, "-" * len(head)]
+    for name, b, cur, ratio, status in rows:
+        bs = f"{b:8.3f}" if b is not None else f"{'-':>8}"
+        rs = f"{ratio:6.2f}x" if ratio is not None else f"{'-':>7}"
+        lines.append(f"{name:<18} {bs} {cur:8.3f} {rs}  {status}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="diff quick-suite wall times against the recorded "
+                    "baseline trajectory")
+    ap.add_argument("report", help="run.py --quick --json output")
+    ap.add_argument("--baseline", default="BENCH_obs.json",
+                    help="baseline file carrying quick_suite_s "
+                         "(default: BENCH_obs.json)")
+    ap.add_argument("--min-baseline", type=float, default=0.05,
+                    help="ignore suites whose baseline is below this many "
+                         "seconds (ratios of tiny timings are noise)")
+    args = ap.parse_args()
+    report = json.load(open(args.report))
+    baseline = json.load(open(args.baseline))
+    rows = compare(report, baseline, args.min_baseline)
+    print(render(rows))
+    n_warn = sum(1 for r in rows if r[4] == "WARN")
+    n_fail = sum(1 for r in rows if r[4] == "FAIL")
+    if n_fail:
+        print(f"# {n_fail} suite(s) above {FAIL_RATIO}x baseline — "
+              f"perf regression", file=sys.stderr)
+        sys.exit(1)
+    if n_warn:
+        print(f"# {n_warn} suite(s) above {WARN_RATIO}x baseline — "
+              f"watch the trend", file=sys.stderr)
+    else:
+        print("# wall-time trajectory within bounds", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ cluster_sched,torus-32x32`` runs just the torus records of one suite.
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -144,11 +145,19 @@ def main() -> None:
                          "(adds the 'scale' suite; try 4096)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode: reduced trials, no oracle timing")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="record a Chrome trace-event JSON per suite into "
+                         "DIR (load in Perfetto / chrome://tracing); "
+                         "measurement-only — results are byte-identical "
+                         "with tracing off")
     args = ap.parse_args()
 
     from benchmarks.scenarios import RunContext
 
-    ctx = RunContext(full=args.full, quick=args.quick, scale=args.scale)
+    ctx = RunContext(full=args.full, quick=args.quick, scale=args.scale,
+                     trace_dir=args.trace)
+    if args.trace:
+        os.makedirs(args.trace, exist_ok=True)
     suites = _suite_registry(args)
     only, scenario_filter = _parse_only(ap, args.only, suites)
     report = {"args": {"full": args.full, "scale": args.scale,
@@ -157,9 +166,20 @@ def main() -> None:
     for name, mod in suites.items():
         if only and name not in only:
             continue
+        tracer = None
+        if args.trace:
+            from repro.obs import trace as OT
+
+            tracer = OT.Tracer(name=name, out_dir=args.trace)
         t0 = time.time()
         try:
-            scs, rows = run_suite(mod, ctx, quiet, scenario_filter)
+            if tracer is not None:
+                from repro.obs import trace as OT
+
+                with OT.tracing(tracer):
+                    scs, rows = run_suite(mod, ctx, quiet, scenario_filter)
+            else:
+                scs, rows = run_suite(mod, ctx, quiet, scenario_filter)
             if scenario_filter is not None and not scs:
                 continue  # no record of this suite matches the tokens
             err = None
@@ -173,6 +193,18 @@ def main() -> None:
             "rows": rows,
             "seconds": round(dt, 3),
         }
+        if tracer is not None:
+            # harness-level stamp so every suite trace (even one that
+            # never touches an engine) is non-empty and schema-valid
+            tracer.instant("harness", "suite", f"suite:{name}", 0.0,
+                           args={"rows": len(rows),
+                                 "wall_s": round(dt, 3)})
+            path = os.path.join(args.trace, f"{name}.trace.json")
+            tracer.export(path)  # partial traces survive suite errors
+            report["suites"][name]["trace"] = path
+            print(f"# {name}: trace -> {path} "
+                  f"({len(tracer.events)} events)",
+                  file=sys.stderr, flush=True)
         if err:
             report["suites"][name]["error"] = err
             continue

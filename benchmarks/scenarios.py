@@ -141,6 +141,7 @@ class RunContext:
     full: bool = False  # paper-size (1k-endpoint) flow simulations
     quick: bool = False  # CI smoke: reduced trials / jobs
     scale: int = 0  # endpoint-scale sweep bound (0 = off)
+    trace_dir: str | None = None  # per-suite Chrome trace output (--trace)
 
     def trials(self, n: int, quick_n: int = 5) -> int:
         return quick_n if self.quick else n

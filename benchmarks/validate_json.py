@@ -13,11 +13,18 @@ violation.
 
 Usage:  python benchmarks/validate_json.py report.json [schema.json]
         python benchmarks/validate_json.py --simlint simlint.json [schema.json]
+        python benchmarks/validate_json.py --trace suite.trace.json [schema.json]
 
 The ``--simlint`` form validates a ``python -m repro.simlint --json``
 report against the ``simlint_report`` schema block instead (rule
 inventory, count consistency, the suppression budget) and additionally
 fails when the report carries any unsuppressed finding — the CI gate.
+
+The ``--trace`` form validates a Chrome trace-event JSON file written by
+``benchmarks/run.py --trace DIR`` against the ``trace_schema`` block
+(via ``repro.obs.trace.validate_trace``): phase vocabulary, required
+per-phase fields, non-negative microsecond timestamps, and pid/tid
+metadata coverage — the properties Perfetto needs to load the file.
 """
 
 import json
@@ -101,16 +108,36 @@ def validate_simlint(report: dict, schema: dict) -> list[str]:
     return errors
 
 
+def validate_trace_file(trace: dict, schema: dict) -> list[str]:
+    from repro.obs.trace import validate_trace
+
+    return validate_trace(trace, schema)
+
+
 def main() -> None:
     argv = list(sys.argv[1:])
     simlint_mode = "--simlint" in argv
     if simlint_mode:
         argv.remove("--simlint")
+    trace_mode = "--trace" in argv
+    if trace_mode:
+        argv.remove("--trace")
     if not 1 <= len(argv) <= 2:
         sys.exit(__doc__)
     report = json.load(open(argv[0]))
     schema_path = argv[1] if len(argv) == 2 else "benchmarks/schema.json"
     schema = json.load(open(schema_path))
+    if trace_mode:
+        errors = validate_trace_file(report, schema)
+        for e in errors:
+            print(f"SCHEMA: {e}")
+        if errors:
+            sys.exit(1)
+        n = len(report.get("traceEvents", []))
+        n_meta = sum(1 for ev in report["traceEvents"] if ev.get("ph") == "M")
+        print(f"trace OK: {argv[0]} — {n} events "
+              f"({n - n_meta} records, {n_meta} metadata)")
+        return
     if simlint_mode:
         errors = validate_simlint(report, schema)
         for e in errors:

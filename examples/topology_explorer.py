@@ -12,6 +12,16 @@ tier cannot see.  With no arguments, sweep the HxMesh design space
 around 1k accelerators (the cost / global-bandwidth / flexibility
 trade-off of paper Fig 1) against a fat-tree baseline.
 
+``--trace DIR`` additionally records each simulated scenario (a
+``coll=`` or ``fidelity=packet`` leg) as a Chrome trace-event file
+under DIR and prints a Perfetto walkthrough: open
+https://ui.perfetto.dev, drag the ``.trace.json`` in, and read one
+process per engine — collective phases as spans on their group tracks,
+the per-waterfill ``link_util`` / ``active_flows`` counters under
+``netsim``, VOQ occupancy milestones under ``packetsim``.  Tracing is
+measurement-only: the numbers printed are byte-identical with and
+without ``--trace`` (DESIGN.md §13).
+
   PYTHONPATH=src python examples/topology_explorer.py
   PYTHONPATH=src python examples/topology_explorer.py hx4-8x8 torus-32x32
   PYTHONPATH=src python examples/topology_explorer.py \\
@@ -20,9 +30,12 @@ trade-off of paper Fig 1) against a fat-tree baseline.
       torus-16x16/bisection/fail=links:1%:seed1 \\
       torus-6x6/alltoall/fidelity=packet \\
       torus-32x32/alltoall/fidelity=calibrated
+  PYTHONPATH=src python examples/topology_explorer.py --trace out \\
+      hx2-8x8/coll=ring:s64MiB torus-4x4/alltoall/fidelity=packet
 """
 
 import dataclasses
+import os
 import sys
 
 from repro.core.registry import parse, parse_scenario
@@ -106,7 +119,35 @@ def default_sweep() -> list[str]:
     return specs
 
 
+def trace_scenario(token: str, trace_dir: str) -> None:
+    """Re-run one simulated scenario under a tracer and export the
+    Chrome trace-event file (the printed numbers already shown are
+    unchanged — tracing is measurement-only)."""
+    from repro.obs import Tracer
+
+    sc = parse_scenario(token)
+    if sc.collective is None and sc.fidelity.mode != "packet":
+        return  # nothing time-domain to trace for this token
+    stem = str(sc).replace("/", "__").replace(":", "-").replace("=", "-")
+    tracer = Tracer(name=stem, out_dir=trace_dir)
+    sc.completion_time(trace=tracer)
+    path = tracer.export(os.path.join(trace_dir, f"{stem}.trace.json"))
+    counters = tracer.metrics.to_dict()["counters"]
+    print(f"  trace -> {path} ({len(tracer.events)} events; "
+          f"counters: {', '.join(f'{k}={v:g}' for k, v in counters.items())})")
+    print("  open https://ui.perfetto.dev and drag the file in: one "
+          "process per engine, phases as spans, per-waterfill link_util "
+          "counters")
+
+
 def main(argv: list[str]) -> None:
+    trace_dir = None
+    if "--trace" in argv:
+        i = argv.index("--trace")
+        if i + 1 >= len(argv):
+            sys.exit("--trace needs a directory argument")
+        trace_dir = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
     structural = [s for s in argv if "/" not in s]
     scenario_tokens = [s for s in argv if "/" in s]
     if structural or not argv:
@@ -119,6 +160,8 @@ def main(argv: list[str]) -> None:
     for token in scenario_tokens:
         try:
             print(describe_scenario(token))
+            if trace_dir:
+                trace_scenario(token, trace_dir)
         except ValueError as e:
             print(f"{token}: ERROR: {e}")
     if not argv:

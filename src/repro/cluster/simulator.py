@@ -63,6 +63,7 @@ from repro.core.allocation import HxMeshAllocator
 from repro.netsim import engine as NE
 from repro.netsim import replay as NR
 from repro.netsim import schedule as NSch
+from repro.obs import trace as OT
 
 # Event taxonomy on the shared time core (core.timecore): job arrival /
 # completion, board fail / repair churn, point-in-time bandwidth probes,
@@ -132,9 +133,14 @@ class JobRecord:
 @dataclasses.dataclass
 class AuditEvent:
     time: float
-    kind: str  # place | release | fail | repair | reject
+    kind: str  # place | release | fail | repair | reject | preempt
     jid: int  # -1 for board events
     boards: tuple[tuple[int, int], ...]
+    # (time, seq) identity of the time-core event whose handler logged
+    # this entry: two state changes at the same timestamp stay causally
+    # ordered when rendered as trace tracks.  Deterministic (the queue's
+    # push order is), so audit-identity comparisons still hold.
+    seq: int = -1
 
 
 @dataclasses.dataclass
@@ -288,6 +294,15 @@ class ClusterSimulator:
         if config.replay_collective:
             self.loop.after_event = self._roll_epoch
         self._preempt_pending: set[int] = set()
+        # active tracer, re-fetched at run(); NULL keeps every guarded
+        # emission a no-op outside a tracing() scope
+        self._tr = OT.NULL
+
+    # -- event taxonomy names for trace tracks --------------------------------
+
+    KIND_NAMES = {EV_ARRIVAL: "arrival", EV_FINISH: "finish",
+                  EV_FAIL: "fail", EV_REPAIR: "repair",
+                  EV_PROBE: "probe", EV_PREEMPT: "preempt"}
 
     # -- event plumbing ------------------------------------------------------
 
@@ -297,11 +312,30 @@ class ClusterSimulator:
     def _sample(self, t: float) -> None:
         working = self.alloc.x * self.alloc.y - len(self.alloc.failed)
         self.samples.append((t, self.busy, working, len(self.queue)))
+        if self._tr.enabled:
+            self._tr.counter("cluster", "load", "cluster_load", t,
+                             {"busy": self.busy, "queued": len(self.queue)})
+
+    def _audit(self, t: float, kind: str, jid: int, boards) -> None:
+        """Append one audit entry stamped with the (time, seq) identity
+        of the time-core event being dispatched (seq -1 outside a
+        handler), and mirror it onto the trace's audit track."""
+        ev = self.loop.current
+        seq = ev.seq if ev is not None else -1
+        self.audit.append(AuditEvent(t, kind, jid, boards, seq=seq))
+        if self._tr.enabled:
+            self._tr.instant("cluster", "audit", kind, t,
+                             args={"jid": jid, "seq": seq,
+                                   "n_boards": len(boards)})
 
     # -- run -----------------------------------------------------------------
 
     def run(self, trace: list[TraceJob]) -> SimResult:
         assert trace, "empty trace"
+        self._tr = OT.current()
+        if self._tr.enabled:
+            # instants per dispatched event; chain-wraps the epoch roller
+            self._tr.attach(self.loop, self.KIND_NAMES, "cluster")
         for job in trace:
             self._push(job.arrival, EV_ARRIVAL, job)
         self.last_arrival = max(j.arrival for j in trace)
@@ -313,6 +347,21 @@ class ClusterSimulator:
         t = self.loop.run()
         if self.cfg.replay_collective:
             self._close_epoch(t)  # flush the final epoch's samples
+        if self._tr.enabled:
+            # one span per job that ever placed, on its own track
+            for jid in sorted(self.records):
+                rec = self.records[jid]
+                if rec.start is None:
+                    continue
+                self._tr.complete(
+                    "cluster", f"job:{jid}", rec.status,
+                    rec.start, rec.end if rec.end is not None else t,
+                    args={"size": rec.job.size,
+                          "evictions": rec.n_evictions,
+                          "preemptions": rec.n_preemptions})
+            for k, v in sorted(self._counts.items()):
+                self._tr.metrics.counter(f"cluster.{k}").add(v)
+            self._tr.metrics.counter("cluster.epochs").add(self._n_epochs)
         return SimResult(
             records=self.records,
             samples=self.samples,
@@ -336,7 +385,7 @@ class ClusterSimulator:
         self.records[job.jid] = rec
         if self._hopeless(job):
             rec.status = "rejected"
-            self.audit.append(AuditEvent(t, "reject", job.jid, ()))
+            self._audit(t, "reject", job.jid, ())
         else:
             self.queue.append(QueueEntry(job=job, remaining=job.duration_s))
             self._schedule_pass(t)
@@ -364,7 +413,7 @@ class ClusterSimulator:
         self.alloc.release(jid)
         self.busy -= rec.job.size
         rec.status, rec.end = "finished", t
-        self.audit.append(AuditEvent(t, "release", jid, boards))
+        self._audit(t, "release", jid, boards)
         self._schedule_pass(t)
         self._sample(t)
 
@@ -386,7 +435,7 @@ class ClusterSimulator:
             rec.token += 1  # the in-flight EV_FINISH becomes stale
             rec.n_preemptions += 1
             self._counts["preempt"] += 1
-            self.audit.append(AuditEvent(t, "preempt", vjid, boards))
+            self._audit(t, "preempt", vjid, boards)
             self.queue.insert(0, QueueEntry(
                 job=rec.job, remaining=max(0.0, rec.finish_t - t)))
         self._schedule_pass(t)
@@ -437,7 +486,7 @@ class ClusterSimulator:
                 if self._hopeless(entry.job, probe):
                     rec = self.records[entry.job.jid]
                     rec.status = "rejected"
-                    self.audit.append(AuditEvent(t, "reject", entry.job.jid, ()))
+                    self._audit(t, "reject", entry.job.jid, ())
                 else:
                     keep.append(entry)
             self.queue = keep
@@ -458,8 +507,8 @@ class ClusterSimulator:
             rec.n_evictions += 1
             rec.token += 1
             self.busy -= rec.job.size
-            self.audit.append(AuditEvent(t, "release", victim, boards))
-        self.audit.append(AuditEvent(t, "fail", -1, ((r, c),)))
+            self._audit(t, "release", victim, boards)
+        self._audit(t, "fail", -1, ((r, c),))
         if victim is not None:
             self._remap_or_requeue(t, rec, max(0.0, rec.finish_t - t))
 
@@ -473,11 +522,11 @@ class ClusterSimulator:
             rec.n_remaps += 1
             rec.status = "running"
             self.busy += rec.job.size
-            self.audit.append(AuditEvent(t, "place", rec.job.jid, tuple(pl.boards)))
+            self._audit(t, "place", rec.job.jid, tuple(pl.boards))
             self._finish_later(t, rec, remaining)
         elif self._hopeless(rec.job):
             rec.status = "rejected"
-            self.audit.append(AuditEvent(t, "reject", rec.job.jid, ()))
+            self._audit(t, "reject", rec.job.jid, ())
         else:
             rec.status = "queued"
             self.queue.insert(0, QueueEntry(job=rec.job, remaining=remaining))
@@ -515,7 +564,7 @@ class ClusterSimulator:
     def _on_repair(self, t: float, r: int, c: int) -> None:
         self._counts["repair"] += 1
         self.alloc.repair_board(r, c)
-        self.audit.append(AuditEvent(t, "repair", -1, ((r, c),)))
+        self._audit(t, "repair", -1, ((r, c),))
         self._schedule_pass(t)
         self._sample(t)
 
@@ -545,7 +594,7 @@ class ClusterSimulator:
             if rec.start is None:
                 rec.start = t
             self.busy += entry.job.size
-            self.audit.append(AuditEvent(t, "place", entry.job.jid, tuple(pl.boards)))
+            self._audit(t, "place", entry.job.jid, tuple(pl.boards))
             self._finish_later(t, rec, entry.remaining)
             started.append(entry)
         if started:
@@ -587,6 +636,11 @@ class ClusterSimulator:
         dt = t - self._epoch_t0
         if dt <= 0:
             return
+        if self._tr.enabled and self._epoch_rates:
+            self._tr.complete("cluster", "fabric-epochs",
+                              f"epoch:{self._n_epochs}",
+                              self._epoch_t0, t,
+                              args={"n_jobs": len(self._epoch_rates)})
         for jid, (cont, iso) in self._epoch_rates.items():
             self.records[jid].iter_samples.append(
                 (self._epoch_t0, dt, cont, iso))

@@ -299,29 +299,40 @@ def simulated_time(scenario) -> float:
             f"scenario {sc} has no collective leg; grammar: "
             f"{NS.collective_grammar()}")
     key = str(sc)
+    # While a tracer is active, bypass the memo (recompute, never store)
+    # so a memoized hit can't suppress trace emission — the result is
+    # deterministic, so the measurement-only contract still holds.
+    from repro.obs import trace as OT
+
+    if OT.current().enabled:
+        return _simulate_uncached(sc)
     if key not in _simulated_mem:
-        net = sc.network()
-        if sc.fidelity.mode == "packet":
-            from repro.packetsim import engine as PE
-
-            report = PE.simulate_packet_schedule(
-                net, sc.schedule(net), link_bps=commodel.LINK_BPS,
-                config=sc.fidelity.config())
-        elif sc.fidelity.mode == "calibrated":
-            from repro.packetsim import distill
-
-            cap = distill.rate_cap(
-                sc.topology.family, sc.traffic.name,
-                len(net.active_endpoints()), collective=sc.collective)
-            report = NE.simulate_schedule(
-                net, sc.schedule(net), link_bps=commodel.LINK_BPS,
-                record_timeline=False, link_eff=cap)
-        else:
-            report = NE.simulate_schedule(
-                net, sc.schedule(net), link_bps=commodel.LINK_BPS,
-                record_timeline=False)
-        _simulated_mem[key] = report.time
+        _simulated_mem[key] = _simulate_uncached(sc)
     return _simulated_mem[key]
+
+
+def _simulate_uncached(sc) -> float:
+    net = sc.network()
+    if sc.fidelity.mode == "packet":
+        from repro.packetsim import engine as PE
+
+        report = PE.simulate_packet_schedule(
+            net, sc.schedule(net), link_bps=commodel.LINK_BPS,
+            config=sc.fidelity.config())
+    elif sc.fidelity.mode == "calibrated":
+        from repro.packetsim import distill
+
+        cap = distill.rate_cap(
+            sc.topology.family, sc.traffic.name,
+            len(net.active_endpoints()), collective=sc.collective)
+        report = NE.simulate_schedule(
+            net, sc.schedule(net), link_bps=commodel.LINK_BPS,
+            record_timeline=False, link_eff=cap)
+    else:
+        report = NE.simulate_schedule(
+            net, sc.schedule(net), link_bps=commodel.LINK_BPS,
+            record_timeline=False)
+    return report.time
 
 
 def _load_cache() -> dict:
@@ -595,10 +606,18 @@ class Scenario:
         return self.collective.schedule(self.network() if net is None
                                         else net)
 
-    def completion_time(self) -> float:
+    def completion_time(self, trace=None) -> float:
         """Simulated completion time (seconds) of the collective leg on
         this scenario's fabric (memory-cached by the scenario string; see
-        :func:`simulated_time`)."""
+        :func:`simulated_time`).  Pass a :class:`repro.obs.Tracer` as
+        ``trace`` to record the run — the memo is bypassed while a tracer
+        is active, so the trace is always emitted and the returned time
+        is byte-identical to the untraced one."""
+        if trace is not None:
+            from repro.obs import trace as OT
+
+            with OT.tracing(trace):
+                return simulated_time(self)
         return simulated_time(self)
 
 

@@ -147,6 +147,11 @@ class EventLoop:
         self.queue = queue if queue is not None else EventQueue()
         self._handlers: dict[Any, Callable[[float, Any], None]] = {}
         self.after_event: Callable[[Event], None] | None = None
+        # the event currently being dispatched (None outside step()):
+        # handlers only receive (time, payload), so consumers that need
+        # the (time, seq) identity — audit logs, trace tracks — read it
+        # here instead of widening every handler signature
+        self.current: Event | None = None
 
     @property
     def now(self) -> float:
@@ -172,9 +177,13 @@ class EventLoop:
             raise ValueError(
                 f"no handler registered for event kind {ev.kind!r}"
             ) from None
-        handler(ev.time, ev.payload)
-        if self.after_event is not None:
-            self.after_event(ev)
+        self.current = ev
+        try:
+            handler(ev.time, ev.payload)
+            if self.after_event is not None:
+                self.after_event(ev)
+        finally:
+            self.current = None
         return ev
 
     def run(self, until: float | None = None) -> float:

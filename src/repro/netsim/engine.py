@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core import flowsim as F
 from repro.core.timecore import EventQueue
+from repro.obs import trace as OT
 
 try:
     import scipy.sparse as _sp
@@ -427,6 +428,9 @@ def simulate_schedule(
     phases = schedule.phases
     alpha = schedule.alpha
     foot = cache if cache is not None else FootprintCache(net)
+    # active tracer, fetched once per simulate call; every hot-path
+    # emission below is behind ``if tr.enabled`` (simlint OBS-GUARD)
+    tr = OT.current()
 
     # flatten flows: global slot ids per phase
     pairs: list[tuple[int, int]] = []
@@ -489,6 +493,9 @@ def simulate_schedule(
     def _activate(i: int, now: float) -> None:
         if np.isnan(started[i]):
             started[i] = now
+        if tr.enabled:
+            tr.instant("netsim", "events", f"activate:{phases[i].name}", now,
+                       args={"repeat_left": int(repeat_left[i])})
         slots = phase_slots[i]
         remaining[slots] = fbytes[slots]
         # unroutable flows (self / disconnected) complete instantly
@@ -531,6 +538,8 @@ def simulate_schedule(
     while queue or active.any():
         guard += 1
         if guard > max_events:
+            OT.dump_on_failure(
+                f"netsim non-termination: schedule {schedule.name!r}")
             raise RuntimeError(
                 f"netsim event loop did not terminate (> {max_events} "
                 f"events) — schedule {schedule.name!r}")
@@ -566,6 +575,9 @@ def simulate_schedule(
                     queue.shift(k * dt_cycle)
                     t += k * dt_cycle
                     queue.advance(t)
+                    if tr.enabled:
+                        tr.instant("netsim", "events", "fast_forward", t,
+                                   args={"repeats": int(k)})
                     cycle_mark = None
                 else:
                     cycle_mark = (ids, offs, t,
@@ -580,11 +592,35 @@ def simulate_schedule(
                 n_waterfills += 1
                 cached = np.zeros(n_flows)
                 idx = np.nonzero(active)[0]
-                cached[idx] = waterfill(
-                    W[idx],
-                    cap=(None if link_eff == 1.0
-                         else np.full(W.shape[1], link_eff)))
+                cap_vec = (None if link_eff == 1.0
+                           else np.full(W.shape[1], link_eff))
+                if tr.enabled:
+                    with tr.timer("netsim.waterfill"):
+                        cached[idx] = waterfill(W[idx], cap=cap_vec)
+                else:
+                    cached[idx] = waterfill(W[idx], cap=cap_vec)
                 rate_cache[sig] = cached
+                if tr.enabled:
+                    # per-link utilization at this waterfill epoch: load
+                    # from the finite rates (inf = footprint-less flows
+                    # contribute nothing) over the (possibly derated)
+                    # capacity — the per-link series the rate-cap
+                    # distillation item needs
+                    r_act = np.where(np.isfinite(cached[idx]),
+                                     cached[idx], 0.0)
+                    load = np.asarray(W[idx].T.dot(r_act)).ravel()
+                    util = load / link_eff
+                    tr.metrics.sample_links(t, util)
+                    tr.metrics.counter("netsim.waterfills").add()
+                    tr.counter("netsim", "links", "link_util", t,
+                               {"mean": float(util.mean()) if len(util)
+                                else 0.0,
+                                "max": float(util.max()) if len(util)
+                                else 0.0})
+                    tr.counter("netsim", "flows", "active_flows", t,
+                               {"n": int(len(idx))})
+            elif tr.enabled:
+                tr.metrics.counter("netsim.rate_cache_hits").add()
             rates = cached
         t_act = queue.next_time()
         if has_active:
@@ -594,6 +630,8 @@ def simulate_schedule(
                                np.inf)
             dt_fin = float(dts.min()) if len(dts) else np.inf
             if not np.isfinite(dt_fin) and not np.isfinite(t_act):
+                OT.dump_on_failure(
+                    f"netsim deadlock: schedule {schedule.name!r}")
                 raise RuntimeError(
                     "netsim deadlock: active flows with zero rate and no "
                     "pending activations")
@@ -646,6 +684,13 @@ def simulate_schedule(
     for i, g in enumerate(groups):
         e = float(ended[i]) if not np.isnan(ended[i]) else t
         group_end[g] = max(group_end.get(g, 0.0), e)
+    if tr.enabled:
+        # one span per collective phase, on its group's track
+        for i, (name, t0, t1) in enumerate(spans):
+            tr.complete("netsim", groups[i], name, t0, t1,
+                        args={"repeats": int(total_repeats[i])})
+        tr.metrics.counter("netsim.events").add(n_events)
+        tr.metrics.counter("netsim.unroutable").add(n_unroutable)
     return SimReport(
         time=t,
         phase_spans=spans,

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import flowsim as F
 from repro.netsim.engine import FootprintCache, waterfill
+from repro.obs import trace as OT
 
 
 def steady_iteration_times(
@@ -59,9 +60,23 @@ def steady_iteration_times(
                 pairs.append((int(s), int(t)))
                 fbytes.append(float(b))
             slots[(key, pi)] = ids
+    tr = OT.current()
     if pairs:
         W = foot.matrix(pairs)
-        rates = waterfill(W) * link_bps
+        if tr.enabled:
+            with tr.timer("replay.waterfill"):
+                rates = waterfill(W) * link_bps
+            # the joint-waterfill link loads of this fabric epoch (same
+            # series the event engine samples per waterfill)
+            r_fin = np.where(np.isfinite(rates), rates, 0.0) / link_bps
+            util = np.asarray(W.T.dot(r_fin)).ravel()
+            tr.metrics.sample_links(0.0, util)
+            tr.metrics.counter("replay.waterfills").add()
+            tr.instant("replay", "epochs", "joint_waterfill", 0.0,
+                       args={"n_tenants": len(schedules),
+                             "n_flows": len(pairs)})
+        else:
+            rates = waterfill(W) * link_bps
     else:
         rates = np.zeros(0)
     fb = np.asarray(fbytes)

@@ -1,0 +1,53 @@
+"""repro.obs — the observability layer (DESIGN.md §13).
+
+Three pillars, zero overhead when disabled:
+
+* :mod:`repro.obs.trace` — sim-time tracing with Chrome trace-event
+  (Perfetto) export, the process-wide active-tracer slot, and the
+  crash-dump entry point;
+* :mod:`repro.obs.metrics` — counters/gauges/histograms plus the
+  per-link utilization time series and per-port VOQ occupancy
+  histograms;
+* :mod:`repro.obs.profile` — wall-clock phase timers (the one module
+  group allowlisted for ``WALL-CLOCK`` reads) and the flight-recorder
+  ring buffer.
+
+Engines fetch the active tracer once per simulate call::
+
+    from repro.obs import trace as OT
+    tr = OT.current()
+    ...
+    if tr.enabled:
+        tr.instant("netsim", "phases", ph.name, now)
+
+and callers opt in with::
+
+    with OT.tracing(OT.Tracer(name="netsim")) as tr:
+        run_simulation(...)
+    tr.export("out/netsim.trace.json")
+
+Hard contract: instrumentation is measurement-only — every simulated
+truth is byte-identical with tracing on vs off.
+"""
+
+from repro.obs.trace import (  # noqa: F401
+    NULL,
+    NullTracer,
+    Tracer,
+    current,
+    dump_on_failure,
+    set_tracer,
+    tracing,
+    validate_trace,
+)
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.profile import (  # noqa: F401
+    FlightRecorder,
+    PhaseStat,
+    ProfileRegistry,
+)

@@ -1,0 +1,188 @@
+"""Metric primitives for the observability layer: counters, gauges,
+histograms, and the per-link utilization series.
+
+A :class:`MetricsRegistry` is owned by one :class:`repro.obs.trace.Tracer`
+and filled by the engines while that tracer is active:
+
+* the netsim engine samples **per-link utilization** at every waterfill
+  epoch (:meth:`MetricsRegistry.sample_links`) — the raw material the
+  per-link (not uniform) rate-cap distillation needs
+  (``ROADMAP.md``: close the residual torus gap by per-port occupancy);
+* the packet engine observes **per-port VOQ occupancy** into a histogram
+  at each cycle milestone;
+* anything may bump named counters/gauges (events, waterfills, cache
+  hits).
+
+Everything here runs in *simulated* time and is measurement-only: no
+metric read ever feeds back into engine state, and every exported dict
+is assembled in sorted-key order so reports are byte-stable under
+``PYTHONHASHSEED`` variation (asserted by ``tests/test_obs.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+# Default bin edges for occupancy-style histograms: powers of two up to
+# a deep queue, the shape VOQ/FIFO depths take in repro.packetsim.
+DEFAULT_OCC_EDGES = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+
+
+@dataclasses.dataclass
+class Counter:
+    """A monotonically increasing count."""
+
+    value: float = 0.0
+
+    def add(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+@dataclasses.dataclass
+class Gauge:
+    """A last-write-wins instantaneous value."""
+
+    value: float = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """A fixed-bin histogram: ``edges`` are the lower bounds of each bin
+    (the last bin is open-ended).  Observation order never changes the
+    counts, so histograms are deterministic however the caller iterates
+    its sources."""
+
+    def __init__(self, edges=DEFAULT_OCC_EDGES):
+        self.edges = tuple(float(e) for e in edges)
+        if list(self.edges) != sorted(set(self.edges)):
+            raise ValueError(f"histogram edges must be increasing: {edges}")
+        self.counts = [0] * len(self.edges)
+        self.n = 0
+        self.total = 0.0
+        self.max = 0.0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        # rightmost bin whose lower edge <= v (values below edges[0]
+        # clamp into the first bin)
+        i = int(np.searchsorted(self.edges, v, side="right")) - 1
+        self.counts[max(0, i)] += 1
+        self.n += 1
+        self.total += v
+        if v > self.max:
+            self.max = v
+
+    def observe_many(self, values) -> None:
+        for v in values:
+            self.observe(v)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "edges": list(self.edges),
+            "counts": list(self.counts),
+            "n": self.n,
+            "mean": self.mean,
+            "max": self.max,
+        }
+
+
+class MetricsRegistry:
+    """Named metric store: create-on-first-use counters/gauges/histograms
+    plus the per-link utilization time series."""
+
+    def __init__(self):
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+        # (sim time, per-link utilization vector) per waterfill epoch;
+        # vectors may change length across fabrics — each sample carries
+        # its own
+        self.link_samples: list[tuple[float, np.ndarray]] = []
+
+    # -- named metrics --------------------------------------------------------
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str, edges=DEFAULT_OCC_EDGES) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(edges)
+        return h
+
+    # -- link utilization series ----------------------------------------------
+
+    def sample_links(self, t: float, util) -> None:
+        """Record one per-link utilization snapshot (fraction of capacity
+        per directed link bundle) at simulated time ``t`` — the netsim
+        engine calls this once per *fresh* waterfill (rate-cache misses),
+        i.e. once per distinct active-flow set."""
+        self.link_samples.append(
+            (float(t), np.asarray(util, dtype=np.float64)))
+
+    def link_utilization_summary(self, saturated: float = 0.999) -> dict:
+        """Aggregate the link series: sample count, link count, the mean
+        and max utilization over all samples, per-link duration-weighted
+        means (consecutive-sample spans; the last sample gets zero
+        weight), and how many links ever saturated.  Empty dict without
+        samples."""
+        if not self.link_samples:
+            return {}
+        n_links = len(self.link_samples[0][1])
+        same = all(len(u) == n_links for _, u in self.link_samples)
+        utils = [u for _, u in self.link_samples]
+        out = {
+            "n_samples": len(self.link_samples),
+            "n_links": n_links if same else None,
+            "mean": float(np.mean([float(u.mean()) if len(u) else 0.0
+                                   for u in utils])),
+            "max": float(max((float(u.max()) for u in utils if len(u)),
+                             default=0.0)),
+            "n_ever_saturated": int(len(
+                set().union(*(set(np.nonzero(u >= saturated)[0].tolist())
+                              for u in utils)))) if same else None,
+        }
+        if same and len(self.link_samples) >= 2:
+            ts = np.asarray([t for t, _ in self.link_samples])
+            dts = np.diff(ts)
+            dur = math.fsum(float(d) for d in dts)
+            if dur > 0:
+                acc = np.zeros(n_links)
+                for k, d in enumerate(dts):
+                    acc += utils[k] * float(d)
+                per_link = acc / dur
+                out["per_link_mean"] = [round(float(v), 6)
+                                        for v in per_link]
+        return out
+
+    # -- export ---------------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """JSON-able snapshot, keys sorted for byte-stable reports."""
+        return {
+            "counters": {k: self._counters[k].value
+                         for k in sorted(self._counters)},
+            "gauges": {k: self._gauges[k].value
+                       for k in sorted(self._gauges)},
+            "histograms": {k: self._histograms[k].to_dict()
+                           for k in sorted(self._histograms)},
+            "link_utilization": self.link_utilization_summary(),
+        }

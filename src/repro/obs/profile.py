@@ -1,0 +1,96 @@
+"""Wall-clock profiling and the crash flight recorder.
+
+This is the one corner of the simulation stack allowed to read the wall
+clock (``simlint``'s ``WALL-CLOCK`` rule allowlists ``src/repro/obs/``):
+:class:`ProfileRegistry` hands out named phase timers the engines wrap
+around their hot paths (BFS chunks, waterfill levels, crossbar cycles),
+and :class:`FlightRecorder` keeps a bounded ring of the most recent
+trace records so a simulation assertion failure can dump its immediate
+history for post-mortem debugging.
+
+Wall-clock readings are *reported* (profile block of the trace export)
+but never fed back into simulation state — the measurement-only
+contract of DESIGN.md §13.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import time
+
+
+class PhaseStat:
+    """Accumulated wall-clock stats for one named phase."""
+
+    __slots__ = ("calls", "total_s", "max_s")
+
+    def __init__(self):
+        self.calls = 0
+        self.total_s = 0.0
+        self.max_s = 0.0
+
+    def add(self, dt_s: float) -> None:
+        self.calls += 1
+        self.total_s += dt_s
+        if dt_s > self.max_s:
+            self.max_s = dt_s
+
+    def to_dict(self) -> dict:
+        return {
+            "calls": self.calls,
+            "total_s": round(self.total_s, 6),
+            "max_s": round(self.max_s, 6),
+        }
+
+
+class ProfileRegistry:
+    """Named wall-clock phase timers (create-on-first-use)."""
+
+    def __init__(self):
+        self._stats: dict[str, PhaseStat] = {}
+
+    def stat(self, name: str) -> PhaseStat:
+        s = self._stats.get(name)
+        if s is None:
+            s = self._stats[name] = PhaseStat()
+        return s
+
+    @contextlib.contextmanager
+    def timer(self, name: str):
+        """``with profile.timer("netsim.waterfill"): ...`` — accumulate
+        the enclosed wall time under ``name``."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.stat(name).add(time.perf_counter() - t0)
+
+    def to_dict(self) -> dict:
+        return {k: self._stats[k].to_dict() for k in sorted(self._stats)}
+
+
+class FlightRecorder:
+    """Bounded ring buffer of recent trace records.
+
+    Every record the active tracer emits is also pushed here; when an
+    engine hits a simulation assertion (deadlock, non-termination) it
+    calls :func:`repro.obs.trace.dump_on_failure`, which snapshots this
+    ring so the last ``maxlen`` events leading up to the failure survive
+    the raised exception.
+    """
+
+    def __init__(self, maxlen: int = 4096):
+        self.maxlen = maxlen
+        self._ring: collections.deque = collections.deque(maxlen=maxlen)
+        self.n_seen = 0
+
+    def push(self, record: dict) -> None:
+        self._ring.append(record)
+        self.n_seen += 1
+
+    def snapshot(self) -> list[dict]:
+        return list(self._ring)
+
+    def __len__(self) -> int:
+        return len(self._ring)

@@ -1,0 +1,320 @@
+"""Sim-time tracing: Chrome trace-event export for every engine.
+
+One :class:`Tracer` is installed as *the* active tracer (a process-wide
+slot, like the root logger) via :func:`tracing`; engines fetch it once
+per simulate call with :func:`current` and guard every hot-path emission
+with ``if tr.enabled:`` (the ``OBS-GUARD`` simlint rule enforces this).
+The default active tracer is :data:`NULL`, a :class:`NullTracer` whose
+``enabled`` is ``False`` and whose methods are no-ops — disabled mode
+costs one attribute read per guard and nothing else.
+
+Records accumulate as Chrome trace-event dicts (the format Perfetto and
+``chrome://tracing`` load):
+
+* ``ph="X"`` complete spans (collective phases, job lifetimes, replay
+  epochs) with ``ts``/``dur`` in microseconds of *simulated* time;
+* ``ph="i"`` instants (event-loop dispatches, phase activations,
+  failures);
+* ``ph="C"`` counters (active flows, packets in flight, link
+  utilization);
+* ``ph="M"`` metadata naming the pid/tid tracks (one process per
+  engine/fabric, one thread per job / collective phase / port group).
+
+``export()`` writes ``{"traceEvents": [...], "displayTimeUnit": "ms",
+"otherData": {...}}`` with the metrics and profile registries embedded
+under ``otherData`` — one file per benchmark suite when
+``benchmarks/run.py --quick --trace <dir>`` runs.
+
+The hard contract (DESIGN.md §13, mirroring the replay rule of §10):
+tracing is **measurement-only**.  Engines may branch on ``tr.enabled``
+only around pure emissions; quick-suite SUMMARY truths are byte-identical
+with tracing on vs off (asserted by ``tests/test_obs.py``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+from typing import Any
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import FlightRecorder, ProfileRegistry
+
+# simulated seconds (or cycles) -> trace-event microseconds
+_US = 1e6
+
+
+class NullTracer:
+    """The disabled tracer: ``enabled`` is False and every API is a
+    no-op, so un-guarded cold-path calls stay safe while hot paths skip
+    work entirely behind ``if tr.enabled:``."""
+
+    enabled = False
+
+    def complete(self, proc, track, name, t0, t1, args=None) -> None:
+        pass
+
+    def instant(self, proc, track, name, t, args=None) -> None:
+        pass
+
+    def counter(self, proc, track, name, t, values=None) -> None:
+        pass
+
+    def timer(self, name):
+        return contextlib.nullcontext()
+
+    def attach(self, loop, kind_names, proc, track="events"):
+        pass
+
+    def crash_dump(self, reason: str) -> None:
+        pass
+
+    @property
+    def metrics(self):
+        # a throwaway registry: writes vanish, reads see zeros
+        return MetricsRegistry()
+
+
+class Tracer:
+    """An enabled tracer collecting Chrome trace events plus metrics and
+    wall-clock profiles for one run (typically one benchmark suite)."""
+
+    enabled = True
+
+    def __init__(self, name: str = "trace", ring: int = 4096,
+                 out_dir: str | None = None):
+        self.name = name
+        self.out_dir = out_dir
+        self.events: list[dict] = []
+        self.metrics = MetricsRegistry()
+        self.profile = ProfileRegistry()
+        self.recorder = FlightRecorder(maxlen=ring)
+        self.last_crash: dict | None = None
+        self._pids: dict[str, int] = {}
+        self._tids: dict[tuple[str, str], int] = {}
+
+    # -- track allocation -----------------------------------------------------
+
+    def _pid(self, proc: str) -> int:
+        pid = self._pids.get(proc)
+        if pid is None:
+            pid = self._pids[proc] = len(self._pids) + 1
+            self.events.append({
+                "name": "process_name", "ph": "M", "pid": pid,
+                "args": {"name": proc},
+            })
+        return pid
+
+    def _tid(self, proc: str, track: str) -> tuple[int, int]:
+        pid = self._pid(proc)
+        key = (proc, track)
+        tid = self._tids.get(key)
+        if tid is None:
+            tid = self._tids[key] = sum(
+                1 for (p, _t) in self._tids if p == proc) + 1
+            self.events.append({
+                "name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+                "args": {"name": track},
+            })
+        return pid, tid
+
+    def _emit(self, record: dict) -> None:
+        self.events.append(record)
+        self.recorder.push(record)
+
+    # -- emission API ---------------------------------------------------------
+
+    def complete(self, proc: str, track: str, name: str,
+                 t0: float, t1: float, args: dict | None = None) -> None:
+        """A ``ph="X"`` span covering simulated ``[t0, t1]``."""
+        pid, tid = self._tid(proc, track)
+        rec = {
+            "name": name, "ph": "X", "pid": pid, "tid": tid,
+            "ts": float(t0) * _US, "dur": max(0.0, float(t1 - t0)) * _US,
+        }
+        if args:
+            rec["args"] = args
+        self._emit(rec)
+
+    def instant(self, proc: str, track: str, name: str, t: float,
+                args: dict | None = None) -> None:
+        """A ``ph="i"`` thread-scoped instant at simulated ``t``."""
+        pid, tid = self._tid(proc, track)
+        rec = {
+            "name": name, "ph": "i", "pid": pid, "tid": tid,
+            "ts": float(t) * _US, "s": "t",
+        }
+        if args:
+            rec["args"] = args
+        self._emit(rec)
+
+    def counter(self, proc: str, track: str, name: str, t: float,
+                values: dict | None = None) -> None:
+        """A ``ph="C"`` counter sample (Perfetto renders one area chart
+        per counter name, stacked by the keys of ``values``)."""
+        pid, tid = self._tid(proc, track)
+        self._emit({
+            "name": name, "ph": "C", "pid": pid, "tid": tid,
+            "ts": float(t) * _US, "args": dict(values or {}),
+        })
+
+    def timer(self, name: str):
+        """Wall-clock phase timer (see :mod:`repro.obs.profile`)."""
+        return self.profile.timer(name)
+
+    # -- event-loop hook ------------------------------------------------------
+
+    def attach(self, loop, kind_names: dict, proc: str,
+               track: str = "events") -> None:
+        """Hook ``loop.after_event`` so every dispatched
+        :class:`~repro.core.timecore.Event` lands as an instant on the
+        ``track`` track of ``proc``, named via ``kind_names`` (unknown
+        kinds stringify).  Chain-wraps any previously installed hook
+        (the cluster simulator's epoch roller lives there) so both run.
+        """
+        prev = loop.after_event
+        kinds = dict(kind_names)
+
+        def _after(ev):
+            if prev is not None:
+                prev(ev)
+            self.instant(proc, track, kinds.get(ev.kind, str(ev.kind)),
+                         ev.time, args={"seq": ev.seq})
+
+        loop.after_event = _after
+
+    # -- crash dump -----------------------------------------------------------
+
+    def crash_dump(self, reason: str) -> None:
+        """Snapshot the flight-recorder ring (the last ``ring`` records
+        before a simulation assertion failure) into ``last_crash`` and,
+        when ``out_dir`` is set, onto disk as
+        ``<name>.crash.trace.json``."""
+        self.last_crash = {
+            "reason": reason,
+            "n_seen": self.recorder.n_seen,
+            "n_dumped": len(self.recorder),
+            "traceEvents": self.recorder.snapshot(),
+            "displayTimeUnit": "ms",
+            "otherData": {"tool": "repro.obs", "name": self.name,
+                          "crash": reason},
+        }
+        if self.out_dir:
+            os.makedirs(self.out_dir, exist_ok=True)
+            path = os.path.join(self.out_dir,
+                                f"{self.name}.crash.trace.json")
+            with open(path, "w") as f:
+                json.dump(self.last_crash, f)
+
+    # -- export ---------------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "traceEvents": list(self.events),
+            "displayTimeUnit": "ms",
+            "otherData": {
+                "tool": "repro.obs",
+                "name": self.name,
+                "metrics": self.metrics.to_dict(),
+                "profile": self.profile.to_dict(),
+            },
+        }
+
+    def export(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f)
+        return path
+
+
+# -- the active-tracer slot ---------------------------------------------------
+
+NULL = NullTracer()
+_current: Any = NULL
+
+
+def current():
+    """The active tracer (:data:`NULL` unless inside :func:`tracing`).
+    Engines call this once per simulate call, never per event."""
+    return _current
+
+
+def set_tracer(tracer) -> None:
+    global _current
+    _current = tracer if tracer is not None else NULL
+
+
+@contextlib.contextmanager
+def tracing(tracer):
+    """Install ``tracer`` as the active tracer for the enclosed block
+    (``tracing(None)`` is a no-op pass-through).  Restores the previous
+    tracer on exit, so scopes nest."""
+    global _current
+    prev = _current
+    _current = tracer if tracer is not None else prev
+    try:
+        yield _current
+    finally:
+        _current = prev
+
+
+def dump_on_failure(reason: str) -> None:
+    """Engines call this on simulation assertion failures (deadlock,
+    non-termination) just before raising: if a tracer is active, its
+    flight-recorder ring is dumped for post-mortem debugging."""
+    tr = _current
+    if tr.enabled:
+        tr.crash_dump(reason)
+
+
+# -- trace-file validation (validate_json.py --trace) -------------------------
+
+def validate_trace(trace: dict, schema: dict) -> list[str]:
+    """Check an exported trace dict against the ``trace_schema`` block
+    of ``benchmarks/schema.json``: top-level keys, per-phase required
+    fields, numeric non-negative timestamps/durations, and that every
+    pid/tid in use is named by an ``"M"`` metadata record — the
+    properties Perfetto needs to render the file.  Returns one message
+    per violation."""
+    rules = schema["trace_schema"]
+    errors: list[str] = []
+    for k in rules["required_keys"]:
+        if k not in trace:
+            errors.append(f"missing top-level key {k!r}")
+    events = trace.get("traceEvents", [])
+    if not isinstance(events, list):
+        return errors + ["traceEvents is not a list"]
+    if len(events) < rules.get("min_events", 1):
+        errors.append(
+            f"{len(events)} trace events < min {rules.get('min_events', 1)}")
+    named_pids: set = set()
+    named_tids: set = set()
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in rules["phases"]:
+            errors.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        for k in rules["phases"][ph]:
+            if k not in ev:
+                errors.append(f"event {i} (ph={ph}): missing key {k!r}")
+        for k in ("ts", "dur"):
+            if k in ev and (not isinstance(ev[k], (int, float))
+                            or ev[k] < 0):
+                errors.append(f"event {i}: {k}={ev[k]!r} not a "
+                              f"non-negative number")
+        if ph == "M":
+            if ev.get("name") == "process_name":
+                named_pids.add(ev.get("pid"))
+            elif ev.get("name") == "thread_name":
+                named_tids.add((ev.get("pid"), ev.get("tid")))
+        elif "pid" in ev:
+            if ev["pid"] not in named_pids:
+                errors.append(f"event {i}: pid {ev['pid']} has no "
+                              f"process_name metadata")
+            if "tid" in ev and (ev["pid"], ev["tid"]) not in named_tids:
+                errors.append(f"event {i}: tid {ev['tid']} has no "
+                              f"thread_name metadata")
+    return errors

@@ -69,8 +69,13 @@ import numpy as np
 
 from repro.core import flowsim as F
 from repro.core.timecore import EventLoop
+from repro.obs import trace as OT
 
 from repro.packetsim.spec import DEFAULT_PACKET_BYTES
+
+# cycle-milestone cadence when tracing: one occupancy/VOQ sample per
+# this many cycles (power of two; sampled via a bitmask)
+TRACE_CYCLE_STRIDE = 256
 
 # timecore event kinds (names prefixed to stay disjoint from netsim's
 # "phase" and the cluster's kinds when queues are ever merged)
@@ -502,6 +507,7 @@ def simulate_packet_schedule(
     cfg = config or PacketConfig()
     phases = schedule.phases
     alpha = schedule.alpha
+    tr = OT.current()
     n_pkts = estimate_packets(schedule, cfg.packet_bytes)
     if n_pkts > cfg.max_packets:
         raise ValueError(
@@ -613,6 +619,9 @@ def simulate_packet_schedule(
     def _activate(i: int, now: float) -> None:
         if started[i] is None:
             started[i] = now
+        if tr.enabled:
+            tr.instant("packetsim", "events", f"activate:{phases[i].name}",
+                       now, args={"repeat_left": int(repeat_left[i])})
         live = 0
         for fid in phase_slots[i]:
             if not routable[fid]:
@@ -643,9 +652,24 @@ def simulate_packet_schedule(
         state["now"] = t + cycle_dt  # ejections complete at cycle end
         moved = eng.step(state["cycle"])
         state["cycle"] += 1
+        if tr.enabled and state["cycle"] % TRACE_CYCLE_STRIDE == 0:
+            # cycle milestone: fabric occupancy counters plus the
+            # per-port VOQ occupancy histogram (per-port queueing — the
+            # signal the per-link rate-cap distillation wants)
+            tr.counter("packetsim", "occupancy", "pkt_occupancy", t,
+                       {"in_system": eng.n_system,
+                        "injected": eng.injected_pkts,
+                        "ejected": eng.ejected_pkts})
+            tr.metrics.histogram("packetsim.voq_per_port").observe_many(
+                eng.voq_load)
+            tr.instant("packetsim", "events", "cycle_milestone", t,
+                       args={"cycle": state["cycle"], "moved": moved})
         if live_flows[0] > 0 or eng.n_system > 0:
             if moved == 0:
                 if not loop.queue:
+                    OT.dump_on_failure(
+                        f"packetsim deadlock: schedule {schedule.name!r} "
+                        f"cycle {state['cycle']}")
                     raise RuntimeError(
                         f"packetsim deadlock: {eng.n_system} packets "
                         f"frozen in schedule {schedule.name!r} at cycle "
@@ -671,6 +695,14 @@ def simulate_packet_schedule(
               ended[i] if ended[i] is not None else t_end)
              for i, ph in enumerate(phases)]
     lat_arr = np.asarray(latencies) if latencies else np.zeros(0)
+    if tr.enabled:
+        for i, (name, t0, t1) in enumerate(spans):
+            tr.complete("packetsim", phases[i].group, name, t0, t1,
+                        args={"repeats": int(total_repeats[i])})
+        tr.metrics.counter("packetsim.cycles").add(state["cycle"])
+        tr.metrics.counter("packetsim.packets").add(eng.injected_pkts)
+        tr.metrics.gauge("packetsim.max_voq").set(eng.max_voq)
+        tr.metrics.gauge("packetsim.max_inq").set(eng.max_inq)
     return PacketReport(
         time=t_end,
         cycles=state["cycle"],
@@ -786,14 +818,23 @@ def saturation_fraction(
 
     loop = EventLoop()
     state = {"cycle": 0}
+    tr = OT.current()
 
     def _on_cycle(t, _):
         c = state["cycle"]
         moved = eng.step(c)
         if moved == 0 and eng.n_system > 0:
+            OT.dump_on_failure(f"packetsim saturation deadlock: cycle {c}")
             raise RuntimeError(
                 f"packetsim deadlock at cycle {c}: {eng.n_system} packets "
                 "frozen under saturation injection")
+        if tr.enabled and (c + 1) % TRACE_CYCLE_STRIDE == 0:
+            tr.counter("packetsim", "occupancy", "pkt_occupancy", t,
+                       {"in_system": eng.n_system,
+                        "injected": eng.injected_pkts,
+                        "ejected": eng.ejected_pkts})
+            tr.metrics.histogram("packetsim.voq_per_port").observe_many(
+                eng.voq_load)
         state["cycle"] = c + 1
         if c + 1 < total:
             loop.push(t + 1.0, EV_CYCLE)
@@ -814,6 +855,12 @@ def saturation_fraction(
     # the unit, exactly the flowsim level normalization)
     fracs = [delivered_pkts[s] / measure / lpe for s in active_sources]
     lat_arr = np.asarray(latencies) if latencies else np.zeros(0)
+    if tr.enabled:
+        tr.complete("packetsim", "saturation", "warmup", 0.0, float(warmup))
+        tr.complete("packetsim", "saturation", "measure",
+                    float(warmup), float(total),
+                    args={"fraction": float(np.mean(fracs))})
+        tr.metrics.counter("packetsim.cycles").add(state["cycle"])
     return SaturationReport(
         fraction=float(np.mean(fracs)),
         min_source_fraction=float(np.min(fracs)),

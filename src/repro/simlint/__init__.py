@@ -12,8 +12,10 @@ Five rule groups (registered in a rule registry mirroring
 ``registry.register_family`` / ``traffic.register_traffic``):
 
 * **determinism** — iteration over sets feeding simulator state
-  (``SET-ITER``), unseeded RNG construction (``UNSEEDED-RNG``), and
-  wall-clock reads reachable from simulation modules (``WALL-CLOCK``);
+  (``SET-ITER``), unseeded RNG construction (``UNSEEDED-RNG``),
+  wall-clock reads reachable from simulation modules (``WALL-CLOCK``),
+  and unguarded tracer emissions on per-event hot paths
+  (``OBS-GUARD`` — :mod:`repro.simlint.obsguard`);
 * **events** — mutation of :class:`~repro.core.timecore.EventQueue`
   internals or the clock outside the handler API (``QUEUE-INTERNALS``)
   and handlers that push events into the past (``PAST-PUSH``);
@@ -62,3 +64,4 @@ from repro.simlint import events as _events  # noqa: F401,E402
 from repro.simlint import units as _units  # noqa: F401,E402
 from repro.simlint import scenario as _scenario  # noqa: F401,E402
 from repro.simlint import dataflow as _dataflow  # noqa: F401,E402
+from repro.simlint import obsguard as _obsguard  # noqa: F401,E402

@@ -50,6 +50,12 @@ FLOAT_SCOPE = (
     "src/repro/cluster/",
 )
 
+# Observability guard: engines emitting trace/metric records inside
+# per-event / per-cycle loops must do so behind ``if tr.enabled`` so
+# disabled-mode hot paths never pay instrumentation costs.  The obs
+# layer itself is excluded (its internals run only when enabled).
+OBS_SCOPE = SIM_SCOPE
+
 # Scenario string literals are validated wherever experiments are named.
 SCENARIO_SCOPE = ("tests/", "benchmarks/", "examples/")
 
@@ -72,6 +78,9 @@ ALLOWLIST: tuple[tuple[str, str, str], ...] = (
      "training loop reports real step timing"),
     ("WALL-CLOCK", "src/repro/simlint/",
      "the linter times its own run for the JSON report"),
+    ("WALL-CLOCK", "src/repro/obs/",
+     "the profiling pillar measures wall-clock phase timings by design; "
+     "readings are reported, never fed back into simulated state"),
     ("UNSEEDED-RNG", "src/repro/cluster/traces.py",
      "trace generators must take an explicit seed; entry kept so any "
      "future unseeded draw in this file is a conscious decision"),

@@ -1,0 +1,111 @@
+"""Observability guard rule: OBS-GUARD.
+
+The obs layer's zero-overhead-when-disabled contract (DESIGN.md §13)
+rests on one convention: engines fetch the active tracer once per
+simulate call (``tr = OT.current()``) and wrap every emission that sits
+on a per-event or per-cycle path in ``if tr.enabled:``.  The
+:class:`~repro.obs.trace.NullTracer` makes an unguarded call *safe* but
+not *free* — argument construction (f-strings, dict literals) runs every
+event even when the no-op swallows it.  This rule finds tracer-API calls
+lexically inside a loop with no ``.enabled`` guard anywhere above them.
+
+Heuristics (deliberately name-based, matching the repo convention):
+
+* a *tracer call* is a ``Call`` of an emission method
+  (:data:`EMIT_METHODS`) whose function expression mentions a tracer
+  binding — a name or attribute segment in :data:`TRACER_NAMES`
+  (``tr``, ``tracer``, ``_tr``, ``_tracer``) — e.g. ``tr.instant(...)``,
+  ``self._tr.counter(...)``,
+  ``tr.metrics.histogram(...).observe_many(...)``; a generic local that
+  happens to be named ``tr`` (``tr.append(...)``) never fires;
+* *inside a loop* means a ``for``/``while`` ancestor within the same
+  function body (crossing a nested ``def``/``lambda`` resets the
+  search — closures are charged where they are defined, not called);
+* *guarded* means any ``if``/``elif``/ternary ancestor (inside or
+  outside the loop) whose test reads an ``.enabled`` attribute.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.simlint import config
+from repro.simlint.framework import FileContext, register_rule
+
+# the conventional local bindings of the active tracer
+TRACER_NAMES = frozenset({"tr", "tracer", "_tr", "_tracer"})
+
+# the emission surface of the tracer/metrics/profile API; a call only
+# counts as a tracer call when its method is one of these (so a generic
+# local that happens to be named ``tr`` — a list, say — never fires)
+EMIT_METHODS = frozenset({
+    "complete", "instant", "counter", "gauge", "histogram", "timer",
+    "sample_links", "add", "set", "observe", "observe_many", "attach",
+    "crash_dump",
+})
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+_LOOP_NODES = (ast.For, ast.AsyncFor, ast.While)
+
+
+def _tracer_segments(func: ast.expr) -> bool:
+    """True when the call's function expression mentions a tracer
+    binding: the attribute chain's root name or any intermediate
+    attribute is in :data:`TRACER_NAMES`."""
+    node = func
+    while True:
+        if isinstance(node, ast.Attribute):
+            if node.attr in TRACER_NAMES:
+                return True
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func  # chained: tr.metrics.counter("x").add()
+        elif isinstance(node, ast.Name):
+            return node.id in TRACER_NAMES
+        else:
+            return False
+
+
+def _test_reads_enabled(test: ast.expr) -> bool:
+    return any(isinstance(sub, ast.Attribute) and sub.attr == "enabled"
+               for sub in ast.walk(test))
+
+
+@register_rule(
+    "OBS-GUARD", "determinism",
+    "trace/metric emission inside a per-event or per-cycle loop without "
+    "an `if tr.enabled` guard; disabled-mode hot paths must stay free",
+    scope=config.OBS_SCOPE)
+def check_obs_guard(ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+    tree = ctx.tree
+    if tree is None:
+        return
+    parents = ctx.parents
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in EMIT_METHODS
+                and _tracer_segments(node.func)):
+            continue
+        in_loop = False
+        guarded = False
+        cur = node
+        while True:
+            parent = parents.get(cur)
+            if parent is None or isinstance(parent, _FUNC_NODES):
+                break
+            if isinstance(parent, _LOOP_NODES):
+                # the loop's own test/iter is evaluated per iteration
+                # too; only the else block runs once — close enough to
+                # charge everything under the loop
+                in_loop = True
+            elif (isinstance(parent, (ast.If, ast.IfExp))
+                    and _test_reads_enabled(parent.test)):
+                guarded = True
+            cur = parent
+        if in_loop and not guarded:
+            yield (node.lineno, node.col_offset,
+                   "tracer call inside a loop without an `if tr.enabled` "
+                   "guard; wrap the emission (or hoist it out of the "
+                   "per-event path) so disabled mode stays zero-overhead")

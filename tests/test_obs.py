@@ -1,0 +1,304 @@
+"""Observability layer tests: the measurement-only contract (results
+byte-identical with tracing on vs off), trace-file schema round-trips,
+the crash flight recorder, metric determinism under ``PYTHONHASHSEED``
+variation, and the ``Event.seq`` -> ``AuditEvent.seq`` threading.
+
+The byte-identity tests are the acceptance gate of DESIGN.md §13: the
+quick netsim and multitenant suites run twice in-process — once under an
+active :class:`repro.obs.Tracer`, once without — and their SUMMARY rows
+must serialize to the same bytes.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.obs import trace as OT
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.profile import FlightRecorder
+from repro.core import registry as R
+
+REPO = Path(__file__).resolve().parent.parent
+
+RING_SC = "hx2-4x4/coll=ring:s64MiB"
+PACKET_SC = "hx2-2x2/coll=ring:s256KiB/fidelity=packet"
+
+
+def load_schema() -> dict:
+    return json.load(open(REPO / "benchmarks" / "schema.json"))
+
+
+# ---------------------------------------------------------------------------
+# the active-tracer slot
+# ---------------------------------------------------------------------------
+
+
+def test_default_tracer_is_null():
+    tr = OT.current()
+    assert tr is OT.NULL
+    assert tr.enabled is False
+    # unguarded cold-path emissions are safe no-ops
+    tr.complete("p", "t", "x", 0.0, 1.0)
+    tr.instant("p", "t", "x", 0.0)
+    tr.counter("p", "t", "x", 0.0, {"v": 1})
+    with tr.timer("phase"):
+        pass
+    tr.crash_dump("nothing")
+    # NULL.metrics is a throwaway: writes vanish between reads
+    tr.metrics.counter("c").add(5)
+    assert tr.metrics.counter("c").value == 0.0
+
+
+def test_tracing_swaps_nests_and_restores():
+    a, b = OT.Tracer(name="a"), OT.Tracer(name="b")
+    assert OT.current() is OT.NULL
+    with OT.tracing(a) as got:
+        assert got is a and OT.current() is a
+        with OT.tracing(b):
+            assert OT.current() is b
+        assert OT.current() is a
+        with OT.tracing(None):  # pass-through, not a reset to NULL
+            assert OT.current() is a
+    assert OT.current() is OT.NULL
+
+
+# ---------------------------------------------------------------------------
+# measurement-only: traced results byte-identical to untraced
+# ---------------------------------------------------------------------------
+
+
+def test_traced_completion_time_identical_fluid():
+    sc = R.parse_scenario(RING_SC)
+    base = sc.completion_time()
+    traced = sc.completion_time(trace=OT.Tracer(name="t"))
+    assert traced == base  # exact — not approx
+
+
+def test_traced_completion_time_identical_packet():
+    sc = R.parse_scenario(PACKET_SC)
+    base = sc.completion_time()
+    traced = sc.completion_time(trace=OT.Tracer(name="t"))
+    assert traced == base
+
+
+def _summary_bytes(mod) -> bytes:
+    from benchmarks.run import run_suite
+    from benchmarks.scenarios import RunContext
+
+    _, rows = run_suite(mod, RunContext(quick=True), quiet=True)
+    summary = [r for r in rows if r.get("case") == "SUMMARY"]
+    assert summary, "suite produced no SUMMARY rows"
+    return json.dumps(summary, sort_keys=True).encode()
+
+
+@pytest.mark.timeout(120)
+def test_netsim_quick_summary_byte_identical():
+    from benchmarks import netsim_bench
+
+    off = _summary_bytes(netsim_bench)
+    with OT.tracing(OT.Tracer(name="netsim")):
+        on = _summary_bytes(netsim_bench)
+    assert on == off
+
+
+@pytest.mark.timeout(120)
+def test_multitenant_quick_summary_byte_identical():
+    from benchmarks import multitenant
+
+    off = _summary_bytes(multitenant)
+    with OT.tracing(OT.Tracer(name="multitenant")):
+        on = _summary_bytes(multitenant)
+    assert on == off
+
+
+# ---------------------------------------------------------------------------
+# trace-file schema round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_trace_export_roundtrip_validates(tmp_path):
+    tracer = OT.Tracer(name="roundtrip")
+    sc = R.parse_scenario(RING_SC)
+    sc.completion_time(trace=tracer)
+    assert tracer.events, "traced run emitted no events"
+    path = tracer.export(str(tmp_path / "roundtrip.trace.json"))
+    trace = json.load(open(path))
+    assert OT.validate_trace(trace, load_schema()) == []
+    other = trace["otherData"]
+    assert other["metrics"]["counters"]["netsim.waterfills"] >= 1
+    # per-link utilization series: the raw material for per-link
+    # rate-cap distillation (ROADMAP)
+    lu = other["metrics"]["link_utilization"]
+    assert lu["n_samples"] >= 1 and lu["n_links"] > 0
+
+
+def test_trace_memo_bypass_reemits():
+    """The registry memo must not swallow traces: a scenario already
+    memoized from an untraced run still emits events when traced."""
+    sc = R.parse_scenario(RING_SC)
+    sc.completion_time()  # populate the memo
+    t1 = OT.Tracer(name="first")
+    sc.completion_time(trace=t1)
+    t2 = OT.Tracer(name="second")
+    sc.completion_time(trace=t2)
+    assert t1.events and len(t2.events) == len(t1.events)
+
+
+def test_validate_trace_catches_violations():
+    schema = load_schema()
+    bad = {"traceEvents": [
+        {"name": "x", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0, "dur": -1.0},
+        {"name": "y", "ph": "q", "pid": 1, "tid": 1, "ts": 0.0},
+    ], "displayTimeUnit": "ms"}
+    errors = OT.validate_trace(bad, schema)
+    assert any("otherData" in e for e in errors)  # missing top-level key
+    assert any("dur" in e for e in errors)  # negative duration
+    assert any("unknown phase" in e for e in errors)
+    assert any("process_name" in e for e in errors)  # unnamed pid
+
+
+# ---------------------------------------------------------------------------
+# crash flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_flight_recorder_is_bounded():
+    fr = FlightRecorder(maxlen=8)
+    for i in range(20):
+        fr.push({"i": i})
+    assert len(fr) == 8
+    assert fr.n_seen == 20
+    assert [r["i"] for r in fr.snapshot()] == list(range(12, 20))
+
+
+def test_crash_dump_on_injected_failure(tmp_path):
+    tracer = OT.Tracer(name="boom", ring=4, out_dir=str(tmp_path))
+    with OT.tracing(tracer):
+        for i in range(10):
+            tracer.instant("eng", "events", f"ev{i}", float(i))
+        OT.dump_on_failure("injected: deadlock at t=9")
+    crash = tracer.last_crash
+    assert crash is not None
+    assert crash["reason"] == "injected: deadlock at t=9"
+    assert crash["n_dumped"] == 4 and crash["n_seen"] == 10
+    # the ring keeps the *last* records before the failure
+    assert [r["name"] for r in crash["traceEvents"]] == [
+        "ev6", "ev7", "ev8", "ev9"]
+    on_disk = json.load(open(tmp_path / "boom.crash.trace.json"))
+    assert on_disk["reason"] == crash["reason"]
+    assert len(on_disk["traceEvents"]) == 4
+
+
+def test_dump_on_failure_without_tracer_is_noop():
+    OT.dump_on_failure("nobody listening")  # must not raise
+
+
+# ---------------------------------------------------------------------------
+# metric determinism under PYTHONHASHSEED
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_bins_and_order_independence():
+    h = Histogram(edges=(0, 1, 2, 4))
+    h.observe_many([0.0, 0.5, 1.0, 3.0, 100.0, -2.0])
+    assert h.counts == [3, 1, 1, 1]  # below-range clamps into bin 0
+    assert h.n == 6 and h.max == 100.0
+    g = Histogram(edges=(0, 1, 2, 4))
+    g.observe_many([100.0, -2.0, 3.0, 1.0, 0.5, 0.0])  # reversed order
+    assert g.to_dict() == h.to_dict()
+
+
+_HASHSEED_PROBE = r"""
+import json, sys
+from repro.obs.metrics import MetricsRegistry
+
+reg = MetricsRegistry()
+# iteration order of a str-keyed dict varies with the hash seed; the
+# exported snapshot must not
+samples = {f"port{i}": float((i * 7) % 23) for i in range(40)}
+for name, v in samples.items():
+    reg.histogram("voq").observe(v)
+    reg.counter(f"cnt.{name}").add(v)
+reg.sample_links(0.0, [0.25, 0.5, 1.0])
+reg.sample_links(2.0, [0.75, 0.5, 0.0])
+json.dump(reg.to_dict(), sys.stdout, sort_keys=True)
+"""
+
+
+@pytest.mark.timeout(120)
+def test_metrics_snapshot_identical_across_hashseeds():
+    outputs = []
+    for seed in ("0", "1", "4242"):
+        env = dict(os.environ,
+                   PYTHONHASHSEED=seed,
+                   PYTHONPATH=str(REPO / "src"))
+        proc = subprocess.run(
+            [sys.executable, "-c", _HASHSEED_PROBE],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=60)
+        assert proc.returncode == 0, proc.stderr
+        outputs.append(proc.stdout)
+    assert outputs[0] == outputs[1] == outputs[2]
+
+
+# ---------------------------------------------------------------------------
+# engine coverage: the suites actually feed the registries
+# ---------------------------------------------------------------------------
+
+
+def test_packet_trace_collects_voq_histogram():
+    tracer = OT.Tracer(name="pkt")
+    sc = R.parse_scenario(PACKET_SC)
+    sc.completion_time(trace=tracer)
+    snap = tracer.metrics.to_dict()
+    voq = snap["histograms"].get("packetsim.voq_per_port")
+    assert voq is not None and voq["n"] > 0
+    assert snap["counters"]["packetsim.cycles"] > 0
+
+
+def test_cluster_trace_has_job_and_epoch_tracks():
+    from repro.cluster.simulator import ClusterSimulator, SimConfig
+    from repro.cluster.policies import POLICIES
+    from repro.cluster.traces import poisson_trace
+
+    tracer = OT.Tracer(name="cluster")
+    cfg = SimConfig(6, 6, seed=3)
+    with OT.tracing(tracer):
+        res = ClusterSimulator(cfg, POLICIES["greedy"]).run(
+            poisson_trace(20, 6, 6, seed=7))
+    assert res.records
+    spans = [e for e in tracer.events if e.get("ph") == "X"]
+    assert any(e["name"] in ("finished", "running", "evicted", "killed")
+               for e in spans), "no per-job lifetime spans"
+    names = {e.get("name") for e in tracer.events}
+    assert "arrival" in names and "finish" in names  # event-loop instants
+
+
+# ---------------------------------------------------------------------------
+# AuditEvent.seq threading (the PR's bugfix satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_audit_events_carry_event_seq():
+    from repro.cluster.simulator import ClusterSimulator, SimConfig
+    from repro.cluster.policies import POLICIES
+    from repro.cluster.traces import poisson_trace
+
+    def audits():
+        cfg = SimConfig(6, 6, seed=3)
+        sim = ClusterSimulator(cfg, POLICIES["greedy"])
+        sim.run(poisson_trace(20, 6, 6, seed=7))
+        return [(a.time, a.kind, a.jid, a.seq) for a in sim.audit]
+
+    first = audits()
+    assert first, "no audit events recorded"
+    assert all(isinstance(s, int) for *_x, s in first)
+    # audits appended from inside event handlers carry the dispatched
+    # event's queue seq, which is never negative
+    assert all(s >= 0 for *_x, s in first)
+    assert any(s > 0 for *_x, s in first)
+    # seq is part of replay identity: a fresh simulator reproduces it
+    assert audits() == first

@@ -45,7 +45,7 @@ def test_rule_inventory():
         "QUEUE-INTERNALS", "PAST-PUSH",
         "UNIT-MIX", "UNIT-ASSIGN", "UNIT-AMBIG",
         "UNIT-FLOW", "UNIT-RETURN", "FLOAT-ACCUM",
-        "SCENARIO-LIT",
+        "SCENARIO-LIT", "OBS-GUARD",
     }
     groups = {r.group for r in simlint.RULES.values()}
     assert groups == {"determinism", "events", "units", "scenario",
@@ -193,6 +193,92 @@ def test_wall_clock_allowlisted_in_launch():
         {"src/repro/launch/dryrun.py": WALL_BAD})
     reason = SLC.allowlisted("WALL-CLOCK", "src/repro/launch/dryrun.py")
     assert reason and "wall-clock" in reason
+
+
+def test_wall_clock_allowlisted_in_obs():
+    # the profiling pillar is the one simulation-adjacent module allowed
+    # to read the wall clock (readings are reported, never fed back)
+    assert "WALL-CLOCK" not in rules_fired(
+        {"src/repro/obs/profile.py": WALL_BAD})
+    assert SLC.allowlisted("WALL-CLOCK", "src/repro/obs/profile.py")
+
+
+# ---------------------------------------------------------------------------
+# determinism: OBS-GUARD
+# ---------------------------------------------------------------------------
+
+OBS_GUARD_BAD = """\
+def drain(tr, events):
+    for ev in events:
+        tr.instant("netsim", "events", ev.label, ev.when_s)
+"""
+
+OBS_GUARD_GUARDED = """\
+def drain(tr, events):
+    for ev in events:
+        if tr.enabled:
+            tr.instant("netsim", "events", ev.label, ev.when_s)
+"""
+
+OBS_GUARD_HOISTED = """\
+def drain(tr, events):
+    if tr.enabled:
+        for ev in events:
+            tr.instant("netsim", "events", ev.label, ev.when_s)
+"""
+
+OBS_GUARD_GENERIC_LOCAL = """\
+def collect(pairs):
+    tr = []
+    for p in pairs:
+        tr.append(p)
+    return tr
+"""
+
+OBS_GUARD_COLD_PATH = """\
+def finish(tr, report):
+    tr.complete("netsim", "run", report.label, 0.0, report.end_s)
+"""
+
+
+def test_obs_guard():
+    path = "src/repro/netsim/fake.py"
+    assert "OBS-GUARD" in rules_fired({path: OBS_GUARD_BAD})
+    assert "OBS-GUARD" not in rules_fired({path: OBS_GUARD_GUARDED})
+    # a guard outside the loop covers everything under it
+    assert "OBS-GUARD" not in rules_fired({path: OBS_GUARD_HOISTED})
+    # emission outside any loop is a cold path — no guard needed
+    assert "OBS-GUARD" not in rules_fired({path: OBS_GUARD_COLD_PATH})
+
+
+def test_obs_guard_ignores_generic_locals():
+    # a list that happens to be named ``tr`` is not a tracer: only the
+    # emission-API method names fire
+    assert "OBS-GUARD" not in rules_fired(
+        {"src/repro/netsim/fake.py": OBS_GUARD_GENERIC_LOCAL})
+
+
+def test_obs_guard_chained_and_attribute_tracers():
+    path = "src/repro/cluster/fake.py"
+    chained = (
+        "def sample(self, loads):\n"
+        "    for v in loads:\n"
+        "        self._tr.metrics.histogram(\"voq\").observe(v)\n"
+    )
+    assert "OBS-GUARD" in rules_fired({path: chained})
+    guarded = (
+        "def sample(self, loads):\n"
+        "    if self._tr.enabled:\n"
+        "        for v in loads:\n"
+        "            self._tr.metrics.histogram(\"voq\").observe(v)\n"
+    )
+    assert "OBS-GUARD" not in rules_fired({path: guarded})
+
+
+def test_obs_guard_out_of_scope_in_obs_layer():
+    # the obs layer's own internals run only when enabled — out of scope
+    assert "OBS-GUARD" not in rules_fired(
+        {"src/repro/obs/trace.py": OBS_GUARD_BAD})
 
 
 # ---------------------------------------------------------------------------
